@@ -1,0 +1,43 @@
+"""T2 — cloning / snapshotting (paper Fig. 3).
+
+clone() = deep copy (PetGraph/SNAP/cuGraph/our-DiGraph class);
+snapshot() = version handle (Aspen zero-cost / GraphBLAS lazy class).
+"""
+from __future__ import annotations
+
+from repro.core import REPRESENTATIONS
+
+from . import common
+
+
+def run():
+    rows = []
+    for gname in ("web_small", "road_small"):
+        c = common.make_graph(gname)
+        for rep_name, cls in REPRESENTATIONS.items():
+            g = cls.from_csr(c)
+
+            def do_clone():
+                g2 = g.clone()
+                g2.block_on()
+
+            def do_snap():
+                g2 = g.snapshot()
+                g2.block_on()
+
+            t_clone = common.timeit(do_clone)
+            t_snap = common.timeit(do_snap)
+            rows.append(
+                {
+                    "name": f"clone/{gname}/{rep_name}",
+                    "us_per_call": round(t_clone * 1e6, 1),
+                    "derived": f"snapshot_us={t_snap*1e6:.1f} "
+                    f"edges_per_s={c.m/t_clone/1e6:.1f}M "
+                    f"snap_speedup={t_clone/max(t_snap,1e-9):.0f}x",
+                }
+            )
+    return common.emit(rows, ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    run()

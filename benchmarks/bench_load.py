@@ -1,0 +1,66 @@
+"""T1 — graph loading (paper Fig. 2 / Table 1 t_load).
+
+Compares our Alg-3 vectorized MTX loader against a naive line-by-line
+parser (the PetGraph/SNAP-class ingestion loop).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import csr as csr_mod
+from repro.io import mtx
+
+from . import common
+
+
+def naive_load(path: str) -> csr_mod.CSR:
+    """Per-line python parse + per-edge append — the strawman loader."""
+    src, dst, wgt = [], [], []
+    n = 0
+    with open(path) as f:
+        header = f.readline()
+        line = f.readline()
+        while line.startswith("%"):
+            line = f.readline()
+        rows, cols, nnz = map(int, line.split()[:3])
+        n = max(rows, cols)
+        for line in f:
+            parts = line.split()
+            if len(parts) < 2:
+                continue
+            src.append(int(parts[0]) - 1)
+            dst.append(int(parts[1]) - 1)
+            wgt.append(float(parts[2]) if len(parts) > 2 else 1.0)
+    return csr_mod.from_coo(
+        np.array(src), np.array(dst), np.array(wgt), n=n, dedup=False
+    )
+
+
+def run():
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        for gname in common.GRAPHS:
+            c = common.make_graph(gname)
+            p = os.path.join(td, f"{gname}.mtx")
+            mtx.write_mtx(p, c)
+            t_ours = common.timeit(lambda: mtx.load_mtx(p), repeats=3)
+            t_naive = common.timeit(lambda: naive_load(p), warmup=0, repeats=1)
+            rows.append(
+                {
+                    "name": f"load/{gname}",
+                    "n": c.n,
+                    "m": c.m,
+                    "us_per_call": round(t_ours * 1e6, 1),
+                    "derived": f"ours={c.m/t_ours/1e6:.2f}Medges/s "
+                    f"naive={c.m/t_naive/1e6:.2f}Medges/s "
+                    f"speedup={t_naive/t_ours:.1f}x",
+                }
+            )
+    return common.emit(rows, ["name", "n", "m", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    run()

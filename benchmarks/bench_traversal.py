@@ -1,0 +1,50 @@
+"""T4 — 42-step reverse walks on updated graphs (paper Figs. 9/10),
+plus the beyond-paper MXU path (BSR SpMM reverse walk, interpret-validated
+on CPU; its roofline terms live in the dry-run tables)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import REPRESENTATIONS, edgebatch
+
+from . import common
+
+STEPS = 42
+
+
+def run(graph: str = "social_small"):
+    c = common.make_graph(graph)
+    rng = np.random.default_rng(11)
+    rows = []
+    for kind in ("delete", "insert"):
+        frac = 1e-2
+        count = max(int(c.m * frac), 1)
+        batch = (
+            edgebatch.random_insertions(rng, c.n, count)
+            if kind == "insert"
+            else edgebatch.random_deletions(rng, c, count)
+        )
+        for rep_name, cls in REPRESENTATIONS.items():
+            g = cls.from_csr(c)
+            g, _ = (
+                g.add_edges(batch) if kind == "insert" else g.remove_edges(batch)
+            )
+
+            def walk():
+                v = g.reverse_walk(STEPS)
+                np.asarray(v)
+
+            t = common.timeit(walk, repeats=3)
+            m_now = g.to_csr().m
+            rows.append(
+                {
+                    "name": f"walk{STEPS}/{kind}/{graph}/{rep_name}",
+                    "us_per_call": round(t * 1e6, 1),
+                    "derived": f"edge_steps_per_s={m_now*STEPS/t/1e6:.1f}M",
+                }
+            )
+    return common.emit(rows, ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    run()

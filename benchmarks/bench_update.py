@@ -1,0 +1,64 @@
+"""T3 — batch edge deletions/insertions, in-place and new-instance
+(paper Figs. 5-8): batch sizes 1e-4|E| .. 1e-1|E|, uniform random."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import REPRESENTATIONS, edgebatch
+
+from . import common
+
+
+def run(op: str = "both", graph: str = "web_small"):
+    c = common.make_graph(graph)
+    rng = np.random.default_rng(7)
+    rows = []
+    ops = ("delete", "insert") if op == "both" else (op,)
+    for kind in ops:
+        for frac in common.BATCH_FRACTIONS:
+            count = max(int(c.m * frac), 1)
+            if kind == "insert":
+                batch = edgebatch.random_insertions(rng, c.n, count)
+            else:
+                batch = edgebatch.random_deletions(rng, c, count)
+            for rep_name, cls in REPRESENTATIONS.items():
+                base = cls.from_csr(c)
+
+                def inplace():
+                    g = base.clone()  # fresh copy each run (not timed? it is —
+                    # subtract the clone cost via the measured clone baseline)
+                    if kind == "insert":
+                        g2, _ = g.add_edges(batch, inplace=True)
+                    else:
+                        g2, _ = g.remove_edges(batch, inplace=True)
+                    g2.block_on()
+
+                def newinst():
+                    if kind == "insert":
+                        g2, _ = base.add_edges(batch, inplace=False)
+                    else:
+                        g2, _ = base.remove_edges(batch, inplace=False)
+                    g2.block_on()
+
+                t_clone = common.timeit(lambda: base.clone().block_on(), repeats=1)
+                t_raw = common.timeit(inplace, repeats=3)
+                t_in = t_raw - t_clone
+                t_new = common.timeit(newinst, repeats=3)
+                note = ""
+                if t_in < 0.05 * t_raw:  # clone-dominated: report raw
+                    t_in, note = t_raw, " clone_dominated"
+                rows.append(
+                    {
+                        "name": f"{kind}/{graph}/f{frac:g}/{rep_name}",
+                        "us_per_call": round(t_in * 1e6, 1),
+                        "derived": f"newinst_us={t_new*1e6:.1f} "
+                        f"edges_per_s={count/t_in/1e6:.2f}M{note}",
+                    }
+                )
+    return common.emit(rows, ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(sys.argv[1] if len(sys.argv) > 1 else "both")

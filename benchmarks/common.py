@@ -1,0 +1,47 @@
+"""Benchmark harness utilities: timing, graph/table setup, CSV output.
+
+Absolute times on this 1-core container are not comparable to the paper's
+32-core server; the paper's CLAIMS are about *ratios between
+representations*, which are preserved (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import REPRESENTATIONS, from_coo
+from repro.io import synthetic
+
+#: container-scale stand-ins for the paper's Table 1 graph families
+GRAPHS = {
+    "web_small": dict(kind="web", scale=12, edge_factor=8),
+    "social_small": dict(kind="social", scale=12, edge_factor=12),
+    "road_small": dict(kind="road", scale=14),
+    "uniform_small": dict(kind="uniform", scale=12, edge_factor=8),
+}
+
+BATCH_FRACTIONS = (1e-4, 1e-3, 1e-2, 1e-1)
+
+
+def make_graph(name: str):
+    return synthetic.make_graph(seed=42, **GRAPHS[name])
+
+
+def timeit(fn, *, warmup: int = 1, repeats: int = 3) -> float:
+    """Median wall seconds; fn must block on its own result."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r[h]) for h in header))
+    return rows

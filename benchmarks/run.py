@@ -1,0 +1,36 @@
+"""Benchmark driver — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV per benchmark.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only load|clone|update|traversal|alloc]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    from . import bench_alloc, bench_clone, bench_load, bench_traversal, bench_update
+
+    suites = {
+        "load": bench_load.run,          # paper Fig. 2 / Table 1
+        "clone": bench_clone.run,        # paper Fig. 3
+        "update": bench_update.run,      # paper Figs. 5-8
+        "traversal": bench_traversal.run,  # paper Figs. 9-10
+        "alloc": bench_alloc.run,        # paper Fig. 11
+    }
+    t0 = time.time()
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        fn()
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

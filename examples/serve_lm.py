@@ -1,0 +1,52 @@
+"""Serve a small LM with batched requests: continuous batching over the
+decode step, sliding-window KV cache (h2o-danube style), per-request exit.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import config as tcfg, model as tmodel
+
+cfg = tcfg.TransformerConfig(
+    name="serve-demo", n_layers=4, d_model=128, n_heads=8, n_kv_heads=4,
+    d_head=16, d_ff=256, vocab=512, sliding_window=32, attn_impl="ref",
+    compute_dtype=jnp.float32,
+)
+BATCH, CACHE = 8, 64
+EOS = 7
+
+params = tmodel.init_params(jax.random.PRNGKey(0), cfg)
+cache = tmodel.init_cache(cfg, BATCH, CACHE)
+step = jax.jit(lambda p, c, t: tmodel.decode_step(p, c, t, cfg), donate_argnums=(1,))
+
+# batched request queue: slots are refilled as sequences hit EOS
+rng = np.random.default_rng(0)
+pending = list(rng.integers(1, cfg.vocab, (32,)))   # 32 queued prompts
+active = np.array(pending[:BATCH], np.int32)
+pending = pending[BATCH:]
+done, generated = 0, {i: [] for i in range(BATCH)}
+
+tok = jnp.asarray(active[:, None], jnp.int32)
+t0 = time.time()
+steps = 0
+while done < 24 and steps < 400:
+    logits, cache = step(params, cache, tok)
+    nxt = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1).copy()
+    for slot in range(BATCH):
+        generated[slot].append(int(nxt[slot]))
+        if int(nxt[slot]) == EOS or len(generated[slot]) >= 24:
+            done += 1
+            generated[slot] = []
+            if pending:
+                nxt[slot] = pending.pop()   # continuous batching refill
+    tok = jnp.asarray(nxt[:, None], jnp.int32)
+    steps += 1
+dt = time.time() - t0
+print(f"served {done} sequences in {steps} decode steps, "
+      f"{BATCH*steps/dt:.0f} tok/s, ring cache = {CACHE} slots "
+      f"(window {cfg.sliding_window})")
+print("OK")

@@ -1,0 +1,83 @@
+"""End-to-end driver (deliverable b): train a ~100M-param GraphCast-style
+mesh GNN for a few hundred steps on synthetic weather-like data, with
+checkpointing + simulated failure + restart mid-run.
+
+  PYTHONPATH=src python examples/train_gnn.py [--steps 300]
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.io import synthetic
+from repro.models.gnn import graphcast
+from repro.train import loop, optimizer as opt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-hidden", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    args = ap.parse_args()
+
+    # ~100M params: 8 layers × (edge MLP 3d·d+d·d + node MLP 2d·d+d·d) at d=256
+    cfg = graphcast.GraphCastConfig(
+        n_layers=args.layers, d_hidden=args.d_hidden, n_vars=64
+    )
+    key = jax.random.PRNGKey(0)
+    params = graphcast.init_params(key, cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params")
+
+    csr = synthetic.make_graph("road", scale=11, seed=3)
+    rng = np.random.default_rng(0)
+    rows = np.repeat(np.arange(csr.n), np.diff(np.asarray(csr.offsets)))
+    x0 = rng.standard_normal((csr.n, cfg.n_vars)).astype(np.float32)
+    g = {
+        "node_feat": jnp.asarray(x0),
+        "edge_src": jnp.asarray(rows, jnp.int32),
+        "edge_dst": jnp.asarray(np.asarray(csr.dst), jnp.int32),
+        "positions": jnp.asarray(rng.standard_normal((csr.n, 3)), jnp.float32),
+        # synthetic "next state": smoothed + drift (learnable signal)
+        "labels": jnp.asarray(x0 * 0.9 + 0.1, jnp.float32),
+    }
+
+    opt_cfg = opt.OptimizerConfig(lr=2e-4, warmup_steps=20, total_steps=args.steps)
+    state = loop.init_state(params, opt_cfg)
+    step = jax.jit(
+        loop.make_train_step(
+            lambda p, b: graphcast.loss_fn(p, b, cfg), opt_cfg
+        ),
+        donate_argnums=(0,),
+    )
+
+    ckdir = os.path.join(tempfile.gettempdir(), "repro_graphcast_ck")
+    losses = []
+    t0 = time.time()
+    i = 0
+    while i < args.steps:
+        state, metrics = step(state, g)
+        losses.append(float(metrics["loss"]))
+        if i % 25 == 0:
+            print(f"step {i:4d} loss {losses[-1]:.5f} "
+                  f"({(time.time()-t0)/(i+1)*1e3:.0f} ms/step)", flush=True)
+            ckpt.save(ckdir, i, state)
+        if i == args.steps // 2:
+            # simulate a failure: discard live state, restart from durable
+            print("!! simulated node failure — restoring from checkpoint")
+            state, at = ckpt.restore(ckdir, state)
+            print(f"   restored step {at}")
+        i += 1
+    print(f"done: loss {losses[0]:.5f} -> {losses[-1]:.5f} "
+          f"({'improved' if losses[-1] < losses[0] else 'NOT improved'})")
+    assert losses[-1] < losses[0], "training must reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Packed bitset for vertex-existence flags (paper Alg 1: ``exists``).
+
+The paper stores existence flags in 64-bit chunks (BOOL_BITS = 64); JAX's
+default int width is 32, so we pack into uint32 words.  All ops are
+vectorized and jit-safe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BITS = 32
+
+
+def make(capacity: int) -> jnp.ndarray:
+    """Zeroed bitset able to hold ``capacity`` flags."""
+    words = -(-int(capacity) // BITS)
+    return jnp.zeros((max(words, 1),), dtype=jnp.uint32)
+
+
+def capacity(bits: jnp.ndarray) -> int:
+    return bits.shape[0] * BITS
+
+
+def get(bits: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized getBit: True where the flag is set. OOB reads are False."""
+    idx = jnp.asarray(idx)
+    word = idx // BITS
+    off = (idx % BITS).astype(jnp.uint32)
+    in_range = (idx >= 0) & (word < bits.shape[0])
+    w = bits[jnp.clip(word, 0, bits.shape[0] - 1)]
+    return in_range & (((w >> off) & jnp.uint32(1)) != 0)
+
+
+def set_(bits: jnp.ndarray, idx: jnp.ndarray, value: bool = True) -> jnp.ndarray:
+    """Vectorized setBit/clearBit; returns the new word array."""
+    idx = jnp.asarray(idx).reshape(-1)
+    word = idx // BITS
+    off = (idx % BITS).astype(jnp.uint32)
+    mask = (jnp.uint32(1) << off).astype(jnp.uint32)
+    if value:
+        return bits.at[word].set(bits[word] | mask, mode="drop")
+    return bits.at[word].set(bits[word] & ~mask, mode="drop")
+
+
+def set_many(bits: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Set several (possibly duplicate) indices at once.
+
+    Scatter-OR is not a native XLA accumulator, so we sort indices by word
+    and OR within equal-word runs using an associative scan, then scatter
+    the per-run result once per word.
+    """
+    import jax
+
+    idx = jnp.asarray(idx).reshape(-1)
+    word = idx // BITS
+    off = (idx % BITS).astype(jnp.uint32)
+    mask = (jnp.uint32(1) << off).astype(jnp.uint32)
+    order = jnp.argsort(word, stable=True)
+    w_s, m_s = word[order], mask[order]
+    seg_start = jnp.concatenate([jnp.array([True]), w_s[1:] != w_s[:-1]])
+
+    def combine(a, b):
+        # carry OR across a run; reset at segment starts
+        (av, astart), (bv, bstart) = a, b
+        return jnp.where(bstart, bv, av | bv), astart | bstart
+
+    vals, _ = jax.lax.associative_scan(combine, (m_s, seg_start))
+    # last element of each run holds the full OR
+    run_end = jnp.concatenate([w_s[1:] != w_s[:-1], jnp.array([True])])
+    upd_words = jnp.where(run_end, w_s, bits.shape[0])
+    upd_vals = vals
+    return bits.at[upd_words].set(
+        bits[jnp.clip(upd_words, 0, bits.shape[0] - 1)] | upd_vals, mode="drop"
+    )
+
+
+def count(bits: jnp.ndarray) -> jnp.ndarray:
+    """Population count across the whole bitset."""
+    w = bits
+    w = w - ((w >> 1) & jnp.uint32(0x55555555))
+    w = (w & jnp.uint32(0x33333333)) + ((w >> 2) & jnp.uint32(0x33333333))
+    w = (w + (w >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return jnp.sum((w * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def grow(bits: jnp.ndarray, new_capacity: int) -> jnp.ndarray:
+    """Reallocate to a larger capacity, preserving flags (paper reallocate())."""
+    new = make(new_capacity)
+    return new.at[: bits.shape[0]].set(bits)

@@ -1,0 +1,369 @@
+"""ChunkedGraph — the Aspen-analogue representation (DESIGN.md §3).
+
+Aspen stores adjacency in purely-functional C-trees: elements chunked into
+arrays, updates copy only the path/chunks they touch, snapshots are a root
+pointer.  The TPU-native analogue: an **append-only page store**.
+
+  * pages_dst/pages_wgt: [P_CAP, PAGE] device arrays (the chunk pool),
+  * page_table:          host [CAP_V, ≤PPV] page-id lists per vertex,
+  * updates write merged rows to *fresh* pages (bump allocation) and swap
+    the affected page_table rows — old pages are never mutated, so any
+    previously-taken snapshot (= dataclass copy holding the old table)
+    stays valid: purely functional, O(touched-rows) update, O(1) snapshot.
+  * ``vacuum()`` is the garbage-collection analogue (Aspen's reference
+    counting): rewrites live pages compactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import alloc, csr as csr_mod, edgebatch, traversal, util
+
+SENTINEL = util.SENTINEL
+PAGE = 64  # edges per page (Aspen chunks are ~dozens of ints)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_merge_rows(k_old: int, k_batch: int, k_new: int):
+    """Merge gathered rows [A,k_old] with batch rows [A,k_batch] -> [A,k_new]."""
+
+    def fn(row_d, row_w, b_d, b_w):
+        # batch first: stable sort + dedup-keep-first = weight upsert
+        keys = jnp.concatenate([b_d, row_d], axis=1)
+        vals = jnp.concatenate([b_w, row_w], axis=1)
+        order = jnp.argsort(keys, axis=1, stable=True)
+        keys = jnp.take_along_axis(keys, order, axis=1)
+        vals = jnp.take_along_axis(vals, order, axis=1)
+        keys, vals, counts = util.dedup_sorted_rows(keys, vals)
+        return keys[:, :k_new], vals[:, :k_new], counts
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_delete_rows(k_old: int, k_batch: int):
+    def fn(row_d, row_w, b_d):
+        hit = util.row_contains(b_d, row_d)
+        keys = jnp.where(hit, SENTINEL, row_d)
+        order = jnp.argsort(keys, axis=1, stable=True)
+        keys = jnp.take_along_axis(keys, order, axis=1)
+        vals = jnp.take_along_axis(row_w, order, axis=1)
+        counts = jnp.sum(keys != SENTINEL, axis=1).astype(jnp.int32)
+        return keys, vals, counts
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_gather_pages(npages: int):
+    def fn(pages_d, pages_w, page_ids):
+        ok = page_ids >= 0
+        safe = jnp.clip(page_ids, 0, pages_d.shape[0] - 1)
+        d = jnp.where(ok[:, :, None], pages_d[safe], SENTINEL)
+        w = jnp.where(ok[:, :, None], pages_w[safe], 0.0)
+        a = page_ids.shape[0]
+        return d.reshape(a, npages * PAGE), w.reshape(a, npages * PAGE)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_write_pages(npages: int, donate: bool = False):
+    def fn(pages_d, pages_w, owners, page_ids, rows_d, rows_w, row_ids):
+        a = page_ids.shape[0]
+        d = rows_d.reshape(a, npages, PAGE)
+        w = rows_w.reshape(a, npages, PAGE)
+        ok = page_ids >= 0
+        tgt = jnp.where(ok, page_ids, pages_d.shape[0]).reshape(-1)
+        pages_d = pages_d.at[tgt].set(d.reshape(-1, PAGE), mode="drop")
+        pages_w = pages_w.at[tgt].set(w.reshape(-1, PAGE), mode="drop")
+        own = jnp.broadcast_to(row_ids[:, None], page_ids.shape).reshape(-1)
+        owners = owners.at[tgt].set(own, mode="drop")
+        return pages_d, pages_w, owners
+
+    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
+
+
+def _pad2(a: np.ndarray, rows: int, fill) -> np.ndarray:
+    out = np.full((rows,) + a.shape[1:], fill, a.dtype)
+    out[: a.shape[0]] = a
+    return out
+
+
+@dataclasses.dataclass
+class ChunkedGraph:
+    pages_dst: jnp.ndarray       # [P_CAP, PAGE]
+    pages_wgt: jnp.ndarray       # [P_CAP, PAGE]
+    page_owner: jnp.ndarray      # [P_CAP] vertex id (CAP_V = dead)
+    page_table: list[np.ndarray]  # per-vertex page-id arrays (host)
+    degrees: np.ndarray
+    n: int
+    m: int
+    next_page: int
+    # seal-on-snapshot: True while any snapshot shares the device payload.
+    # The next mutation detaches (one functional copy = coarse-grained COW),
+    # after which updates donate buffers again (in-place into fresh pages).
+    sealed: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def cap_v(self) -> int:
+        return self.degrees.shape[0]
+
+    @property
+    def p_cap(self) -> int:
+        return int(self.pages_dst.shape[0])
+
+    def block_on(self) -> None:
+        self.pages_dst.block_until_ready()
+
+    @classmethod
+    def from_csr(cls, c: csr_mod.CSR) -> "ChunkedGraph":
+        degrees = np.asarray(c.degrees, np.int64)
+        npages = -(-degrees // PAGE)
+        total_pages = int(npages.sum())
+        p_cap = alloc.next_pow2(max(total_pages, 2))
+        pages_d = np.full((p_cap, PAGE), SENTINEL, np.int32)
+        pages_w = np.zeros((p_cap, PAGE), np.float32)
+        owner = np.full(p_cap, c.n, np.int32)
+        table: list[np.ndarray] = []
+        o = np.asarray(c.offsets)
+        dd = np.asarray(c.dst)
+        ww = np.asarray(c.wgt) if c.wgt is not None else np.ones(c.m, np.float32)
+        cur = 0
+        for u in range(c.n):
+            k = int(npages[u])
+            ids = np.arange(cur, cur + k, dtype=np.int64)
+            table.append(ids)
+            row = dd[o[u] : o[u + 1]]
+            roww = ww[o[u] : o[u + 1]]
+            flat_d = np.full(k * PAGE, SENTINEL, np.int32)
+            flat_w = np.zeros(k * PAGE, np.float32)
+            flat_d[: row.shape[0]] = row
+            flat_w[: row.shape[0]] = roww
+            pages_d[cur : cur + k] = flat_d.reshape(k, PAGE)
+            pages_w[cur : cur + k] = flat_w.reshape(k, PAGE)
+            owner[cur : cur + k] = u
+            cur += k
+        return cls(
+            pages_dst=jnp.asarray(pages_d),
+            pages_wgt=jnp.asarray(pages_w),
+            page_owner=jnp.asarray(owner),
+            page_table=table,
+            degrees=degrees.copy(),
+            n=int(c.n),
+            m=int(c.m),
+            next_page=cur,
+        )
+
+    # ------------------------------------------------------------------
+    def _reserve_vertices(self, n_needed: int) -> None:
+        if n_needed <= len(self.page_table):
+            return
+        for _ in range(n_needed - len(self.page_table)):
+            self.page_table.append(np.empty(0, np.int64))
+        deg = np.zeros(n_needed, np.int64)
+        deg[: self.degrees.shape[0]] = self.degrees
+        self.degrees = deg
+        self.n = max(self.n, n_needed)
+
+    def _alloc_pages(self, count: int) -> np.ndarray:
+        if self.next_page + count > self.p_cap:
+            new_cap = alloc.next_pow2(self.next_page + count)
+            padp = new_cap - self.p_cap
+            self.pages_dst = jnp.concatenate(
+                [self.pages_dst, jnp.full((padp, PAGE), SENTINEL, jnp.int32)]
+            )
+            self.pages_wgt = jnp.concatenate(
+                [self.pages_wgt, jnp.zeros((padp, PAGE), jnp.float32)]
+            )
+            self.page_owner = jnp.concatenate(
+                [self.page_owner, jnp.full((padp,), self.cap_v, jnp.int32)]
+            )
+        ids = np.arange(self.next_page, self.next_page + count, dtype=np.int64)
+        self.next_page += count
+        return ids
+
+    # ------------------------------------------------------------------
+    def _detach(self) -> None:
+        """Coarse-grained COW: pay one copy so outstanding snapshots stay valid."""
+        if not self.sealed:
+            return
+        self.pages_dst = jnp.array(self.pages_dst, copy=True)
+        self.pages_wgt = jnp.array(self.pages_wgt, copy=True)
+        self.page_owner = jnp.array(self.page_owner, copy=True)
+        self.sealed = False
+
+    def _update(self, batch: edgebatch.EdgeBatch, op: str) -> int:
+        if batch.n == 0:
+            return 0
+        self._detach()
+        s, d, w = batch.to_numpy()
+        if op == "add":
+            self._reserve_vertices(int(max(s.max(), d.max())) + 1)
+        rows, first_idx, counts = np.unique(s, return_index=True, return_counts=True)
+        if op == "del":
+            keep = rows < len(self.page_table)
+            rows, first_idx, counts = rows[keep], first_idx[keep], counts[keep]
+            if rows.shape[0] == 0:
+                return 0
+        deg_old = self.degrees[rows]
+        kb_all = int(counts.max())
+        total_dm = 0
+        # bucket rows by pow-2 page count of the merged row
+        if op == "add":
+            pages_new = -(-(deg_old + counts) // PAGE)
+        else:
+            pages_new = np.maximum(-(-deg_old // PAGE), 1)
+        pclass = np.maximum(
+            np.vectorize(alloc.next_pow2)(np.maximum(pages_new, 1)), 1
+        )
+        for pc in np.unique(pclass):
+            sel = pclass == pc
+            r = rows[sel]
+            a_pad = alloc.next_pow2(max(r.shape[0], 1))
+            # gather current rows
+            tbl = np.full((a_pad, int(pc)), -1, np.int64)
+            for i, u in enumerate(r):
+                ids = self.page_table[u]
+                tbl[i, : ids.shape[0]] = ids[: int(pc)]
+            row_d, row_w = _jit_gather_pages(int(pc))(
+                self.pages_dst, self.pages_wgt, jnp.asarray(tbl)
+            )
+            # batch rows
+            kb = alloc.next_pow2(max(int(counts[sel].max()), 1))
+            b_d = np.full((a_pad, kb), SENTINEL, np.int32)
+            b_w = np.zeros((a_pad, kb), np.float32)
+            for i, (fi, ct) in enumerate(zip(first_idx[sel], counts[sel])):
+                b_d[i, :ct] = d[fi : fi + ct]
+                b_w[i, :ct] = w[fi : fi + ct]
+            if op == "add":
+                new_d, new_w, cnts = _jit_merge_rows(int(pc) * PAGE, kb, int(pc) * PAGE)(
+                    row_d, row_w, jnp.asarray(b_d), jnp.asarray(b_w)
+                )
+            else:
+                new_d, new_w, cnts = _jit_delete_rows(int(pc) * PAGE, kb)(
+                    row_d, row_w, jnp.asarray(b_d)
+                )
+            cnts = np.asarray(cnts, np.int64)[: r.shape[0]]
+            # functional write: fresh pages for every touched row
+            need_pages = np.maximum(-(-cnts // PAGE), 1)
+            new_tbl = np.full((a_pad, int(pc)), -1, np.int64)
+            for i, u in enumerate(r):
+                ids = self._alloc_pages(int(need_pages[i]))
+                self.page_table[u] = ids
+                new_tbl[i, : ids.shape[0]] = ids
+            rr = _pad2(r.astype(np.int32), a_pad, self.cap_v)
+            self.pages_dst, self.pages_wgt, self.page_owner = _jit_write_pages(
+                int(pc), True
+            )(
+                self.pages_dst,
+                self.pages_wgt,
+                self.page_owner,
+                jnp.asarray(new_tbl),
+                new_d,
+                new_w,
+                jnp.asarray(rr),
+            )
+            dm = int((cnts - self.degrees[r]).sum())
+            self.degrees[r] = cnts
+            total_dm += dm
+        self.m += total_dm
+        return total_dm
+
+    def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
+        g = self if inplace else self.snapshot()
+        dm = g._update(batch, "add")
+        return g, dm
+
+    def remove_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
+        g = self if inplace else self.snapshot()
+        dm = -g._update(batch, "del")
+        return g, dm
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> "ChunkedGraph":
+        """Aspen acquire_version(): O(#vertices) host metadata, zero device.
+
+        Seals the shared payload; the next mutation on either handle pays a
+        single detach copy (coarse-grained copy-on-write).
+        """
+        self.sealed = True
+        return dataclasses.replace(
+            self,
+            page_table=[ids for ids in self.page_table],
+            degrees=self.degrees.copy(),
+            sealed=True,
+        )
+
+    def clone(self) -> "ChunkedGraph":
+        return dataclasses.replace(
+            self,
+            pages_dst=jnp.array(self.pages_dst, copy=True),
+            pages_wgt=jnp.array(self.pages_wgt, copy=True),
+            page_owner=jnp.array(self.page_owner, copy=True),
+            page_table=[ids.copy() for ids in self.page_table],
+            degrees=self.degrees.copy(),
+        )
+
+    def vacuum(self) -> None:
+        """GC: rebuild the page store with only live pages (Aspen refcount GC)."""
+        c = self.to_csr()
+        fresh = ChunkedGraph.from_csr(c)
+        self.__dict__.update(fresh.__dict__)
+
+    def to_csr(self) -> csr_mod.CSR:
+        srcs, dsts, wgts = [], [], []
+        pd = np.asarray(self.pages_dst)
+        pw = np.asarray(self.pages_wgt)
+        for u, ids in enumerate(self.page_table[: self.n]):
+            if ids.shape[0] == 0:
+                continue
+            deg = int(self.degrees[u])
+            flat_d = pd[ids].reshape(-1)[:deg]
+            flat_w = pw[ids].reshape(-1)[:deg]
+            srcs.append(np.full(deg, u, np.int64))
+            dsts.append(flat_d)
+            wgts.append(flat_w)
+        if not srcs:
+            return csr_mod.from_coo(
+                np.empty(0, np.int64), np.empty(0, np.int64), None, n=self.n
+            )
+        return csr_mod.from_coo(
+            np.concatenate(srcs),
+            np.concatenate(dsts),
+            np.concatenate(wgts),
+            n=self.n,
+            dedup=False,
+        )
+
+    def reverse_walk(self, steps: int) -> jnp.ndarray:
+        # liveness is version-local (superseded pages stay in the pool for
+        # older snapshots), so the walk view gathers THIS version's pages.
+        lens = np.array([ids.shape[0] for ids in self.page_table[: self.n]])
+        if lens.sum() == 0:
+            return jnp.zeros((self.n,), jnp.float32)
+        live = np.concatenate(
+            [ids for ids in self.page_table[: self.n] if ids.shape[0]]
+        )
+        owners = np.repeat(
+            np.arange(self.n, dtype=np.int32), lens
+        )
+        cap = alloc.next_pow2(live.shape[0])
+        live_p = np.full(cap, -1, np.int64)
+        live_p[: live.shape[0]] = live
+        own_p = np.full(cap, self.cap_v, np.int32)
+        own_p[: owners.shape[0]] = owners
+        pages = self.pages_dst[jnp.clip(jnp.asarray(live_p), 0, self.p_cap - 1)]
+        pages = jnp.where(jnp.asarray(live_p)[:, None] >= 0, pages, SENTINEL)
+        flat_d = pages.reshape(-1)
+        rows = jnp.repeat(jnp.asarray(own_p), PAGE)
+        return traversal.reverse_walk_flat(flat_d, rows, steps, self.n)
+
+    def to_edge_sets(self) -> list[set[int]]:
+        return self.to_csr().to_edge_sets()

@@ -1,0 +1,140 @@
+"""SortedCOO — the cuGraph-analogue representation (DESIGN.md §3).
+
+cuGraph applies batch updates by sort-merging the batch with the existing
+edge list and rebuilding the graph.  Here: a (src,dst)-lexsorted COO with
+SENTINEL padding to a pow-2 capacity; *every update builds a new instance*
+(there is no in-place path — exactly cuGraph's behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import alloc, csr as csr_mod, edgebatch, traversal, util
+
+SENTINEL = util.SENTINEL
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_merge(out_cap: int):
+    def fn(gs, gd, gw, bs, bd, bw):
+        # batch first: stable sort keeps batch entries ahead of equal keys,
+        # so dedup-keep-first implements weight upsert.
+        s = jnp.concatenate([bs, gs])
+        d = jnp.concatenate([bd, gd])
+        w = jnp.concatenate([bw, gw])
+        order = util.lexsort2(s, d)
+        s, d, w = s[order], d[order], w[order]
+        dup = jnp.concatenate(
+            [jnp.array([False]), (s[1:] == s[:-1]) & (d[1:] == d[:-1])]
+        )
+        s = jnp.where(dup, SENTINEL, s)
+        d = jnp.where(dup, SENTINEL, d)
+        order = util.lexsort2(s, d)
+        s, d, w = s[order], d[order], w[order]
+        m = jnp.sum(s != SENTINEL).astype(jnp.int32)
+        pad = out_cap - s.shape[0]
+        if pad > 0:
+            s = jnp.concatenate([s, jnp.full((pad,), SENTINEL, s.dtype)])
+            d = jnp.concatenate([d, jnp.full((pad,), SENTINEL, d.dtype)])
+            w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+        else:
+            s, d, w = s[:out_cap], d[:out_cap], w[:out_cap]
+        return s, d, w, m
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_filter():
+    def fn(gs, gd, gw, bs, bd):
+        pos, found = util.searchsorted_2d(bs, bd, gs, gd)
+        keep_s = jnp.where(found, SENTINEL, gs)
+        keep_d = jnp.where(found, SENTINEL, gd)
+        order = util.lexsort2(keep_s, keep_d)
+        s, d, w = keep_s[order], keep_d[order], gw[order]
+        m = jnp.sum(s != SENTINEL).astype(jnp.int32)
+        return s, d, w, m
+
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass
+class SortedCOO:
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    wgt: jnp.ndarray
+    n: int
+    m: int
+
+    @property
+    def capacity(self) -> int:
+        return int(self.src.shape[0])
+
+    @classmethod
+    def from_csr(cls, c: csr_mod.CSR) -> "SortedCOO":
+        cap = alloc.next_pow2(max(c.m, 2))
+        rows = util.expand_rows(c.offsets, c.m)
+        pad = cap - c.m
+        src = jnp.concatenate([rows, jnp.full((pad,), SENTINEL, jnp.int32)])
+        dst = jnp.concatenate([c.dst, jnp.full((pad,), SENTINEL, jnp.int32)])
+        w = c.wgt if c.wgt is not None else jnp.ones((c.m,), jnp.float32)
+        wgt = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
+        return cls(src, dst, wgt, int(c.n), int(c.m))
+
+    def block_on(self) -> None:
+        self.src.block_until_ready()
+
+    # -- updates (always a new instance, cuGraph semantics) --------------
+    def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = False):
+        del inplace  # rebuild-only representation
+        if batch.n == 0:
+            return self, 0
+        n = max(self.n, batch.max_vertex() + 1)
+        out_cap = alloc.next_pow2(max(self.m + batch.n, 2))
+        s, d, w, m = _jit_merge(out_cap)(
+            self.src, self.dst, self.wgt, batch.src, batch.dst, batch.wgt
+        )
+        m = int(m)
+        new = SortedCOO(s, d, w, n, m)
+        return new, m - self.m
+
+    def remove_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = False):
+        del inplace
+        if batch.n == 0:
+            return self, 0
+        s, d, w, m = _jit_filter()(
+            self.src, self.dst, self.wgt, batch.src, batch.dst
+        )
+        m = int(m)
+        new = SortedCOO(s, d, w, self.n, m)
+        return new, self.m - m
+
+    # -- export / queries -------------------------------------------------
+    def clone(self) -> "SortedCOO":
+        return SortedCOO(
+            jnp.array(self.src, copy=True),
+            jnp.array(self.dst, copy=True),
+            jnp.array(self.wgt, copy=True),
+            self.n,
+            self.m,
+        )
+
+    def snapshot(self) -> "SortedCOO":
+        return dataclasses.replace(self)
+
+    def to_csr(self) -> csr_mod.CSR:
+        s = np.asarray(self.src)[: self.m]
+        d = np.asarray(self.dst)[: self.m]
+        w = np.asarray(self.wgt)[: self.m]
+        return csr_mod.from_coo(s, d, w, n=self.n, dedup=False)
+
+    def reverse_walk(self, steps: int) -> jnp.ndarray:
+        return traversal.reverse_walk_coo(self.src, self.dst, steps, self.n)
+
+    def to_edge_sets(self) -> list[set[int]]:
+        return self.to_csr().to_edge_sets()

@@ -1,0 +1,579 @@
+"""DiGraph — the paper's representation (Alg 1/2) adapted to TPU/XLA.
+
+Layout (SoA, DESIGN.md §2):
+  host metadata : degrees / capacities / block starts / exists  (numpy)
+  device payload: dst[CAP_E] int32, wgt[CAP_E] f32, slot_rows[CAP_E] int32
+
+Each vertex owns a contiguous *block* of edge slots whose size is a CP2AA
+power-of-2 class (``alloc.edge_capacity``).  Blocks are handed out by the
+host-side ``ArenaLayout`` (free lists + bump pointer) over one flat device
+buffer.  Rows are ascending with SENTINEL padding, so:
+
+  * membership/insert position = windowed binary search (device),
+  * batch insert  = scatter into slack + per-class row sort   (paper setUnion,
+    O(d_u + Δd_u) per touched row),
+  * batch delete  = scatter SENTINEL + per-class row sort      (setDifference),
+  * growth        = block move to a bigger class (CP2AA realloc path),
+  * "in-place"    = buffer donation (XLA reuses the allocation).
+
+Capacity classes double as jit-cache buckets: every compiled shape is a
+power of two, so steady-state updates never recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import alloc, arena, csr as csr_mod, edgebatch, util
+
+SENTINEL = util.SENTINEL
+
+
+# ---------------------------------------------------------------------------
+# jitted device helpers (module level, cached per static shape)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _jit_move_blocks(w_old: int, w_new: int, donate: bool):
+    def fn(dst, wgt, slot_rows, old_starts, new_starts, rows, deg, old_caps):
+        # gather old rows (width w_old), write into new blocks (width w_new)
+        a = old_starts.shape[0]
+        lane_o = jnp.arange(w_old, dtype=jnp.int32)[None, :]
+        lane_n = jnp.arange(w_new, dtype=jnp.int32)[None, :]
+        valid = old_starts[:, None] >= 0
+        src_idx = jnp.clip(old_starts[:, None] + lane_o, 0, dst.shape[0] - 1)
+        row_d = jnp.where(
+            valid & (lane_o < deg[:, None]), dst[src_idx], SENTINEL
+        )
+        row_w = jnp.where(valid & (lane_o < deg[:, None]), wgt[src_idx], 0.0)
+        # sentinel-fill the old region first (freed block must read empty);
+        # each row fills only its OWN old capacity — w_old is the group max.
+        old_flat = jnp.where(
+            valid & (lane_o < old_caps[:, None]),
+            old_starts[:, None] + lane_o,
+            dst.shape[0],
+        ).reshape(-1)
+        dst = dst.at[old_flat].set(SENTINEL, mode="drop")
+        # scatter into the new region
+        ok = new_starts[:, None] >= 0
+        new_flat = jnp.where(ok, new_starts[:, None] + lane_n, dst.shape[0]).reshape(-1)
+        pad_d = jnp.full((a, w_new), SENTINEL, jnp.int32).at[:, :w_old].set(row_d)
+        pad_w = jnp.zeros((a, w_new), jnp.float32).at[:, :w_old].set(row_w)
+        dst = dst.at[new_flat].set(pad_d.reshape(-1), mode="drop")
+        wgt = wgt.at[new_flat].set(pad_w.reshape(-1), mode="drop")
+        slot_rows = slot_rows.at[new_flat].set(
+            jnp.broadcast_to(rows[:, None], (a, w_new)).reshape(-1), mode="drop"
+        )
+        return dst, wgt, slot_rows
+
+    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_lookup():
+    def fn(dst, lo, hi, qd):
+        return util.binsearch_window(dst, lo, hi, qd)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_apply_insert(donate: bool):
+    def fn(dst, wgt, pos, found, qd, qw, ins_pos):
+        oob = dst.shape[0]
+        upd_pos = jnp.where(found, pos, oob)          # weight upsert
+        wgt = wgt.at[upd_pos].set(qw, mode="drop")
+        new_pos = jnp.where(found | (qd == SENTINEL), oob, ins_pos)
+        dst = dst.at[new_pos].set(qd, mode="drop")
+        wgt = wgt.at[new_pos].set(qw, mode="drop")
+        return dst, wgt
+
+    return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_apply_delete(donate: bool):
+    def fn(dst, pos, found):
+        oob = dst.shape[0]
+        del_pos = jnp.where(found, pos, oob)
+        return dst.at[del_pos].set(SENTINEL, mode="drop")
+
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_sort_rows(width: int, donate: bool):
+    def fn(dst, wgt, starts):
+        lane = jnp.arange(width, dtype=jnp.int32)[None, :]
+        valid = starts[:, None] >= 0
+        idx = jnp.where(valid, starts[:, None] + lane, dst.shape[0])
+        safe = jnp.clip(idx, 0, dst.shape[0] - 1)
+        keys = jnp.where(valid, dst[safe], SENTINEL)
+        vals = wgt[safe]
+        order = jnp.argsort(keys, axis=1, stable=True)
+        keys = jnp.take_along_axis(keys, order, axis=1)
+        vals = jnp.take_along_axis(vals, order, axis=1)
+        flat = idx.reshape(-1)
+        dst = dst.at[flat].set(keys.reshape(-1), mode="drop")
+        wgt = wgt.at[flat].set(vals.reshape(-1), mode="drop")
+        return dst, wgt
+
+    return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_insert_ranks():
+    def fn(found, row_first):
+        nf = (~found).astype(jnp.int32)
+        c = jnp.cumsum(nf)
+        excl = c - nf  # exclusive cumsum
+        base = excl[row_first]  # first batch index of this edge's row
+        return excl - base
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_grow_buffer(new_cap: int, cap_v: int):
+    def fn(dst, wgt, slot_rows):
+        nd = jnp.full((new_cap,), SENTINEL, jnp.int32).at[: dst.shape[0]].set(dst)
+        nw = jnp.zeros((new_cap,), jnp.float32).at[: wgt.shape[0]].set(wgt)
+        nr = (
+            jnp.full((new_cap,), cap_v, jnp.int32)
+            .at[: slot_rows.shape[0]]
+            .set(slot_rows)
+        )
+        return nd, nw, nr
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_segment_counts():
+    def fn(found, row_ids, num: int):
+        return (
+            jax.ops.segment_sum(found.astype(jnp.int32), row_ids, num_segments=num),
+            jax.ops.segment_sum(
+                (~found).astype(jnp.int32), row_ids, num_segments=num
+            ),
+        )
+
+    return jax.jit(fn, static_argnums=(2,))
+
+
+def _pad_pow2(a: np.ndarray, fill) -> np.ndarray:
+    cap = alloc.next_pow2(max(a.shape[0], 1))
+    if cap == a.shape[0]:
+        return a
+    return np.concatenate([a, np.full(cap - a.shape[0], fill, a.dtype)])
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DiGraph:
+    """Mutable host handle around immutable device payloads."""
+
+    # host metadata
+    degrees: np.ndarray        # int64 [CAP_V]
+    capacities: np.ndarray     # int64 [CAP_V]  (0 = no block)
+    starts: np.ndarray         # int64 [CAP_V]  (-1 = no block)
+    exists: np.ndarray         # bool  [CAP_V]
+    layout: arena.ArenaLayout
+    n: int
+    m: int
+    # device payload
+    dst: jnp.ndarray
+    wgt: jnp.ndarray
+    slot_rows: jnp.ndarray
+    stats: alloc.AllocStats = dataclasses.field(default_factory=alloc.AllocStats)
+    # seal-on-snapshot: while True, a snapshot shares the device payload and
+    # the next in-place mutation pays one detach copy before donating again.
+    sealed: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def cap_v(self) -> int:
+        return self.degrees.shape[0]
+
+    @property
+    def cap_e(self) -> int:
+        return int(self.dst.shape[0])
+
+    def has_vertex(self, u: int) -> bool:
+        return 0 <= u < self.cap_v and bool(self.exists[u])
+
+    def degree(self, u: int) -> int:
+        return int(self.degrees[u]) if u < self.cap_v else 0
+
+    def edges_of(self, u: int) -> np.ndarray:
+        if u >= self.cap_v or self.starts[u] < 0:
+            return np.empty((0,), np.int32)
+        s, d = int(self.starts[u]), int(self.degrees[u])
+        return np.asarray(self.dst[s : s + d])
+
+    def block_on(self) -> None:
+        self.dst.block_until_ready()
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_csr(cls, c: csr_mod.CSR) -> "DiGraph":
+        degrees = np.asarray(c.degrees, dtype=np.int64)
+        n_cap = alloc.reserve_size(c.n)
+        deg = np.zeros(n_cap, np.int64)
+        deg[: c.n] = degrees
+        caps = np.zeros(n_cap, np.int64)
+        caps[: c.n] = np.where(degrees > 0, alloc.edge_capacities(degrees), 0)
+        starts = np.full(n_cap, -1, np.int64)
+        csum = np.zeros(c.n, np.int64)
+        np.cumsum(caps[: c.n], out=csum)
+        starts[: c.n] = np.where(caps[: c.n] > 0, csum - caps[: c.n], -1)
+        total = int(csum[-1]) if c.n else 0
+        cap_e = alloc.next_pow2(max(total, 2))
+        lay = arena.ArenaLayout(capacity=cap_e, bump=total)
+
+        # device fill
+        gidx = np.repeat(starts[: c.n].clip(0), degrees) + (
+            np.arange(c.m) - np.repeat(np.asarray(c.offsets)[:-1], degrees)
+        )
+        dst = np.full(cap_e, SENTINEL, np.int32)
+        dst[gidx] = np.asarray(c.dst)
+        wgt = np.zeros(cap_e, np.float32)
+        wgt[gidx] = (
+            np.asarray(c.wgt) if c.wgt is not None else np.ones(c.m, np.float32)
+        )
+        slot_rows = np.full(cap_e, n_cap, np.int32)
+        row_of_block = np.repeat(
+            np.arange(c.n, dtype=np.int32), caps[: c.n].astype(np.int64)
+        )
+        slot_rows[:total] = row_of_block
+        exists = np.zeros(n_cap, bool)
+        exists[: c.n] = True
+        return cls(
+            degrees=deg,
+            capacities=caps,
+            starts=starts,
+            exists=exists,
+            layout=lay,
+            n=int(c.n),
+            m=int(c.m),
+            dst=jnp.asarray(dst),
+            wgt=jnp.asarray(wgt),
+            slot_rows=jnp.asarray(slot_rows),
+        )
+
+    @classmethod
+    def empty(cls, n_vertices: int = 0) -> "DiGraph":
+        n_cap = alloc.reserve_size(max(n_vertices, 1))
+        cap_e = 2
+        exists = np.zeros(n_cap, bool)
+        exists[:n_vertices] = True
+        return cls(
+            degrees=np.zeros(n_cap, np.int64),
+            capacities=np.zeros(n_cap, np.int64),
+            starts=np.full(n_cap, -1, np.int64),
+            exists=exists,
+            layout=arena.ArenaLayout(capacity=cap_e),
+            n=n_vertices,
+            m=0,
+            dst=jnp.full((cap_e,), SENTINEL, jnp.int32),
+            wgt=jnp.zeros((cap_e,), jnp.float32),
+            slot_rows=jnp.full((cap_e,), n_cap, jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    # vertex ops (paper reserve()/addVertex())
+    # ------------------------------------------------------------------
+    def _reserve(self, n_needed: int) -> None:
+        if n_needed <= self.cap_v:
+            return
+        new_cap = alloc.reserve_size(n_needed)
+
+        def grow(a, fill):
+            out = np.full(new_cap, fill, a.dtype)
+            out[: a.shape[0]] = a
+            return out
+
+        self.degrees = grow(self.degrees, 0)
+        self.capacities = grow(self.capacities, 0)
+        self.starts = grow(self.starts, -1)
+        self.exists = grow(self.exists, False)
+        self.stats.record_relayout()
+
+    def add_vertices(self, ids: np.ndarray) -> int:
+        ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+        if ids.size == 0:
+            return 0
+        self._reserve(int(ids.max()) + 1)
+        newly = ~self.exists[ids]
+        self.exists[ids] = True
+        added = int(np.unique(ids[newly]).shape[0])
+        self.n += added
+        return added
+
+    # ------------------------------------------------------------------
+    # the paper's core ops
+    # ------------------------------------------------------------------
+    def _detach(self) -> None:
+        if not self.sealed:
+            return
+        self.dst = jnp.array(self.dst, copy=True)
+        self.wgt = jnp.array(self.wgt, copy=True)
+        self.slot_rows = jnp.array(self.slot_rows, copy=True)
+        self.sealed = False
+
+    def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
+        """Graph union G ∪ ΔG (paper Alg 8).  Returns (graph, ΔM)."""
+        g = self if inplace else self.clone()
+        g._detach()
+        dm = g._add_edges_impl(batch, donate=True)
+        return g, dm
+
+    def remove_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
+        """Graph subtraction G \\ ΔG (paper Alg 7).  Returns (graph, ΔM)."""
+        g = self if inplace else self.clone()
+        g._detach()
+        dm = g._remove_edges_impl(batch, donate=True)
+        return g, dm
+
+    # -- insertion ------------------------------------------------------
+    def _add_edges_impl(self, batch: edgebatch.EdgeBatch, donate: bool) -> int:
+        if batch.n == 0:
+            return 0
+        s, d, w = batch.to_numpy()
+        self.add_vertices(np.concatenate([s, d]))
+
+        rows, first_idx, counts = np.unique(s, return_index=True, return_counts=True)
+        rows64 = rows.astype(np.int64)
+        deg_old = self.degrees[rows64]
+        ub = deg_old + counts
+        need = alloc.edge_capacities(ub)
+        grow_mask = need > self.capacities[rows64]
+
+        if grow_mask.any():
+            self._grow_blocks(rows64[grow_mask], need[grow_mask], donate)
+        else:
+            self.stats.record_inplace()
+
+        # membership search + scatter insert (device)
+        lo = self.starts[s.astype(np.int64)]
+        lo = np.where(lo < 0, 0, lo)
+        hi = lo + self.degrees[s.astype(np.int64)]
+        row_first = np.repeat(first_idx, counts).astype(np.int32)
+
+        qd = jnp.asarray(d)
+        pos, found = _jit_lookup()(
+            self.dst, jnp.asarray(lo.astype(np.int32)), jnp.asarray(hi.astype(np.int32)), qd
+        )
+        ranks = _jit_insert_ranks()(found, jnp.asarray(row_first))
+        ins_pos = jnp.asarray((lo + self.degrees[s.astype(np.int64)]).astype(np.int32)) + ranks
+        self.dst, self.wgt = _jit_apply_insert(donate)(
+            self.dst, self.wgt, pos, found, qd, jnp.asarray(w), ins_pos
+        )
+
+        # per-row new-edge counts -> host metadata
+        row_ids = np.repeat(np.arange(rows.shape[0], dtype=np.int32), counts)
+        _, nf_counts = _jit_segment_counts()(
+            found, jnp.asarray(row_ids), int(rows.shape[0])
+        )
+        nf_counts = np.asarray(nf_counts, dtype=np.int64)
+        self.degrees[rows64] += nf_counts
+        dm = int(nf_counts.sum())
+        self.m += dm
+
+        # restore sorted rows per capacity class
+        self._sort_dirty_rows(rows64[nf_counts > 0], donate)
+        return dm
+
+    # -- deletion ---------------------------------------------------------
+    def _remove_edges_impl(self, batch: edgebatch.EdgeBatch, donate: bool) -> int:
+        if batch.n == 0:
+            return 0
+        s, d, _ = batch.to_numpy()
+        in_range = s < self.cap_v
+        s, d = s[in_range], d[in_range]
+        if s.shape[0] == 0:
+            return 0
+        rows, first_idx, counts = np.unique(s, return_index=True, return_counts=True)
+        rows64 = rows.astype(np.int64)
+
+        lo = self.starts[s.astype(np.int64)]
+        lo = np.where(lo < 0, 0, lo)
+        hi = np.where(
+            self.starts[s.astype(np.int64)] < 0,
+            0,
+            lo + self.degrees[s.astype(np.int64)],
+        )
+        pos, found = _jit_lookup()(
+            self.dst,
+            jnp.asarray(lo.astype(np.int32)),
+            jnp.asarray(hi.astype(np.int32)),
+            jnp.asarray(d),
+        )
+        self.dst = _jit_apply_delete(donate)(self.dst, pos, found)
+
+        row_ids = np.repeat(np.arange(rows.shape[0], dtype=np.int32), counts)
+        del_counts, _ = _jit_segment_counts()(
+            found, jnp.asarray(row_ids), int(rows.shape[0])
+        )
+        del_counts = np.asarray(del_counts, dtype=np.int64)
+        self.degrees[rows64] -= del_counts
+        dm = int(del_counts.sum())
+        self.m -= dm
+        self._sort_dirty_rows(rows64[del_counts > 0], donate)
+        self.stats.record_inplace()
+        return dm
+
+    # -- block growth (CP2AA realloc path) -------------------------------
+    def _grow_blocks(self, rows: np.ndarray, new_caps: np.ndarray, donate: bool) -> None:
+        # ensure pool space, regrow device buffer if the arena is exhausted
+        demand = int(new_caps.sum())
+        new_starts = np.empty(rows.shape[0], np.int64)
+        pending: list[int] = []
+        for i, (r, c) in enumerate(zip(rows, new_caps)):
+            got = self.layout.try_alloc(int(c))
+            if got is None:
+                pending.append(i)
+                new_starts[i] = -1
+            else:
+                new_starts[i] = got
+        if pending:
+            target = self.layout.grow_target(demand)
+            self.dst, self.wgt, self.slot_rows = _jit_grow_buffer(
+                target, self.cap_v
+            )(self.dst, self.wgt, self.slot_rows)
+            self.layout.capacity = target
+            self.stats.record_relayout()
+            for i in pending:
+                got = self.layout.try_alloc(int(new_caps[i]))
+                assert got is not None
+                new_starts[i] = got
+
+        # group moves by (old-class, new-class) so jit shapes stay pow-2
+        old_caps = self.capacities[rows]
+        for w_new in np.unique(new_caps):
+            sel = new_caps == w_new
+            r_sel = rows[sel]
+            w_old = int(old_caps[sel].max()) if sel.any() else 0
+            w_old = int(min(max(w_old, 0), w_new))
+            a_pad = alloc.next_pow2(max(r_sel.shape[0], 1))
+            os_ = _pad_pow2(self.starts[r_sel].astype(np.int32), -1)[:a_pad]
+            ns_ = _pad_pow2(new_starts[sel].astype(np.int32), -1)[:a_pad]
+            rr = _pad_pow2(r_sel.astype(np.int32), self.cap_v)[:a_pad]
+            dg = _pad_pow2(self.degrees[r_sel].astype(np.int32), 0)[:a_pad]
+            oc_ = _pad_pow2(old_caps[sel].astype(np.int32), 0)[:a_pad]
+            self.dst, self.wgt, self.slot_rows = _jit_move_blocks(
+                max(w_old, 1) if w_old else 1, int(w_new), donate
+            )(
+                self.dst,
+                self.wgt,
+                self.slot_rows,
+                jnp.asarray(os_),
+                jnp.asarray(ns_),
+                jnp.asarray(rr),
+                jnp.asarray(dg),
+                jnp.asarray(oc_),
+            )
+
+        # free old blocks, install new ones
+        for r, ns, nc in zip(rows, new_starts, new_caps):
+            oc, ost = int(self.capacities[r]), int(self.starts[r])
+            if oc > 0 and ost >= 0:
+                self.layout.free(ost, oc)
+            self.starts[r] = ns
+            self.capacities[r] = nc
+        self.stats.record_relayout()
+
+    # -- row re-sort ------------------------------------------------------
+    def _sort_dirty_rows(self, rows: np.ndarray, donate: bool) -> None:
+        if rows.shape[0] == 0:
+            return
+        caps = self.capacities[rows]
+        for c in np.unique(caps):
+            sel = caps == c
+            r_sel = rows[sel]
+            a_pad = alloc.next_pow2(max(r_sel.shape[0], 1))
+            st = _pad_pow2(self.starts[r_sel].astype(np.int32), -1)[:a_pad]
+            self.dst, self.wgt = _jit_sort_rows(int(c), donate)(
+                self.dst, self.wgt, jnp.asarray(st)
+            )
+
+    # ------------------------------------------------------------------
+    # cloning / snapshots / export (paper Alg 6)
+    # ------------------------------------------------------------------
+    def clone(self) -> "DiGraph":
+        """Deep copy — device buffers copied, layout preserved."""
+        return DiGraph(
+            degrees=self.degrees.copy(),
+            capacities=self.capacities.copy(),
+            starts=self.starts.copy(),
+            exists=self.exists.copy(),
+            layout=self.layout.clone(),
+            n=self.n,
+            m=self.m,
+            dst=jnp.array(self.dst, copy=True),
+            wgt=jnp.array(self.wgt, copy=True),
+            slot_rows=jnp.array(self.slot_rows, copy=True),
+        )
+
+    def snapshot(self) -> "DiGraph":
+        """O(1) device-cost snapshot: shares payload, seals both handles.
+
+        The next in-place update on either handle pays one detach copy —
+        JAX immutability gives Aspen-style snapshots for free as long as
+        donation is suspended (DESIGN.md §2).
+        """
+        self.sealed = True
+        return dataclasses.replace(
+            self,
+            degrees=self.degrees.copy(),
+            capacities=self.capacities.copy(),
+            starts=self.starts.copy(),
+            exists=self.exists.copy(),
+            layout=self.layout.clone(),
+            sealed=True,
+        )
+
+    def to_csr(self) -> csr_mod.CSR:
+        nv = self.n_max_vertex() + 1
+        deg = self.degrees[:nv]
+        total = int(deg.sum())
+        offsets = np.zeros(nv + 1, np.int64)
+        np.cumsum(deg, out=offsets[1:])
+        if total:
+            gidx = np.repeat(self.starts[:nv].clip(0), deg) + (
+                np.arange(total) - np.repeat(offsets[:-1], deg)
+            )
+            dsel = jnp.asarray(self.dst)[jnp.asarray(gidx)]
+            wsel = jnp.asarray(self.wgt)[jnp.asarray(gidx)]
+        else:
+            dsel = jnp.zeros((0,), jnp.int32)
+            wsel = jnp.zeros((0,), jnp.float32)
+        return csr_mod.CSR(
+            offsets=jnp.asarray(offsets, jnp.int32),
+            dst=dsel,
+            wgt=wsel,
+            n=nv,
+            m=total,
+        )
+
+    def reverse_walk(self, steps: int) -> jnp.ndarray:
+        """Paper Alg 13 on the slotted buffer (contiguous SoA, no compaction)."""
+        from . import traversal
+
+        return traversal.reverse_walk_flat(
+            self.dst, self.slot_rows, steps, self.n_max_vertex() + 1
+        )
+
+    def n_max_vertex(self) -> int:
+        nz = np.nonzero(self.exists)[0]
+        return int(nz[-1]) if nz.size else -1
+
+    def to_edge_sets(self) -> list[set[int]]:
+        c = self.to_csr()
+        return c.to_edge_sets()

@@ -1,0 +1,260 @@
+"""Distributed dynamic graph: the paper's per-partition CSR (Alg 5) as the
+shard layout of a multi-pod mesh (DESIGN.md §5).
+
+Vertices are block-partitioned over the mesh's data axes (each shard owns a
+contiguous vertex range — the analogue of the paper's per-thread partition);
+edges live with their source vertex.  Three distributed operations:
+
+  * ``reverse_walk`` — per-step: all-gather the frontier (visits vector),
+    local gather + segment-sum.  This is the halo exchange of a 1-D vertex
+    partitioning; the collective term is |V|·4 bytes per step per shard.
+  * ``route_updates`` — bucket a batch by owning shard (host), pad buckets
+    to a shared pow-2 width (CP2AA bucketing keeps the all-to-all shape
+    stable across steps), exchange, apply locally.
+  * ``apply_updates`` — per-shard sort-merge into the local padded CSR
+    (functional; local slack follows the same pow-2 class policy).
+
+Implementation notes: everything here is mesh-generic ``shard_map`` code.
+Tests run it on a small forced-host-device mesh; the dry-run lowers it on
+the production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import alloc, csr as csr_mod, util
+
+SENTINEL = util.SENTINEL
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedGraph:
+    """Equal-size per-shard slotted rows: [S, rows_per_shard * slots]."""
+
+    src_local: jnp.ndarray   # [S, E_loc] local row id (or SENTINEL)
+    dst: jnp.ndarray         # [S, E_loc] global dst   (or SENTINEL)
+    wgt: jnp.ndarray         # [S, E_loc]
+    n: int                   # global vertex count
+    rows_per_shard: int
+    n_shards: int
+
+    @property
+    def e_loc(self) -> int:
+        return int(self.dst.shape[1])
+
+
+def shard_csr(c: csr_mod.CSR, n_shards: int) -> ShardedGraph:
+    """Partition a CSR into equal vertex blocks with pow-2 local capacity."""
+    rows_per = -(-c.n // n_shards)
+    o = np.asarray(c.offsets)
+    d = np.asarray(c.dst)
+    w = np.asarray(c.wgt) if c.wgt is not None else np.ones(c.m, np.float32)
+    counts = [
+        int(o[min((s + 1) * rows_per, c.n)] - o[min(s * rows_per, c.n)])
+        for s in range(n_shards)
+    ]
+    e_loc = alloc.next_pow2(max(max(counts), 1))
+    src_l = np.full((n_shards, e_loc), SENTINEL, np.int32)
+    dst_l = np.full((n_shards, e_loc), SENTINEL, np.int32)
+    wgt_l = np.zeros((n_shards, e_loc), np.float32)
+    rows_global = np.repeat(np.arange(c.n), np.diff(o))
+    for s in range(n_shards):
+        lo, hi = o[min(s * rows_per, c.n)], o[min((s + 1) * rows_per, c.n)]
+        k = hi - lo
+        src_l[s, :k] = rows_global[lo:hi] - s * rows_per
+        dst_l[s, :k] = d[lo:hi]
+        wgt_l[s, :k] = w[lo:hi]
+    return ShardedGraph(
+        src_local=jnp.asarray(src_l),
+        dst=jnp.asarray(dst_l),
+        wgt=jnp.asarray(wgt_l),
+        n=int(c.n),
+        rows_per_shard=rows_per,
+        n_shards=n_shards,
+    )
+
+
+def _walk_step(src_local, dst, visits_local, rows_per_shard, axis):
+    """One reverse-walk step inside shard_map: all-gather frontier, local
+    gather + segment-sum.  visits_local: [rows_per_shard]."""
+    frontier = jax.lax.all_gather(visits_local, axis, tiled=True)  # [n_global_pad]
+    valid = dst != SENTINEL
+    vals = jnp.where(valid, frontier[jnp.clip(dst, 0, frontier.shape[0] - 1)], 0.0)
+    seg = jnp.where(valid, src_local, rows_per_shard).astype(jnp.int32)
+    out = jax.ops.segment_sum(vals, seg, num_segments=rows_per_shard + 1)
+    return out[:rows_per_shard]
+
+
+def make_reverse_walk(
+    mesh: Mesh, steps: int, rows_per_shard: int, axis=("data",)
+):
+    """Build a jitted sharded reverse walk over the mesh axes ``axis``."""
+    axis_names = axis if isinstance(axis, tuple) else (axis,)
+    spec = P(axis_names)
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=(),
+    )
+    def walk(src_local, dst, visits0):
+        def shard_fn(src_l, d, v):
+            # shard_map gives [1, ...] blocks on the sharded leading dim
+            src_l, d, v = src_l[0], d[0], v[0]
+
+            def body(vis, _):
+                return _walk_step(src_l, d, vis, rows_per_shard, axis_names), None
+
+            v, _ = jax.lax.scan(body, v, None, length=steps)
+            return v[None]
+
+        return jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=spec,
+            check_vma=False,
+        )(src_local, dst, visits0)
+
+    return walk
+
+
+def reverse_walk(g: ShardedGraph, steps: int, mesh: Mesh, axis=("data",)):
+    """Run the sharded reverse walk; returns visits [n] (host-trimmed)."""
+    axis_names = axis if isinstance(axis, tuple) else (axis,)
+    visits0 = jnp.ones((g.n_shards, g.rows_per_shard), jnp.float32)
+    spec = NamedSharding(mesh, P(axis_names))
+    src_local = jax.device_put(g.src_local, spec)
+    dst = jax.device_put(g.dst, spec)
+    visits0 = jax.device_put(visits0, spec)
+    walk = make_reverse_walk(mesh, steps, g.rows_per_shard, axis_names)
+    out = walk(src_local, dst, visits0)
+    return out.reshape(-1)[: g.n]
+
+
+# ---------------------------------------------------------------------------
+# distributed batch updates
+# ---------------------------------------------------------------------------
+def route_updates(
+    batch_src: np.ndarray,
+    batch_dst: np.ndarray,
+    batch_wgt: Optional[np.ndarray],
+    g: ShardedGraph,
+):
+    """Bucket a COO batch by owning shard, pad to pow-2 width [S, K].
+
+    On real hardware each host buckets its local slice and the exchange is
+    an all-to-all; in this single-controller build the bucketing is global
+    host work with the same pow-2-padded layout.
+    """
+    owner = batch_src // g.rows_per_shard
+    # per-shard slices must stay (src, dst)-lexsorted for binary search
+    order = np.lexsort((batch_dst, batch_src, owner))
+    owner_s = owner[order]
+    counts = np.bincount(owner_s, minlength=g.n_shards)
+    k = alloc.next_pow2(max(int(counts.max()), 1))
+    s_out = np.full((g.n_shards, k), SENTINEL, np.int32)
+    d_out = np.full((g.n_shards, k), SENTINEL, np.int32)
+    w_out = np.zeros((g.n_shards, k), np.float32)
+    w = batch_wgt if batch_wgt is not None else np.ones_like(batch_src, np.float32)
+    srt_s, srt_d, srt_w = batch_src[order], batch_dst[order], w[order]
+    pos = 0
+    for s in range(g.n_shards):
+        c = int(counts[s])
+        s_out[s, :c] = srt_s[pos : pos + c] - s * g.rows_per_shard
+        d_out[s, :c] = srt_d[pos : pos + c]
+        w_out[s, :c] = srt_w[pos : pos + c]
+        pos += c
+    return jnp.asarray(s_out), jnp.asarray(d_out), jnp.asarray(w_out)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_shard_update(out_cap: int, op: str, mesh_axes, rows_per_shard: int):
+    """Per-shard sort-merge update (insert='union', delete='difference')."""
+
+    def local(src_l, dst_l, wgt_l, bs, bd, bw):
+        src_l, dst_l, wgt_l = src_l[0], dst_l[0], wgt_l[0]
+        bs, bd, bw = bs[0], bd[0], bw[0]
+        if op == "insert":
+            s = jnp.concatenate([bs, src_l])
+            d = jnp.concatenate([bd, dst_l])
+            w = jnp.concatenate([bw, wgt_l])
+            order = util.lexsort2(s, d)
+            s, d, w = s[order], d[order], w[order]
+            dup = jnp.concatenate(
+                [jnp.array([False]), (s[1:] == s[:-1]) & (d[1:] == d[:-1])]
+            )
+            s = jnp.where(dup, SENTINEL, s)
+            d = jnp.where(dup, SENTINEL, d)
+            order = util.lexsort2(s, d)
+            s, d, w = s[order][:out_cap], d[order][:out_cap], w[order][:out_cap]
+        else:
+            _, found = util.searchsorted_2d(bs, bd, src_l, dst_l)
+            s = jnp.where(found, SENTINEL, src_l)
+            d = jnp.where(found, SENTINEL, dst_l)
+            order = util.lexsort2(s, d)
+            s, d, w = s[order][:out_cap], d[order][:out_cap], wgt_l[order][:out_cap]
+        m_loc = jnp.sum(s != SENTINEL, dtype=jnp.int32)
+        return s[None], d[None], w[None], m_loc[None]
+
+    def fn(mesh, src_l, dst_l, wgt_l, bs, bd, bw):
+        spec = P(mesh_axes)
+        return jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(spec,) * 6,
+            out_specs=(spec, spec, spec, P(mesh_axes)),
+            check_vma=False,
+        )(src_l, dst_l, wgt_l, bs, bd, bw)
+
+    return fn
+
+
+def apply_updates(
+    g: ShardedGraph,
+    batch_src: np.ndarray,
+    batch_dst: np.ndarray,
+    batch_wgt: Optional[np.ndarray],
+    mesh: Mesh,
+    *,
+    op: str = "insert",
+    axis=("data",),
+) -> ShardedGraph:
+    axis_names = axis if isinstance(axis, tuple) else (axis,)
+    bs, bd, bw = route_updates(batch_src, batch_dst, batch_wgt, g)
+    if op == "insert":
+        out_cap = alloc.next_pow2(g.e_loc + int(bs.shape[1]))
+    else:
+        out_cap = g.e_loc
+    fn = _jit_shard_update(out_cap, op, axis_names, g.rows_per_shard)
+    spec = NamedSharding(mesh, P(axis_names))
+    args = [jax.device_put(x, spec) for x in (g.src_local, g.dst, g.wgt, bs, bd, bw)]
+    s, d, w, m_loc = jax.jit(
+        functools.partial(fn, mesh)
+    )(*args)
+    return dataclasses.replace(
+        g, src_local=s, dst=d, wgt=w
+    ), int(jnp.sum(m_loc))
+
+
+def gather_csr(g: ShardedGraph) -> csr_mod.CSR:
+    """Collect the sharded graph back into a host CSR (tests)."""
+    s = np.asarray(g.src_local)
+    d = np.asarray(g.dst)
+    w = np.asarray(g.wgt)
+    srcs, dsts, wgts = [], [], []
+    for sh in range(g.n_shards):
+        mask = s[sh] != SENTINEL
+        srcs.append(s[sh][mask].astype(np.int64) + sh * g.rows_per_shard)
+        dsts.append(d[sh][mask])
+        wgts.append(w[sh][mask])
+    return csr_mod.from_coo(
+        np.concatenate(srcs), np.concatenate(dsts), np.concatenate(wgts), n=g.n,
+        dedup=False,
+    )

@@ -1,0 +1,111 @@
+"""EdgeBatch — a batch of edge updates ΔG (paper: "a batch of edges is
+represented using DiGraph"; here a sorted, deduped, pow-2-padded COO).
+
+The batch is the unit of the paper's union / subtraction operations.  Its
+capacity is pow-2 bucketed (alloc.py) so repeated batches of similar sizes
+hit the same compiled programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import alloc, util
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EdgeBatch:
+    """src/dst/wgt sorted by (src, dst), deduped; slots >= n are SENTINEL."""
+
+    src: jnp.ndarray  # int32 [CAP]
+    dst: jnp.ndarray  # int32 [CAP]
+    wgt: jnp.ndarray  # float32 [CAP]
+    n: int            # live edges
+
+    def tree_flatten(self):
+        return (self.src, self.dst, self.wgt), (self.n,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0])
+
+    @property
+    def capacity(self) -> int:
+        return self.src.shape[0]
+
+    def to_numpy(self):
+        s = np.asarray(self.src)[: self.n]
+        d = np.asarray(self.dst)[: self.n]
+        w = np.asarray(self.wgt)[: self.n]
+        return s, d, w
+
+    def to_sets(self) -> set[tuple[int, int]]:
+        s, d, _ = self.to_numpy()
+        return set(zip(s.tolist(), d.tolist()))
+
+    def max_vertex(self) -> int:
+        s, d, _ = self.to_numpy()
+        if s.shape[0] == 0:
+            return -1
+        return int(max(s.max(), d.max()))
+
+    def row_counts(self, n_vertices: int) -> np.ndarray:
+        s, _, _ = self.to_numpy()
+        return np.bincount(s, minlength=n_vertices)
+
+
+def from_arrays(
+    src,
+    dst,
+    wgt=None,
+    *,
+    dedup: bool = True,
+    symmetric: bool = False,
+) -> EdgeBatch:
+    """Host-side constructor: sort by (src,dst), dedup, pad to pow-2."""
+    src = np.asarray(src, dtype=np.int32).reshape(-1)
+    dst = np.asarray(dst, dtype=np.int32).reshape(-1)
+    if wgt is None:
+        wgt = np.ones_like(src, dtype=np.float32)
+    wgt = np.asarray(wgt, dtype=np.float32).reshape(-1)
+    if symmetric:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        wgt = np.concatenate([wgt, wgt])
+    order = np.lexsort((dst, src))
+    src, dst, wgt = src[order], dst[order], wgt[order]
+    if dedup and src.shape[0]:
+        keep = np.concatenate([[True], (src[1:] != src[:-1]) | (dst[1:] != dst[:-1])])
+        src, dst, wgt = src[keep], dst[keep], wgt[keep]
+    n = int(src.shape[0])
+    cap = alloc.next_pow2(max(n, 1))
+    pad = cap - n
+    src = np.concatenate([src, np.full(pad, util.SENTINEL, np.int32)])
+    dst = np.concatenate([dst, np.full(pad, util.SENTINEL, np.int32)])
+    wgt = np.concatenate([wgt, np.zeros(pad, np.float32)])
+    return EdgeBatch(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(wgt), n)
+
+
+def random_insertions(
+    rng: np.random.Generator, n_vertices: int, count: int, *, weighted_range=(1.0, 1.0)
+) -> EdgeBatch:
+    """Paper §4.2.4: uniformly random vertex pairs."""
+    src = rng.integers(0, n_vertices, size=count, dtype=np.int64)
+    dst = rng.integers(0, n_vertices, size=count, dtype=np.int64)
+    lo, hi = weighted_range
+    wgt = rng.uniform(lo, hi, size=count).astype(np.float32)
+    return from_arrays(src, dst, wgt)
+
+
+def random_deletions(rng: np.random.Generator, csr, count: int) -> EdgeBatch:
+    """Paper §4.2.3: uniformly sampled existing edges."""
+    m = int(csr.m)
+    count = min(count, m)
+    pick = rng.choice(m, size=count, replace=False)
+    rows = np.asarray(csr.row_ids())[pick]
+    dsts = np.asarray(csr.dst)[pick]
+    return from_arrays(rows, dsts)

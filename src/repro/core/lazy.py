@@ -1,0 +1,274 @@
+"""LazyCSR — the SuiteSparse:GraphBLAS-analogue representation.
+
+GraphBLAS handles dynamic updates with *zombies* (deleted entries marked in
+place) and *pending tuples* (insertions buffered unsorted), consolidating
+lazily when an operation needs the assembled matrix.  Here:
+
+  * base CSR (offsets/dst/wgt) + ``dead`` mask  — zombies,
+  * pow-2 ring of pending COO tuples           — pending insertions,
+  * ``assemble()``                              — the consolidation phase
+    (sort-merge of live base + deduped pending), triggered by traversal.
+
+Updates are therefore O(batch) ; the first traversal after updates pays the
+consolidation — exactly the trade the paper measures for GraphBLAS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import alloc, csr as csr_mod, edgebatch, traversal, util
+
+SENTINEL = util.SENTINEL
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_append(donate: bool):
+    def fn(ps, pd, pw, bs, bd, bw, at):
+        ps = jax.lax.dynamic_update_slice(ps, bs, (at,))
+        pd = jax.lax.dynamic_update_slice(pd, bd, (at,))
+        pw = jax.lax.dynamic_update_slice(pw, bw, (at,))
+        return ps, pd, pw
+
+    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_mark_base(donate: bool):
+    def fn(dead, base_dst, lo, hi, qd):
+        pos, found = util.binsearch_window(base_dst, lo, hi, qd)
+        # a zombie slot must not match again: dead mask checked separately —
+        # re-deleting a dead edge is a no-op for the count
+        already = dead[jnp.clip(pos, 0, dead.shape[0] - 1)]
+        newly = found & ~already
+        dead = dead.at[jnp.where(newly, pos, dead.shape[0])].set(True, mode="drop")
+        return dead, newly
+
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_mark_pending(donate: bool):
+    def fn(pdead, ps, pd, bs, bd):
+        # flip the search: every pending tuple (incl. duplicates) checks its
+        # own membership in the (sorted) deletion batch.
+        _, found = util.searchsorted_2d(bs, bd, ps, pd)
+        return pdead | (found & (ps != SENTINEL)), found
+
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_assemble(out_cap: int):
+    def fn(base_rows, base_dst, base_wgt, dead, ps, pd, pw, pdead, p_n):
+        lane = jnp.arange(ps.shape[0])
+        p_live = (lane < p_n) & ~pdead & (ps != SENTINEL)
+        # reverse pending so the *latest* duplicate wins dedup-keep-first
+        ps_r, pd_r, pw_r, pl_r = ps[::-1], pd[::-1], pw[::-1], p_live[::-1]
+        s = jnp.concatenate([jnp.where(pl_r, ps_r, SENTINEL), jnp.where(dead, SENTINEL, base_rows)])
+        d = jnp.concatenate([jnp.where(pl_r, pd_r, SENTINEL), jnp.where(dead, SENTINEL, base_dst)])
+        w = jnp.concatenate([pw_r, base_wgt])
+        order = util.lexsort2(s, d)
+        s, d, w = s[order], d[order], w[order]
+        dup = jnp.concatenate(
+            [jnp.array([False]), (s[1:] == s[:-1]) & (d[1:] == d[:-1])]
+        )
+        s = jnp.where(dup, SENTINEL, s)
+        d2 = jnp.where(dup, SENTINEL, d)
+        order = util.lexsort2(s, d2)
+        s, d2, w = s[order], d2[order], w[order]
+        m = jnp.sum(s != SENTINEL).astype(jnp.int32)
+        s, d2, w = s[:out_cap], d2[:out_cap], w[:out_cap]
+        return s, d2, w, m
+
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass
+class LazyCSR:
+    # assembled base (flat COO-with-row-ids view of a CSR; rows sorted)
+    base_rows: jnp.ndarray
+    base_dst: jnp.ndarray
+    base_wgt: jnp.ndarray
+    offsets: np.ndarray          # host offsets into base (valid when clean)
+    dead: jnp.ndarray            # bool, zombie mask over base slots
+    # pending ring
+    p_src: jnp.ndarray
+    p_dst: jnp.ndarray
+    p_wgt: jnp.ndarray
+    p_dead: jnp.ndarray
+    p_n: int
+    n: int
+    m: int                       # live-edge count (exact when clean)
+    n_zombies: int
+    dirty: bool
+    sealed: bool = False         # seal-on-snapshot (see DiGraph)
+
+    @classmethod
+    def from_csr(cls, c: csr_mod.CSR) -> "LazyCSR":
+        cap = alloc.next_pow2(max(c.m, 2))
+        rows = util.expand_rows(c.offsets, c.m)
+        pad = cap - c.m
+        base_rows = jnp.concatenate([rows, jnp.full((pad,), SENTINEL, jnp.int32)])
+        base_dst = jnp.concatenate([c.dst, jnp.full((pad,), SENTINEL, jnp.int32)])
+        w = c.wgt if c.wgt is not None else jnp.ones((c.m,), jnp.float32)
+        base_wgt = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
+        pcap = 16
+        return cls(
+            base_rows=base_rows,
+            base_dst=base_dst,
+            base_wgt=base_wgt,
+            offsets=np.asarray(c.offsets, np.int64),
+            dead=jnp.zeros((cap,), bool),
+            p_src=jnp.full((pcap,), SENTINEL, jnp.int32),
+            p_dst=jnp.full((pcap,), SENTINEL, jnp.int32),
+            p_wgt=jnp.zeros((pcap,), jnp.float32),
+            p_dead=jnp.zeros((pcap,), bool),
+            p_n=0,
+            n=int(c.n),
+            m=int(c.m),
+            n_zombies=0,
+            dirty=False,
+        )
+
+    def block_on(self) -> None:
+        self.base_dst.block_until_ready()
+
+    def _detach(self) -> None:
+        if not self.sealed:
+            return
+        self.base_rows = jnp.array(self.base_rows, copy=True)
+        self.base_dst = jnp.array(self.base_dst, copy=True)
+        self.base_wgt = jnp.array(self.base_wgt, copy=True)
+        self.dead = jnp.array(self.dead, copy=True)
+        self.p_src = jnp.array(self.p_src, copy=True)
+        self.p_dst = jnp.array(self.p_dst, copy=True)
+        self.p_wgt = jnp.array(self.p_wgt, copy=True)
+        self.p_dead = jnp.array(self.p_dead, copy=True)
+        self.sealed = False
+
+    # -- updates ----------------------------------------------------------
+    def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
+        if batch.n == 0:
+            return self, 0
+        g = self if inplace else self.clone()
+        g._detach()
+        need = g.p_n + batch.capacity
+        if need > g.p_src.shape[0]:
+            newcap = alloc.next_pow2(need)
+            pad = newcap - g.p_src.shape[0]
+            g.p_src = jnp.concatenate([g.p_src, jnp.full((pad,), SENTINEL, jnp.int32)])
+            g.p_dst = jnp.concatenate([g.p_dst, jnp.full((pad,), SENTINEL, jnp.int32)])
+            g.p_wgt = jnp.concatenate([g.p_wgt, jnp.zeros((pad,), jnp.float32)])
+            g.p_dead = jnp.concatenate([g.p_dead, jnp.zeros((pad,), bool)])
+        g.p_src, g.p_dst, g.p_wgt = _jit_append(True)(
+            g.p_src, g.p_dst, g.p_wgt, batch.src, batch.dst, batch.wgt, g.p_n
+        )
+        g.p_n += batch.capacity
+        g.n = max(g.n, batch.max_vertex() + 1)
+        g.dirty = True
+        return g, batch.n  # lazy dm estimate (exact after assemble)
+
+    def remove_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
+        if batch.n == 0:
+            return self, 0
+        g = self if inplace else self.clone()
+        g._detach()
+        s, d, _ = batch.to_numpy()
+        s64 = s.astype(np.int64)
+        valid = s64 < g.offsets.shape[0] - 1
+        lo = np.where(valid, g.offsets[np.minimum(s64, g.offsets.shape[0] - 2)], 0)
+        hi = np.where(valid, g.offsets[np.minimum(s64 + 1, g.offsets.shape[0] - 1)], 0)
+        g.dead, newly = _jit_mark_base(True)(
+            g.dead,
+            g.base_dst,
+            jnp.asarray(lo.astype(np.int32)),
+            jnp.asarray(hi.astype(np.int32)),
+            jnp.asarray(d),
+        )
+        nz = int(np.asarray(jnp.sum(newly)))
+        g.n_zombies += nz
+        dm = nz
+        if g.p_n > 0:
+            g.p_dead, pfound = _jit_mark_pending(True)(
+                g.p_dead, g.p_src, g.p_dst, jnp.asarray(s), jnp.asarray(d)
+            )
+            g.dirty = True
+        g.m -= nz
+        g.dirty = True
+        return g, dm
+
+    # -- consolidation (GraphBLAS "wait") ----------------------------------
+    def assemble(self) -> None:
+        if not self.dirty:
+            return
+        out_cap = alloc.next_pow2(max(self.base_dst.shape[0] + self.p_n, 2))
+        s, d, w, m = _jit_assemble(out_cap)(
+            self.base_rows,
+            self.base_dst,
+            self.base_wgt,
+            self.dead,
+            self.p_src,
+            self.p_dst,
+            self.p_wgt,
+            self.p_dead,
+            self.p_n,
+        )
+        self.base_rows, self.base_dst, self.base_wgt = s, d, w
+        self.m = int(m)
+        cap = s.shape[0]
+        self.dead = jnp.zeros((cap,), bool)
+        src_host = np.asarray(s)[: self.m]
+        self.n = max(self.n, int(src_host.max(initial=-1)) + 1)
+        counts = np.bincount(src_host, minlength=self.n)
+        self.offsets = np.zeros(self.n + 1, np.int64)
+        np.cumsum(counts, out=self.offsets[1:])
+        pcap = 16
+        self.p_src = jnp.full((pcap,), SENTINEL, jnp.int32)
+        self.p_dst = jnp.full((pcap,), SENTINEL, jnp.int32)
+        self.p_wgt = jnp.zeros((pcap,), jnp.float32)
+        self.p_dead = jnp.zeros((pcap,), bool)
+        self.p_n = 0
+        self.n_zombies = 0
+        self.dirty = False
+        self.sealed = False  # fresh buffers, nothing shared
+
+    # -- export / queries ---------------------------------------------------
+    def clone(self) -> "LazyCSR":
+        return dataclasses.replace(
+            self,
+            base_rows=jnp.array(self.base_rows, copy=True),
+            base_dst=jnp.array(self.base_dst, copy=True),
+            base_wgt=jnp.array(self.base_wgt, copy=True),
+            offsets=self.offsets.copy(),
+            dead=jnp.array(self.dead, copy=True),
+            p_src=jnp.array(self.p_src, copy=True),
+            p_dst=jnp.array(self.p_dst, copy=True),
+            p_wgt=jnp.array(self.p_wgt, copy=True),
+            p_dead=jnp.array(self.p_dead, copy=True),
+        )
+
+    def snapshot(self) -> "LazyCSR":
+        """GraphBLAS-style lazy copy: share buffers until next mutation."""
+        self.sealed = True
+        return dataclasses.replace(self, offsets=self.offsets.copy(), sealed=True)
+
+    def to_csr(self) -> csr_mod.CSR:
+        self.assemble()
+        s = np.asarray(self.base_rows)[: self.m]
+        d = np.asarray(self.base_dst)[: self.m]
+        w = np.asarray(self.base_wgt)[: self.m]
+        return csr_mod.from_coo(s, d, w, n=self.n, dedup=False)
+
+    def reverse_walk(self, steps: int) -> jnp.ndarray:
+        self.assemble()
+        return traversal.reverse_walk_coo(
+            self.base_rows, self.base_dst, steps, self.n
+        )
+
+    def to_edge_sets(self) -> list[set[int]]:
+        return self.to_csr().to_edge_sets()

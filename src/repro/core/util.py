@@ -1,0 +1,181 @@
+"""Shared jnp utilities for the graph representations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel marking empty edge slots.  INT32_MAX sorts after every valid
+# vertex id, so ascending sorts push padding to the row tail for free.
+SENTINEL = np.int32(np.iinfo(np.int32).max)
+# GraphBLAS-style zombie marker for lazily-deleted edges (LazyCSR).
+ZOMBIE = np.int32(np.iinfo(np.int32).max - 1)
+
+
+def lexsort2(primary: jnp.ndarray, secondary: jnp.ndarray) -> jnp.ndarray:
+    """Order sorting by (primary, secondary), both int arrays.
+
+    Two stable argsorts: sort by secondary first, then stably by primary.
+    Equivalent to ``np.lexsort((secondary, primary))``.
+    """
+    order = jnp.argsort(secondary, stable=True)
+    order = order[jnp.argsort(primary[order], stable=True)]
+    return order
+
+
+def dedup_sorted_rows(keys: jnp.ndarray, *values: jnp.ndarray):
+    """Row-wise dedup of key-sorted 2D arrays, compacting to the left.
+
+    ``keys``: [R, K] int32, each row ascending with SENTINEL padding.
+    Duplicate keys (after the first occurrence) are replaced by SENTINEL and
+    the rows re-sorted so live entries stay contiguous.  ``values`` are
+    carried through the same permutation.  Returns (keys, *values, counts).
+    """
+    prev = jnp.concatenate(
+        [jnp.full((keys.shape[0], 1), -1, keys.dtype), keys[:, :-1]], axis=1
+    )
+    dup = (keys == prev) | (keys == SENTINEL)
+    masked = jnp.where(keys == prev, SENTINEL, keys)
+    order = jnp.argsort(masked, axis=1, stable=True)
+    keys_out = jnp.take_along_axis(masked, order, axis=1)
+    vals_out = tuple(jnp.take_along_axis(v, order, axis=1) for v in values)
+    counts = jnp.sum(keys_out != SENTINEL, axis=1).astype(jnp.int32)
+    del dup
+    return (keys_out, *vals_out, counts)
+
+
+def rows_to_padded(
+    flat_vals: jnp.ndarray,
+    starts: jnp.ndarray,
+    lengths: jnp.ndarray,
+    width: int,
+    fill,
+) -> jnp.ndarray:
+    """Gather variable-length row segments of a flat buffer into [R, width].
+
+    Slots >= length are ``fill``.  Out-of-range gathers are clamped (their
+    lanes are masked anyway).
+    """
+    idx = starts[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
+    mask = jnp.arange(width, dtype=jnp.int32)[None, :] < lengths[:, None]
+    safe = jnp.clip(idx, 0, flat_vals.shape[0] - 1)
+    vals = flat_vals[safe]
+    return jnp.where(mask, vals, fill)
+
+
+def scatter_padded_rows(
+    flat_vals: jnp.ndarray,
+    rows: jnp.ndarray,
+    starts: jnp.ndarray,
+    width_mask: jnp.ndarray,
+) -> jnp.ndarray:
+    """Scatter padded rows [R, K] back into a flat buffer at ``starts``.
+
+    Lanes where ``width_mask`` is False are dropped (left unchanged).
+    """
+    k = rows.shape[1]
+    idx = starts[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    idx = jnp.where(width_mask, idx, flat_vals.shape[0])  # OOB -> dropped
+    return flat_vals.at[idx.reshape(-1)].set(
+        rows.reshape(-1), mode="drop", unique_indices=True
+    )
+
+
+def searchsorted_rows(rows: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized per-row searchsorted: rows [R,K] asc, queries [R,Q]."""
+    return jax.vmap(jnp.searchsorted)(rows, queries)
+
+
+def row_contains(rows: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """Membership of queries [R,Q] in sorted rows [R,K] -> bool [R,Q]."""
+    pos = searchsorted_rows(rows, queries)
+    pos = jnp.clip(pos, 0, rows.shape[1] - 1)
+    found = jnp.take_along_axis(rows, pos, axis=1) == queries
+    return found & (queries != SENTINEL)
+
+
+def segment_sum(vals: jnp.ndarray, segment_ids: jnp.ndarray, num: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(vals, segment_ids, num_segments=num)
+
+
+def coo_sort(src: jnp.ndarray, dst: jnp.ndarray, *values: jnp.ndarray):
+    """Sort COO edges by (src, dst); carries values. Stable."""
+    order = lexsort2(src, dst)
+    return (src[order], dst[order], *(v[order] for v in values))
+
+
+def coo_dedup_mask(src: jnp.ndarray, dst: jnp.ndarray) -> jnp.ndarray:
+    """For (src,dst)-sorted COO: True where the entry is the FIRST of its key."""
+    prev_same = jnp.concatenate(
+        [jnp.array([False]), (src[1:] == src[:-1]) & (dst[1:] == dst[:-1])]
+    )
+    return ~prev_same
+
+
+def binsearch_window(
+    flat: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, queries: jnp.ndarray
+):
+    """Per-query binary search in windows of a flat sorted buffer.
+
+    ``flat`` is ascending within each window [lo_i, hi_i).  Returns
+    (pos, found): ``pos`` is the leftmost index with flat[pos] >= q (within
+    the window), ``found`` whether flat[pos] == q.  Vectorized over queries
+    with a fori_loop (32 steps covers int32 windows).
+    """
+    lo = lo.astype(jnp.int32)
+    hi = hi.astype(jnp.int32)
+
+    def body(_, lh):
+        l, h = lh
+        mid = (l + h) // 2
+        v = flat[jnp.clip(mid, 0, flat.shape[0] - 1)]
+        go_right = v < queries
+        l2 = jnp.where(go_right & (l < h), mid + 1, l)
+        h2 = jnp.where(go_right | (l >= h), h, mid)
+        return l2, h2
+
+    l, h = jax.lax.fori_loop(0, 32, body, (lo, hi))
+    pos = l
+    safe = jnp.clip(pos, 0, flat.shape[0] - 1)
+    found = (pos < hi) & (flat[safe] == queries)
+    return pos, found
+
+
+def searchsorted_2d(
+    s_sorted: jnp.ndarray,
+    d_sorted: jnp.ndarray,
+    qs: jnp.ndarray,
+    qd: jnp.ndarray,
+):
+    """Binary search for (qs, qd) pairs in a (src, dst)-lexsorted COO.
+
+    Returns (pos, found) like ``binsearch_window``.
+    """
+    n = s_sorted.shape[0]
+    lo = jnp.zeros_like(qs, dtype=jnp.int32)
+    hi = jnp.full_like(qs, n, dtype=jnp.int32)
+
+    def body(_, lh):
+        l, h = lh
+        mid = (l + h) // 2
+        safe = jnp.clip(mid, 0, n - 1)
+        ms, md = s_sorted[safe], d_sorted[safe]
+        less = (ms < qs) | ((ms == qs) & (md < qd))
+        l2 = jnp.where(less & (l < h), mid + 1, l)
+        h2 = jnp.where(less | (l >= h), h, mid)
+        return l2, h2
+
+    l, h = jax.lax.fori_loop(0, 32, body, (lo, hi))
+    safe = jnp.clip(l, 0, n - 1)
+    found = (l < n) & (s_sorted[safe] == qs) & (d_sorted[safe] == qd)
+    return l, found
+
+
+def expand_rows(offsets: jnp.ndarray, total: int) -> jnp.ndarray:
+    """CSR offsets [N+1] -> row id per edge slot [total] (searchsorted trick)."""
+    return (
+        jnp.searchsorted(
+            offsets, jnp.arange(total, dtype=offsets.dtype), side="right"
+        ).astype(jnp.int32)
+        - 1
+    )

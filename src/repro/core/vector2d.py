@@ -1,0 +1,106 @@
+"""Vector2D — the paper's Fig. 1 strawman: per-vertex host arrays.
+
+Stands in for the PetGraph/SNAP class of representations (per-vertex
+containers, allocation on every touched row, no slack).  Intentionally
+allocation-heavy: every touched row reallocates (np.union1d / setdiff1d),
+every clone reallocates every row — this is the 74%-alloc-time baseline
+the paper's Figure 1 motivates CP2AA with.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import csr as csr_mod, edgebatch, traversal
+
+
+class Vector2D:
+    def __init__(self, rows: list[np.ndarray], wrows: list[np.ndarray], n: int, m: int):
+        self.rows = rows
+        self.wrows = wrows
+        self.n = n
+        self.m = m
+
+    @classmethod
+    def from_csr(cls, c: csr_mod.CSR) -> "Vector2D":
+        o = np.asarray(c.offsets)
+        d = np.asarray(c.dst)
+        w = np.asarray(c.wgt) if c.wgt is not None else np.ones(c.m, np.float32)
+        rows = [d[o[u] : o[u + 1]].copy() for u in range(c.n)]
+        wrows = [w[o[u] : o[u + 1]].copy() for u in range(c.n)]
+        return cls(rows, wrows, int(c.n), int(c.m))
+
+    def block_on(self) -> None:  # host rep: nothing to wait for
+        pass
+
+    def _reserve(self, n: int) -> None:
+        while len(self.rows) < n:
+            self.rows.append(np.empty(0, np.int32))
+            self.wrows.append(np.empty(0, np.float32))
+        self.n = max(self.n, n)
+
+    def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
+        g = self if inplace else self.clone()
+        s, d, w = batch.to_numpy()
+        if s.shape[0] == 0:
+            return g, 0
+        g._reserve(int(max(s.max(), d.max())) + 1)
+        dm = 0
+        rows, first, counts = np.unique(s, return_index=True, return_counts=True)
+        for u, fi, ct in zip(rows, first, counts):
+            old = g.rows[u]
+            add_d, add_w = d[fi : fi + ct], w[fi : fi + ct]
+            new = np.union1d(old, add_d).astype(np.int32)  # fresh allocation
+            pos = np.searchsorted(new, old)
+            neww = np.zeros(new.shape[0], np.float32)
+            neww[pos] = g.wrows[u]
+            neww[np.searchsorted(new, add_d)] = add_w  # batch weight wins
+            dm += new.shape[0] - old.shape[0]
+            g.rows[u], g.wrows[u] = new, neww
+        g.m += dm
+        return g, dm
+
+    def remove_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
+        g = self if inplace else self.clone()
+        s, d, _ = batch.to_numpy()
+        dm = 0
+        rows, first, counts = np.unique(s, return_index=True, return_counts=True)
+        for u, fi, ct in zip(rows, first, counts):
+            if u >= len(g.rows):
+                continue
+            old = g.rows[u]
+            keep = ~np.isin(old, d[fi : fi + ct])
+            dm += old.shape[0] - int(keep.sum())
+            g.rows[u] = old[keep]          # fresh allocation
+            g.wrows[u] = g.wrows[u][keep]
+        g.m -= dm
+        return g, dm
+
+    def clone(self) -> "Vector2D":
+        return Vector2D(
+            [r.copy() for r in self.rows],
+            [w.copy() for w in self.wrows],
+            self.n,
+            self.m,
+        )
+
+    def snapshot(self) -> "Vector2D":
+        return self.clone()  # no cheap snapshot in this class — the point
+
+    def to_csr(self) -> csr_mod.CSR:
+        if self.m == 0:
+            return csr_mod.from_coo(np.empty(0, np.int64), np.empty(0, np.int64), n=self.n)
+        src = np.concatenate(
+            [np.full(r.shape[0], u, np.int64) for u, r in enumerate(self.rows)]
+        )
+        dst = np.concatenate(self.rows)
+        wgt = np.concatenate(self.wrows)
+        return csr_mod.from_coo(src, dst, wgt, n=self.n, dedup=False)
+
+    def reverse_walk(self, steps: int):
+        # ragged host traversal: flatten once per call (the locality penalty
+        # of non-contiguous storage), then iterate with np.add.at.
+        c = self.to_csr()
+        return traversal.reverse_walk_csr(c.offsets, c.dst, steps, c.n)
+
+    def to_edge_sets(self) -> list[set[int]]:
+        return [set(np.asarray(r).tolist()) for r in self.rows]

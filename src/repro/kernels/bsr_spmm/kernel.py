@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: BSR (block-sparse row) SpMM — Y = A @ X.
+
+TPU adaptation of the paper's reverse-walk/SpMV hot loop (DESIGN.md §2):
+the MXU has no scatter unit, so the adjacency is re-blocked into dense
+B×B tiles (B=128 matches the MXU systolic array) and the segment
+reduction becomes a sequence of dense tile matmuls.
+
+Layout:
+  row_ptr    int32 [R+1]        — blocks of row-block r live at
+                                   [row_ptr[r], row_ptr[r+1])
+  block_cols int32 [NNZB_pad]   — block-column index per stored block
+  blocks     f32   [NNZB_pad, B, B] — dense tiles
+  x          f32   [C*B, D]     — dense operand
+
+Grid (R, D/DT, MAXB): the s axis (innermost) walks a row's blocks and
+accumulates into the same output tile; `row_ptr`/`block_cols` ride in as
+scalar-prefetch operands so BlockSpec index_maps can chase the indirection
+(the block-table indirection of the paper's per-vertex blocks, tile-ified).
+VMEM per step: B·B (tile) + B·DT (x) + B·DT (out) floats — 128·128·4 +
+2·128·DT·4 ≈ 64 KiB + 1 KiB·DT, comfortably inside the ~16 MiB VMEM budget
+for DT ≤ 512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(row_ptr_ref, block_cols_ref, blocks_ref, x_ref, o_ref):
+    r = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    count = row_ptr_ref[r + 1] - row_ptr_ref[r]
+
+    @pl.when(s < count)
+    def _acc():
+        a = blocks_ref[0]          # [B, B]
+        x = x_ref[...]             # [B, DT]
+        o_ref[...] += jnp.dot(a, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_blocks_per_row", "d_tile", "interpret")
+)
+def bsr_spmm(
+    row_ptr: jnp.ndarray,
+    block_cols: jnp.ndarray,
+    blocks: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    max_blocks_per_row: int,
+    d_tile: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n_row_blocks = row_ptr.shape[0] - 1
+    b = blocks.shape[-1]
+    d = x.shape[-1]
+    assert d % d_tile == 0, (d, d_tile)
+
+    def blocks_idx(r, dt, s, row_ptr_ref, block_cols_ref):
+        i = row_ptr_ref[r] + s
+        return (jnp.minimum(i, blocks.shape[0] - 1), 0, 0)
+
+    def x_idx(r, dt, s, row_ptr_ref, block_cols_ref):
+        i = jnp.minimum(row_ptr_ref[r] + s, block_cols.shape[0] - 1)
+        return (block_cols_ref[i], dt)
+
+    def o_idx(r, dt, s, row_ptr_ref, block_cols_ref):
+        return (r, dt)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_row_blocks, d // d_tile, max_blocks_per_row),
+        in_specs=[
+            pl.BlockSpec((1, b, b), blocks_idx),
+            pl.BlockSpec((b, d_tile), x_idx),
+        ],
+        out_specs=pl.BlockSpec((b, d_tile), o_idx),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_row_blocks * b, d), jnp.float32),
+        interpret=interpret,
+    )(row_ptr, block_cols, blocks, x)

@@ -1,0 +1,111 @@
+"""jit'd wrapper: CSR -> BSR conversion + SpMM / reverse-walk entry points."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import alloc, csr as csr_mod
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+@dataclasses.dataclass(frozen=True)
+class BSR:
+    row_ptr: jnp.ndarray     # [R+1]
+    block_cols: jnp.ndarray  # [NNZB_pad]
+    blocks: jnp.ndarray      # [NNZB_pad, B, B]
+    n_rows: int              # padded row count (R*B)
+    n_cols: int              # padded col count
+    max_blocks_per_row: int
+    block_size: int
+
+
+def csr_to_bsr(c: csr_mod.CSR, *, block_size: int = 128, weighted: bool = False) -> BSR:
+    """Re-block a CSR adjacency into dense B×B tiles (host).
+
+    Pads rows/cols to a block multiple; block count per row-block is
+    pow-2 bucketed (CP2AA policy) so the kernel grid shape stays stable
+    across graphs of similar density.
+    """
+    b = block_size
+    n_pad = -(-c.n // b) * b
+    o = np.asarray(c.offsets)
+    dst = np.asarray(c.dst)
+    wgt = (
+        np.asarray(c.wgt)
+        if (weighted and c.wgt is not None)
+        else np.ones(c.m, np.float32)
+    )
+    rows = np.repeat(np.arange(c.n, dtype=np.int64), np.diff(o))
+    br = rows // b
+    bc = dst.astype(np.int64) // b
+    key = br * (n_pad // b) + bc
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    uniq, first = np.unique(key_s, return_index=True)
+    nnzb = uniq.shape[0]
+    blk_of_edge = np.searchsorted(uniq, key)
+    # dense tiles
+    blocks = np.zeros((max(nnzb, 1), b, b), np.float32)
+    blocks[blk_of_edge, rows % b, dst % b] = wgt
+    u_br = (uniq // (n_pad // b)).astype(np.int64)
+    u_bc = (uniq % (n_pad // b)).astype(np.int32)
+    r_total = n_pad // b
+    counts = np.bincount(u_br, minlength=r_total)
+    row_ptr = np.zeros(r_total + 1, np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    maxb = alloc.next_pow2(max(int(counts.max(initial=1)), 1))
+    return BSR(
+        row_ptr=jnp.asarray(row_ptr, jnp.int32),
+        block_cols=jnp.asarray(u_bc, jnp.int32),
+        blocks=jnp.asarray(blocks),
+        n_rows=n_pad,
+        n_cols=n_pad,
+        max_blocks_per_row=int(maxb),
+        block_size=b,
+    )
+
+
+def spmm(bsr: BSR, x: jnp.ndarray, *, interpret: bool = False, d_tile=None) -> jnp.ndarray:
+    """Y = A @ X via the Pallas kernel; pads X/D to block multiples."""
+    d = x.shape[-1]
+    dt = d_tile or min(128, alloc.next_pow2(d))
+    d_pad = -(-d // dt) * dt
+    n_pad = bsr.n_cols
+    x_p = jnp.zeros((n_pad, d_pad), jnp.float32)
+    x_p = x_p.at[: x.shape[0], :d].set(x.astype(jnp.float32))
+    y = _kernel.bsr_spmm(
+        bsr.row_ptr,
+        bsr.block_cols,
+        bsr.blocks,
+        x_p,
+        max_blocks_per_row=bsr.max_blocks_per_row,
+        d_tile=dt,
+        interpret=interpret,
+    )
+    return y[: x.shape[0], :d]
+
+
+def spmm_reference(bsr: BSR, x: jnp.ndarray) -> jnp.ndarray:
+    n_pad = bsr.n_cols
+    x_p = jnp.zeros((n_pad, x.shape[-1]), jnp.float32)
+    x_p = x_p.at[: x.shape[0]].set(x.astype(jnp.float32))
+    y = _ref.spmm_reference(bsr.row_ptr, bsr.block_cols, bsr.blocks, x_p)
+    return y[: x.shape[0]]
+
+
+def reverse_walk_bsr(
+    bsr: BSR, steps: int, n: int, *, interpret: bool = False
+) -> jnp.ndarray:
+    """Paper Alg 13 on the MXU: visits = A^k 1̄ as iterated BSR SpMM.
+
+    The visits vector rides in a [N, 8] lane-padded panel (column 0 live)
+    so every step is MXU matmuls instead of gather/scatter.
+    """
+    v = jnp.zeros((n, 8), jnp.float32).at[:, 0].set(1.0)
+    for _ in range(steps):
+        v = spmm(bsr, v, d_tile=8, interpret=interpret)
+    return v[:, 0]

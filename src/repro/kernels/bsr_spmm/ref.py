@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for block-sparse SpMM (Y = A @ X)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bsr_to_dense(row_ptr, block_cols, blocks, n_rows: int, n_cols: int):
+    """Reassemble the dense matrix from BSR parts (host/numpy, tests)."""
+    b = blocks.shape[-1]
+    out = np.zeros((n_rows, n_cols), np.float32)
+    rp = np.asarray(row_ptr)
+    bc = np.asarray(block_cols)
+    bl = np.asarray(blocks)
+    for r in range(rp.shape[0] - 1):
+        for s in range(rp[r], rp[r + 1]):
+            c = bc[s]
+            out[r * b : (r + 1) * b, c * b : (c + 1) * b] = bl[s]
+    return out
+
+
+def spmm_reference(row_ptr, block_cols, blocks, x):
+    """Dense-equivalent SpMM oracle: per-row-block accumulation in jnp."""
+    b = blocks.shape[-1]
+    n_row_blocks = row_ptr.shape[0] - 1
+    x_blk = x.reshape(-1, b, x.shape[-1])
+
+    rows = []
+    rp = np.asarray(row_ptr)
+    bc = np.asarray(block_cols)
+    for r in range(n_row_blocks):
+        acc = jnp.zeros((b, x.shape[-1]), jnp.float32)
+        for s in range(int(rp[r]), int(rp[r + 1])):
+            acc = acc + blocks[s].astype(jnp.float32) @ x_blk[bc[s]].astype(jnp.float32)
+        rows.append(acc)
+    return jnp.concatenate(rows, axis=0)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: segment-sum over sorted edges via one-hot matmuls.
+
+The GNN message-passing primitive (scatter-add of edge messages into
+destination rows) has no native TPU scatter unit.  For row-sorted edges the
+standard MXU formulation: per 128-edge tile, build the one-hot matrix of
+*local segment ranks* (cumsum of row-change flags) and reduce the tile with
+one 128×128 matmul — O(E/128) MXU ops instead of E scalar scatters.  A tiny
+cross-tile segment_sum outside the kernel folds the per-tile partials
+(tiles overlap in at most their seam rows).
+
+Inputs (host pads edges to tiles):
+  rows [T, EB]     int32, ascending within+across tiles; pad rows = big
+  vals [T, EB, D]  f32, pad lanes zero
+Outputs:
+  partials  [T, EB, D]  per-tile per-rank sums
+  rank_rows [T, EB]     global row id per rank (or ``sink`` for dead ranks)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(rows_ref, vals_ref, part_ref, rank_ref, *, sink: int):
+    rows = rows_ref[0]                      # [EB]
+    vals = vals_ref[0]                      # [EB, DT]
+    eb = rows.shape[0]
+    prev = jnp.concatenate([jnp.full((1,), -1, rows.dtype), rows[:-1]])
+    seg_start = rows != prev
+    rank = jnp.cumsum(seg_start.astype(jnp.int32)) - 1  # [EB] in [0, EB)
+    oh = (
+        jax.lax.broadcasted_iota(jnp.int32, (eb, eb), 1) == rank[:, None]
+    ).astype(jnp.float32)                    # [edge, rank]
+    part_ref[0] = jnp.dot(oh.T, vals, preferred_element_type=jnp.float32)
+    live = rows < sink
+    rr = jnp.max(
+        jnp.where(oh.astype(bool) & live[:, None], rows[:, None], -1), axis=0
+    )
+    rank_ref[0] = jnp.where(rr >= 0, rr, sink)
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "sink", "interpret"))
+def edge_segment_partials(
+    rows: jnp.ndarray,
+    vals: jnp.ndarray,
+    *,
+    d_tile: int = 128,
+    sink: int,
+    interpret: bool = False,
+):
+    t, eb = rows.shape
+    d = vals.shape[-1]
+    assert d % d_tile == 0
+
+    grid = (t, d // d_tile)
+    kern = functools.partial(_kernel, sink=sink)
+    part, rank = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, eb), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, eb, d_tile), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, eb, d_tile), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, eb), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, eb, d), jnp.float32),
+            jax.ShapeDtypeStruct((t, eb), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, vals)
+    return part, rank

@@ -1,0 +1,61 @@
+"""jit'd wrapper: pad/tile sorted edges, run the kernel, fold seam partials."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import alloc
+from . import kernel as _kernel
+from . import ref as _ref
+
+EB = 128  # edges per tile (MXU-native)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "interpret", "d_tile")
+)
+def edge_segment_sum(
+    rows: jnp.ndarray,
+    vals: jnp.ndarray,
+    *,
+    num_segments: int,
+    d_tile: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Segment-sum of row-sorted edge values on the MXU.
+
+    rows [E] ascending (pad entries must be >= num_segments), vals [E, D].
+    """
+    e, d = vals.shape
+    dt = d_tile or min(128, alloc.next_pow2(d))
+    d_pad = -(-d // dt) * dt
+    t = -(-e // EB)
+    e_pad = t * EB
+    sink = num_segments
+    rows_p = jnp.full((e_pad,), sink, jnp.int32).at[:e].set(
+        jnp.minimum(rows, sink).astype(jnp.int32)
+    )
+    vals_p = jnp.zeros((e_pad, d_pad), jnp.float32).at[:e, :d].set(
+        vals.astype(jnp.float32)
+    )
+    part, rank = _kernel.edge_segment_partials(
+        rows_p.reshape(t, EB),
+        vals_p.reshape(t, EB, d_pad),
+        d_tile=dt,
+        sink=sink,
+        interpret=interpret,
+    )
+    # fold per-tile partials: at most EB live ranks per tile; seam rows
+    # (shared across tile boundaries) merge here.
+    flat_rows = rank.reshape(-1)
+    flat_vals = part.reshape(-1, d_pad)
+    out = jax.ops.segment_sum(
+        flat_vals, jnp.minimum(flat_rows, sink), num_segments=sink + 1
+    )
+    return out[:num_segments, :d]
+
+
+def edge_segment_sum_reference(rows, vals, *, num_segments: int):
+    return _ref.segment_sum_reference(rows, vals, num_segments)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: plain segment_sum over edges."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_reference(
+    rows: jnp.ndarray, vals: jnp.ndarray, num_segments: int
+) -> jnp.ndarray:
+    """rows [E] int32 (>= num_segments means dropped), vals [E, D]."""
+    safe = jnp.minimum(rows, num_segments)
+    out = jax.ops.segment_sum(vals, safe, num_segments=num_segments + 1)
+    return out[:num_segments]

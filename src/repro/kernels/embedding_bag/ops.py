@@ -1,0 +1,55 @@
+"""jit'd EmbeddingBag wrapper with pow-2 bag padding + jnp fallback."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import alloc
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    weights=None,
+    *,
+    combine: str = "sum",
+    use_kernel: bool = True,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """EmbeddingBag over [n_bags, K] ragged index bags (-1 = padding).
+
+    ``use_kernel=False`` routes to the jnp path (used on CPU and inside
+    models whose dry-run shapes make per-row DMA suboptimal; the pjit
+    sharding of the table is identical either way).
+    """
+    if indices.ndim == 1:
+        indices = indices[None]
+    k = indices.shape[-1]
+    k_pad = alloc.next_pow2(max(k, 1))
+    if k_pad != k:
+        pad = jnp.full(indices.shape[:-1] + (k_pad - k,), -1, indices.dtype)
+        indices = jnp.concatenate([indices, pad], axis=-1)
+    if weights is None:
+        weights = jnp.ones(indices.shape, jnp.float32)
+    elif weights.shape[-1] != indices.shape[-1]:
+        wpad = jnp.zeros(
+            weights.shape[:-1] + (indices.shape[-1] - weights.shape[-1],),
+            jnp.float32,
+        )
+        weights = jnp.concatenate([weights, wpad], axis=-1)
+    if not use_kernel:
+        return _ref.embedding_bag_reference(table, indices, weights, combine=combine)
+    return _kernel.embedding_bag(
+        table,
+        indices.astype(jnp.int32),
+        weights.astype(jnp.float32),
+        combine=combine,
+        interpret=interpret,
+    )
+
+
+def embedding_bag_reference(table, indices, weights=None, *, combine="sum"):
+    if weights is None:
+        weights = jnp.ones(indices.shape, jnp.float32)
+    return _ref.embedding_bag_reference(table, indices, weights, combine=combine)

@@ -1,0 +1,20 @@
+"""Pure-jnp EmbeddingBag oracle: take + segment reduce."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_reference(table, indices, weights, *, combine: str = "sum"):
+    """table [V,D], indices [B,K] (-1 pad), weights [B,K] -> [B,D]."""
+    valid = indices >= 0
+    safe = jnp.clip(indices, 0, table.shape[0] - 1)
+    rows = table[safe]  # [B, K, D]
+    if combine in ("sum", "mean"):
+        rows = rows * jnp.where(valid, weights, 0.0)[..., None]
+        out = rows.sum(axis=1)
+        if combine == "mean":
+            out = out / jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        return out
+    rows = jnp.where(valid[..., None], rows, -jnp.inf)
+    out = rows.max(axis=1)
+    return jnp.where(jnp.isfinite(out), out, 0.0)

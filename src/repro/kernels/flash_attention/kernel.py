@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: flash attention (online softmax) with causal and
+sliding-window masking and GQA head grouping.
+
+Grid (B·Hq, Sq/BQ, Skv/BK), kv innermost.  Running max/denominator live in
+VMEM scratch; fully-masked kv blocks are skipped via @pl.when (this is what
+makes sliding-window attention O(S·w) — the h2o-danube/long_500k path).
+K/V BlockSpecs map the query head to its KV head (GQA: h // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int, bq: int, bk: int, n_kv: int
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q0 = qi * bq
+    k0 = ki * bk
+
+    # block-level skip: entirely above the diagonal (causal) or entirely
+    # left of the window
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (k0 <= q0 + bq - 1)
+    if window > 0:
+        run = run & (k0 + bk - 1 >= q0 - window + 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)           # [BQ, D]
+        k = k_ref[0].astype(jnp.float32)           # [BK, D]
+        v = v_ref[0].astype(jnp.float32)           # [BK, D]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_ids = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_ids = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.bool_(True)
+        if causal:
+            mask = mask & (k_ids <= q_ids)
+        if window > 0:
+            mask = mask & (k_ids > q_ids - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_old = m_scr[:, :1]                        # [BQ, 1]
+        m_new = jnp.maximum(m_old, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_old - m_new)
+        l_new = alpha * l_scr[:, :1] + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, Hq, Sq, D]
+    k: jnp.ndarray,  # [B, Hkv, Skv, D]
+    v: jnp.ndarray,  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,          # 0 = unlimited; >0 = sliding window size
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+
+    def q_idx(i, qi, ki):
+        return (i, qi, 0)
+
+    def kv_idx(i, qi, ki):
+        bh = i // hq
+        h = i % hq
+        return (bh * hkv + h // group, ki, 0)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=int(window),
+        bq=bq, bk=bk, n_kv=skv // bk,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(b * hq, sq // bq, skv // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_idx),
+            pl.BlockSpec((1, bk, d), kv_idx),
+            pl.BlockSpec((1, bk, d), kv_idx),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_idx),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, d)

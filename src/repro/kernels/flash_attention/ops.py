@@ -1,0 +1,53 @@
+"""jit'd attention wrapper: flash kernel for prefill/train, jnp for decode.
+
+Decode (single-query) attention is a memory-bound matvec — XLA's fused
+path is already roofline-bound there, so the Pallas kernel only covers
+prefill/training shapes (Sq > 1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def attention(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    use_kernel: bool = True, interpret: bool = False,
+    block_q: int = 128, block_k: int = 128,
+):
+    sq = q.shape[2]
+    if not use_kernel or sq == 1:
+        return _ref.attention_reference(q, k, v, causal=causal, window=window)
+    return _kernel.flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+def decode_attention(q, k, v, kv_len, *, window: int = 0):
+    """Single-token decode vs a prefix of the KV cache.
+
+    q [B,Hq,1,D]; k/v [B,Hkv,S,D] ring/linear caches; kv_len scalar = live
+    prefix length.  Masks cache slots >= kv_len.
+    """
+    b, hq, _, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    scores = scores / (d ** 0.5)
+    ids = jnp.arange(s)[None, None, None, :]
+    mask = ids < kv_len
+    if window > 0:
+        mask = mask & (ids > kv_len - 1 - window)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+attention_reference = _ref.attention_reference

@@ -1,0 +1,27 @@
+"""Pure-jnp attention oracle (f32 softmax, causal/window/GQA)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_reference(q, k, v, *, causal=True, window=0):
+    """q [B,Hq,Sq,D], k/v [B,Hkv,Skv,D] -> [B,Hq,Sq,D]."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (d ** 0.5)
+    q_ids = jnp.arange(sq)[:, None]
+    k_ids = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_ids <= q_ids
+    if window > 0:
+        mask &= k_ids > q_ids - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

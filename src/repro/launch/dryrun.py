@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) cell on the production meshes, record
+memory_analysis / cost_analysis / collective bytes.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init (only the dry-run sees 512 devices).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gcn-cora --shape molecule
+Variants (roofline support): full cost1 cost2 opt1 opt2 chunk2 chunk4.
+Results cached as JSON under results/dryrun/.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import Counter
+
+import jax
+
+from ..configs import base as cfgbase
+from . import mesh as mesh_mod
+from . import steps
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(%?[\w\.\-]+) = (.+?) ([a-z\-]+)\(", re.M)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op, per collective kind,
+    attributed to the computation (entry vs while-body) it appears in.
+
+    Operand bytes are taken from each operand's defining instruction type
+    (built from a full symbol table of the module).
+    """
+    # symbol table: instruction name -> output type bytes
+    sym: dict[str, int] = {}
+    comp_of: dict[str, str] = {}
+    current_comp = "entry"
+    for line in hlo_text.splitlines():
+        mcomp = re.match(r"^(%?[\w\.\-]+) \{", line.strip())
+        if line.startswith("ENTRY"):
+            current_comp = "entry"
+        elif mcomp and "=" not in line:
+            current_comp = mcomp.group(1)
+        m = re.match(r"\s*(ROOT\s+)?(%?[\w\.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s", line)
+        if m:
+            name = m.group(2)
+            sym[name] = _type_bytes(m.group(3))
+            comp_of[name] = current_comp
+
+    per_kind = Counter()
+    per_comp_kind: dict[str, Counter] = {}
+    for line in hlo_text.splitlines():
+        for kind in COLLECTIVES:
+            token = f" {kind}(" if not line.strip().startswith(kind) else f"{kind}("
+            if f"{kind}(" in line and "=" in line:
+                m = re.match(r"\s*(ROOT\s+)?(%?[\w\.\-]+)\s*=", line)
+                name = m.group(2) if m else "?"
+                # operand list
+                mo = re.search(re.escape(kind) + r"\(([^)]*)\)", line)
+                bytes_ = 0
+                if mo:
+                    for op in mo.group(1).split(","):
+                        op = op.strip().split(" ")[-1]
+                        bytes_ += sym.get(op, 0)
+                if bytes_ == 0:
+                    bytes_ = sym.get(name, 0)  # fall back to output size
+                comp = comp_of.get(name, "entry")
+                per_kind[kind] += bytes_
+                per_comp_kind.setdefault(comp, Counter())[kind] += bytes_
+                break
+    in_while = Counter()
+    for comp, c in per_comp_kind.items():
+        if "while" in comp or "body" in comp or "scan" in comp:
+            in_while.update(c)
+    return {
+        "total_bytes": dict(per_kind),
+        "while_body_bytes": dict(in_while),
+        "count": sum(per_kind.values()) and int(sum(
+            1 for line in hlo_text.splitlines()
+            if any(f"{k}(" in line and "=" in line for k in COLLECTIVES)
+        )),
+    }
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, variant: str = "full") -> dict:
+    entry = cfgbase.get(arch)
+    skip = entry.skip_shapes.get(shape)
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+    }
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+    t0 = time.time()
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    daxes = mesh_mod.data_axes(mesh)
+    cell = steps.build_cell(
+        arch, shape, variant=variant, data_axes=daxes
+    ) if not variant.startswith("opt") else steps.build_opt_cell(arch, variant=variant)
+    shardings = steps.attach_shardings(cell, mesh, arch, shape)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            cell.step_fn, in_shardings=shardings, donate_argnums=cell.donate
+        )
+        lowered = jitted.lower(*cell.args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+        # conservative total (no aliasing assumed)
+        "total_bytes": int(
+            ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes
+        ),
+        # true peak when donated inputs alias outputs (state buffers reused)
+        "peak_bytes_aliased": int(
+            max(ma.argument_size_in_bytes, ma.output_size_in_bytes)
+            + ma.temp_size_in_bytes
+        ),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["cost"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+    txt = compiled.as_text()
+    rec["collectives"] = collective_stats(txt)
+    rec["hlo_chars"] = len(txt)
+    rec["loop_correction"] = cell.loop_correction
+    rec["status"] = "ok"
+    return rec
+
+
+def result_path(arch, shape, variant, multi_pod):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    d = os.path.abspath(os.path.join(RESULTS_DIR, mesh))
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{shape}__{variant}.json")
+
+
+def lm_variants(shape_kind: str) -> list[str]:
+    # (cost2, cost4) pair: the 1-layer lowering fuses anomalously (measured
+    # non-monotonic bytes), so extrapolation uses depths 2 and 4
+    if shape_kind == "train":
+        return ["full", "cost2", "cost4", "opt1", "opt2"]
+    return ["full", "cost2", "cost4"]
+
+
+def variants_for(arch: str, shape: str) -> list[str]:
+    entry = cfgbase.get(arch)
+    if entry.family == "lm":
+        kind = cfgbase.FAMILY_SHAPES["lm"][shape]["kind"]
+        return lm_variants(kind)
+    if arch == "mace" and shape in ("ogb_products",):
+        return ["full", "chunk2", "chunk4"]
+    return ["full"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--missing-only", action="store_true")
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        for arch, shape, skip in cfgbase.all_cells():
+            vs = ["full"] if args.multi_pod else variants_for(arch, shape)
+            if skip:
+                vs = ["full"]
+            for v in vs:
+                todo.append((arch, shape, v))
+    else:
+        vs = [args.variant] if args.variant else (
+            ["full"] if args.multi_pod else variants_for(args.arch, args.shape)
+        )
+        todo = [(args.arch, args.shape, v) for v in vs]
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape, variant in todo:
+        path = result_path(arch, shape, variant, args.multi_pod)
+        if args.missing_only and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    continue
+        print(f"[dryrun] {arch} × {shape} ({variant}) "
+              f"mesh={'2x16x16' if args.multi_pod else '16x16'}", flush=True)
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod, variant=variant)
+        except Exception as e:  # noqa: BLE001 — record the failure, keep going
+            rec = {
+                "arch": arch, "shape": shape, "variant": variant,
+                "mesh": "2x16x16" if args.multi_pod else "16x16",
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_fail += st == "error"
+        n_skip += st == "skipped"
+        msg = {"ok": f"ok  lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s "
+                     f"mem={rec.get('memory', {}).get('total_bytes', 0)/2**30:.2f}GiB/dev",
+               "skipped": f"SKIP ({rec.get('reason', '')[:60]})",
+               "error": f"FAIL {rec.get('error', '')[:120]}"}[st]
+        print(f"  -> {msg}", flush=True)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

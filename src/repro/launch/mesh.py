@@ -1,0 +1,26 @@
+"""Production mesh builders (DESIGN.md §5).
+
+Functions, not module constants — importing this module never touches jax
+device state.  The dry-run (and only the dry-run) forces 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod; multi-pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that carry the batch/vertex dimension (pod folds into data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_mesh_like(shape: tuple, axes: tuple):
+    """Elastic re-mesh helper: arbitrary (shape, axes) from survivors."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))

@@ -1,0 +1,184 @@
+"""Partition-spec rules per architecture family (DESIGN.md §5).
+
+LM: FSDP(ZeRO-3) over 'data' + TP over 'model'; pod axis = pure DP
+(params replicated across pods, gradients all-reduced).  MoE: experts over
+'data' (EP=DP groups, all-to-all dispatch), expert d_ff over 'model'.
+Decode: batch over (pod, data), KV-cache sequence over 'model'
+(context-parallel decode).  GNN: vertex/edge block-sharding over
+(pod, data) — the paper's per-partition CSR as the shard layout.  recsys:
+embedding-table rows over 'model', batch over (pod, data).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import mesh as mesh_mod
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# LM params
+# ---------------------------------------------------------------------------
+def lm_param_spec(path: str, mesh) -> P:
+    d = mesh_mod.data_axes(mesh)
+    fs = "data"  # FSDP axis (within-pod only; pod = pure DP)
+    if path.endswith("unembed"):
+        return P(fs, "model")
+    if path.endswith("embed"):
+        return P("model", fs)
+    leaf = path.split("/")[-1]
+    if leaf in ("wq", "wk", "wv"):
+        return P(None, fs, "model")
+    if leaf == "wo":
+        return P(None, "model", fs)
+    if leaf in ("bq", "bk", "bv"):
+        return P(None, "model")
+    if leaf in ("ln1", "ln2"):
+        return P(None, None)
+    if leaf == "ln_f":
+        return P(None)
+    if leaf == "router":
+        return P(None, fs, None)
+    if leaf in ("w1", "w3"):
+        # dense: [L, D, F]; moe: [L, E, D, F]
+        return P(None, fs, None, "model") if _is_moe_leaf(path) else P(None, fs, "model")
+    if leaf == "w2":
+        return P(None, fs, "model", None) if _is_moe_leaf(path) else P(None, "model", fs)
+    if leaf in ("dw1", "dw3"):
+        return P(None, fs, "model")
+    if leaf == "dw2":
+        return P(None, "model", fs)
+    return P()
+
+
+_MOE_HINT = {"moe": False}
+
+
+def _is_moe_leaf(path: str) -> bool:
+    return _MOE_HINT["moe"]
+
+
+def tree_spec(tree, rule, mesh) -> Any:
+    """Map a path->spec rule over a pytree; returns NamedSharding tree.
+
+    Trims specs to leaf rank and DROPS any mesh axis that does not divide
+    the corresponding dimension (those leaves replicate on that axis) —
+    the divisibility guard that keeps odd sizes (offsets arrays, batch=1
+    decode, graph-level labels, PRNG keys) compiling.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        spec = rule(key, mesh)
+        shape = tuple(getattr(leaf, "shape", ()))
+        nd = len(shape)
+        parts = (list(spec) + [None] * nd)[:nd]
+        fixed = []
+        for dim, part in enumerate(parts):
+            if part is None:
+                fixed.append(None)
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            fixed.append(part if shape[dim] % total == 0 else None)
+        out.append(_named(mesh, P(*fixed)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def lm_state_sharding(state, mesh, *, is_moe: bool):
+    """Params + optimizer state (m/v follow params; scalars replicated)."""
+    _MOE_HINT["moe"] = is_moe
+
+    def rule(path, mesh):
+        if path.endswith("step"):
+            return P()
+        # strip opt-state prefixes so m/v reuse the param rule
+        p = path
+        for pre in ("opt_state/m/", "opt_state/v/", "opt_state/f/", "params/"):
+            if p.startswith(pre):
+                p = p[len(pre):]
+        return lm_param_spec(p, mesh)
+
+    return tree_spec(state, rule, mesh)
+
+
+def lm_batch_sharding(batch, mesh):
+    d = mesh_mod.data_axes(mesh)
+    rank = len(jax.tree.leaves(batch)[0].shape)
+
+    def rule(path, mesh):
+        # [accum, ubatch, seq] with grad accumulation, else [ubatch, seq]
+        return P(None, d) if rank == 3 else P(d)
+
+    return tree_spec(batch, rule, mesh)
+
+
+def lm_infer_batch_sharding(batch, mesh):
+    d = mesh_mod.data_axes(mesh)
+    return tree_spec(batch, lambda p, m: P(d), mesh)
+
+
+def lm_cache_sharding(cache, mesh, *, batch: int):
+    d = mesh_mod.data_axes(mesh)
+    n_data = 1
+    for a in d:
+        n_data *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+
+    def rule(path, mesh):
+        if path.endswith("pos"):
+            return P()
+        # [L, B, Hkv, S, Dh]: batch over data axes when divisible, cache
+        # sequence over 'model' (context-parallel decode)
+        bspec = d if batch % n_data == 0 else None
+        return P(None, bspec, None, "model", None)
+
+    return tree_spec(cache, rule, mesh)
+
+
+# ---------------------------------------------------------------------------
+# GNN / recsys
+# ---------------------------------------------------------------------------
+def gnn_batch_sharding(batch, mesh):
+    # §Perf iteration (graphcast×ogb_products): node/edge dim over ALL axes
+    # (data AND model) — GNN params are replicated, so the model axis would
+    # otherwise idle (measured 16× replicated compute on the 16×16 mesh).
+    d = mesh_mod.data_axes(mesh) + ("model",)
+
+    def rule(path, mesh):
+        leaf = path.split("/")[-1]
+        if leaf in ("n_graphs",):
+            return P()
+        return P(d)  # leading node/edge dim block-sharded
+
+    return tree_spec(batch, rule, mesh)
+
+
+def gnn_state_sharding(state, mesh):
+    # GNN params are small: replicate (grads all-reduce over data axes)
+    return tree_spec(state, lambda p, m: P(), mesh)
+
+
+def recsys_state_sharding(state, mesh):
+    def rule(path, mesh):
+        if path.endswith("table"):
+            return P("model", None)  # rows over model axis
+        if path.endswith("step"):
+            return P()
+        return P()
+
+    return tree_spec(state, rule, mesh)
+
+
+def recsys_batch_sharding(batch, mesh):
+    d = mesh_mod.data_axes(mesh)
+    return tree_spec(batch, lambda p, m: P(d), mesh)

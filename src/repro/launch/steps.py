@@ -1,0 +1,581 @@
+"""Cell programs: (arch × shape) -> step function + inputs + shardings.
+
+Three variants per cell:
+  * "full"  — the production program (scan over layers, grad-accum scan,
+              edge chunking): compile-success + memory_analysis gate.
+  * "cost1"/"cost2" — reduced-depth UNROLLED variants (1 / 2 layers,
+              accum=1, no chunk scan) whose cost_analysis extrapolates the
+              true per-step roofline terms (XLA counts while bodies once —
+              verified; launch/roofline.py does the linear extrapolation).
+  * reduced=True — tiny smoke configs with real arrays (CPU one-step tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import base as cfgbase
+from ..models.gnn import gcn as gcn_mod
+from ..models.gnn import graphcast as graphcast_mod
+from ..models.gnn import mace as mace_mod
+from ..models.gnn import schnet as schnet_mod
+from ..models.recsys import two_tower as tt_mod
+from ..models.transformer import config as tconfig
+from ..models.transformer import model as tmodel
+from ..sampling import neighbor
+from ..train import loop as train_loop
+from ..train import optimizer as opt_mod
+from . import shardings as shard_mod
+
+GNN_MODULES = {
+    "gcn": gcn_mod,
+    "schnet": schnet_mod,
+    "mace": mace_mod,
+    "graphcast": graphcast_mod,
+}
+
+OPT_CFG = opt_mod.OptimizerConfig(lr=1e-4, warmup_steps=10, total_steps=1000)
+OPT_CFG_BF16 = dataclasses.replace(OPT_CFG, state_dtype=jnp.bfloat16)
+
+# grad-accumulation microbatching for LM training (DESIGN.md §5)
+LM_TRAIN_ACCUM = 16
+
+
+@dataclasses.dataclass
+class CellProgram:
+    step_fn: Callable
+    args: tuple                   # pytrees (arrays if reduced, SDS otherwise)
+    in_shardings: Optional[tuple]
+    donate: tuple = ()
+    loop_correction: dict = dataclasses.field(default_factory=dict)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _sds_like(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+def _lm_cfg_variant(cfg: tconfig.TransformerConfig, variant: str):
+    if variant == "full":
+        return cfg
+    n = {"cost1": 1, "cost2": 2, "cost4": 4}[variant]
+    return dataclasses.replace(cfg, n_layers=n, scan_layers=False)
+
+
+def _lm_state(cfg, opt_cfg, *, concrete: bool):
+    def init():
+        params = tmodel.init_params(jax.random.PRNGKey(0), cfg)
+        return train_loop.init_state(params, opt_cfg)
+
+    if concrete:
+        return init()
+    return jax.eval_shape(init)
+
+
+def _lm_train_cell(cfg, shape, *, reduced, variant):
+    # §Perf iteration 3 (mistral-large): bf16 adam m/v for every LM train —
+    # frees 2 bytes/param of HBM (mistral peak 16.9 -> 15.0 GiB, fits v5e)
+    opt_cfg = OPT_CFG_BF16 if not reduced else OPT_CFG
+    if reduced:
+        cfg = dataclasses.replace(cfg, n_layers=2)
+        seq, gb, accum = 32, 4, 2
+    else:
+        cfg = _lm_cfg_variant(cfg, variant)
+        seq, gb = shape["seq_len"], shape["global_batch"]
+        accum = 1 if variant != "full" else LM_TRAIN_ACCUM
+    ub = max(gb // LM_TRAIN_ACCUM, 1) if not reduced else gb // accum
+
+    loss = functools.partial(tmodel.loss_fn, cfg=cfg)
+    step = train_loop.make_train_step(
+        lambda p, b: loss(p, b), opt_cfg, grad_accum=accum
+    )
+    state = _lm_state(cfg, opt_cfg, concrete=reduced)
+    tok_shape = (accum, ub, seq) if accum > 1 else (ub, seq)
+    if reduced:
+        key = jax.random.PRNGKey(1)
+        tokens = jax.random.randint(key, tok_shape, 0, cfg.vocab, jnp.int32)
+        batch = {"tokens": tokens, "labels": tokens}
+    else:
+        sds = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+        batch = {"tokens": sds, "labels": sds}
+    return CellProgram(
+        step_fn=step,
+        args=(state, batch),
+        in_shardings=None,
+        donate=(0,),
+        loop_correction={
+            "kind": "lm_train",
+            "n_layers": int(_orig_layers(cfg, variant, reduced)),
+            "accum": LM_TRAIN_ACCUM,
+        },
+        meta={"cfg": cfg, "tokens_per_step": gb * seq},
+    )
+
+
+def _orig_layers(cfg, variant, reduced):
+    return cfg.n_layers  # caller passes the already-variant cfg; roofline
+    # uses the FULL config's layer count from the registry instead.
+
+
+def _lm_prefill_cell(cfg, shape, *, reduced, variant):
+    if reduced:
+        cfg = dataclasses.replace(cfg, n_layers=2)
+        seq, b = 32, 2
+    else:
+        cfg = _lm_cfg_variant(cfg, variant)
+        seq, b = shape["seq_len"], shape["global_batch"]
+
+    def step(params, tokens):
+        logits, _ = tmodel.forward(params, tokens, cfg)
+        return logits
+
+    if reduced:
+        params = tmodel.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(1), (b, seq), 0, cfg.vocab, jnp.int32
+        )
+    else:
+        params = jax.eval_shape(
+            lambda: tmodel.init_params(jax.random.PRNGKey(0), cfg)
+        )
+        tokens = jax.ShapeDtypeStruct((b, seq), jnp.int32)
+    return CellProgram(
+        step_fn=step,
+        args=(params, tokens),
+        in_shardings=None,
+        loop_correction={"kind": "lm_prefill"},
+        meta={"cfg": cfg},
+    )
+
+
+def _lm_decode_cell(cfg, shape, *, reduced, variant):
+    if reduced:
+        cfg = dataclasses.replace(cfg, n_layers=2)
+        seq, b = 64, 2
+    else:
+        cfg = _lm_cfg_variant(cfg, variant)
+        seq, b = shape["seq_len"], shape["global_batch"]
+
+    def step(params, cache, tokens):
+        return tmodel.decode_step(params, cache, tokens, cfg)
+
+    if reduced:
+        params = tmodel.init_params(jax.random.PRNGKey(0), cfg)
+        cache = tmodel.init_cache(cfg, b, seq)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (b, 1), 0, cfg.vocab)
+    else:
+        params = jax.eval_shape(
+            lambda: tmodel.init_params(jax.random.PRNGKey(0), cfg)
+        )
+        cache = tmodel.cache_shapes(cfg, b, seq)
+        tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return CellProgram(
+        step_fn=step,
+        args=(params, cache, tokens),
+        in_shardings=None,
+        donate=(1,),
+        loop_correction={"kind": "lm_decode"},
+        meta={"cfg": cfg, "batch": b, "cache_len": seq},
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+def _gnn_graph_arrays(model: str, cfg, n, e, d_feat, *, reduced, n_graphs=1):
+    """Synthetic padded graph batch (arrays when reduced, SDS otherwise)."""
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if not reduced else None
+
+    def arr(shape, dtype, gen):
+        if mk:
+            return mk(shape, dtype)
+        return gen()
+
+    rng = np.random.default_rng(0)
+    g = {
+        "edge_src": arr((e,), jnp.int32, lambda: jnp.asarray(rng.integers(0, n, e), jnp.int32)),
+        "edge_dst": arr((e,), jnp.int32, lambda: jnp.asarray(rng.integers(0, n, e), jnp.int32)),
+    }
+    if model in ("mace", "schnet"):
+        g["node_feat"] = arr((n,), jnp.int32, lambda: jnp.asarray(rng.integers(0, 10, n), jnp.int32))
+        g["positions"] = arr((n, 3), jnp.float32, lambda: jnp.asarray(rng.standard_normal((n, 3)) * 3, jnp.float32))
+        g["graph_ids"] = arr((n,), jnp.int32, lambda: jnp.asarray(np.minimum(np.arange(n) * n_graphs // max(n, 1), n_graphs - 1), jnp.int32))
+        g["labels"] = arr((n_graphs,), jnp.float32, lambda: jnp.asarray(rng.standard_normal(n_graphs), jnp.float32))
+    elif model == "graphcast":
+        nv = cfg.n_vars
+        g["node_feat"] = arr((n, nv), jnp.float32, lambda: jnp.asarray(rng.standard_normal((n, nv)), jnp.float32))
+        g["positions"] = arr((n, 3), jnp.float32, lambda: jnp.asarray(rng.standard_normal((n, 3)), jnp.float32))
+        g["labels"] = arr((n, nv), jnp.float32, lambda: jnp.asarray(rng.standard_normal((n, nv)), jnp.float32))
+    else:  # gcn
+        g["node_feat"] = arr((n, d_feat), jnp.float32, lambda: jnp.asarray(rng.standard_normal((n, d_feat)), jnp.float32))
+        g["labels"] = arr((n,), jnp.int32, lambda: jnp.asarray(rng.integers(0, cfg.n_classes, n), jnp.int32))
+    return g
+
+
+def _gnn_train_cell(entry, cfg, shape, *, reduced, variant):
+    mod = GNN_MODULES[entry.model]
+    kind = shape["kind"]
+    pad512 = lambda x: -(-x // 512) * 512
+    if reduced:
+        n, e, d_feat, n_graphs = 48, 160, getattr(cfg, "d_in", 16), 4
+    elif kind == "batched":
+        n_graphs = shape["batch"]
+        n = shape["n_nodes"] * n_graphs
+        e = shape["n_edges"] * n_graphs
+        d_feat = getattr(cfg, "d_in", 16)
+    else:
+        # pad node/edge counts to 512 so vertex blocks shard evenly
+        # (pow-2/page rounding — core.alloc policy applied to shapes)
+        n, e = pad512(shape["n_nodes"]), pad512(shape["n_edges"])
+        d_feat = shape.get("d_feat", getattr(cfg, "d_in", 16))
+        n_graphs = 1
+    if entry.model == "gcn" and not reduced and kind != "batched":
+        cfg = dataclasses.replace(cfg, d_in=d_feat)
+    if entry.model == "graphcast" and not reduced and e > 2_000_000:
+        cfg = dataclasses.replace(cfg, remat=True, bf16=True)
+    if entry.model == "mace" and variant.startswith("chunk"):
+        # two-point chunk variants for roofline extrapolation of the
+        # scan-counted density body (launch/roofline.py)
+        cfg = dataclasses.replace(cfg, edge_chunks=int(variant[5:]))
+    elif entry.model == "mace" and e > 2_000_000 and variant == "full":
+        cfg = dataclasses.replace(cfg, edge_chunks=64)
+
+    loss = functools.partial(mod.loss_fn, cfg=cfg)
+    # n_graphs is a STATIC segment count — injected via closure, never traced
+    if entry.model in ("mace", "schnet"):
+        step = train_loop.make_train_step(
+            lambda p, b: loss(p, {**b, "n_graphs": n_graphs}), OPT_CFG
+        )
+    else:
+        step = train_loop.make_train_step(lambda p, b: loss(p, b), OPT_CFG)
+    if reduced:
+        params = mod.init_params(jax.random.PRNGKey(0), cfg)
+        state = train_loop.init_state(params, OPT_CFG)
+    else:
+        state = jax.eval_shape(
+            lambda: train_loop.init_state(
+                mod.init_params(jax.random.PRNGKey(0), cfg), OPT_CFG
+            )
+        )
+    g = _gnn_graph_arrays(entry.model, cfg, n, e, d_feat, reduced=reduced, n_graphs=n_graphs)
+    lc = {"kind": "gnn"}
+    if getattr(cfg, "edge_chunks", 0) > 1:
+        lc = {"kind": "gnn_chunked", "chunks": cfg.edge_chunks, "layers": cfg.n_layers}
+    return CellProgram(
+        step_fn=step,
+        args=(state, g),
+        in_shardings=None,
+        donate=(0,),
+        loop_correction=lc,
+        meta={"cfg": cfg, "n": n, "e": e},
+    )
+
+
+def _gnn_sampled_cell(entry, cfg, shape, *, reduced, variant):
+    """minibatch_lg: in-step fanout sampling from the big CSR."""
+    mod = GNN_MODULES[entry.model]
+    if reduced:
+        n, e, seeds_n, fanout = 64, 256, 4, (3, 2)
+        d_feat = getattr(cfg, "d_in", 16)
+    else:
+        pad512 = lambda x: -(-x // 512) * 512
+        n, e = pad512(shape["n_nodes"]), pad512(shape["n_edges"])
+        seeds_n, fanout = shape["batch_nodes"], tuple(shape["fanout"])
+        d_feat = getattr(cfg, "d_in", 100)
+    if entry.model == "gcn":
+        cfg = dataclasses.replace(cfg, d_in=d_feat)
+    elif entry.model == "graphcast":
+        d_feat = cfg.n_vars  # encoder consumes the physical variables
+    sizes = neighbor.flat_sizes(seeds_n, fanout)
+    n_sub = sum(sizes)
+
+    def build_subgraph(offsets, dst, seeds, key, node_feat, positions, labels):
+        blocks, layers, masks = neighbor.sample_subgraph(key, offsets, dst, seeds, fanout)
+        nodes = jnp.concatenate(layers)                      # [n_sub] global ids
+        off = np.cumsum([0] + sizes)
+        es, ed, ems = [], [], []
+        for h, blk in enumerate(blocks):
+            es.append(off[h + 1] + blk.edge_src)
+            ed.append(off[h] + blk.edge_dst)
+            ems.append(blk.mask)
+        esrc = jnp.concatenate(es)
+        edst = jnp.concatenate(ed)
+        em = jnp.concatenate(ems)
+        esrc = jnp.where(em, esrc, n_sub)
+        edst = jnp.where(em, edst, n_sub)
+        g = {"edge_src": esrc, "edge_dst": edst}
+        if entry.model in ("mace", "schnet"):
+            g["node_feat"] = node_feat[jnp.clip(nodes, 0, n - 1)]
+            g["positions"] = positions[jnp.clip(nodes, 0, n - 1)]
+            g["graph_ids"] = jnp.zeros((n_sub,), jnp.int32)
+            g["n_graphs"] = 1
+            g["labels"] = jnp.zeros((1,), jnp.float32)
+        elif entry.model == "graphcast":
+            g["node_feat"] = node_feat[jnp.clip(nodes, 0, n - 1)]
+            g["positions"] = positions[jnp.clip(nodes, 0, n - 1)]
+            g["labels"] = labels[jnp.clip(nodes, 0, n - 1)]
+        else:
+            g["node_feat"] = node_feat[jnp.clip(nodes, 0, n - 1)]
+            lab = labels[jnp.clip(nodes, 0, n - 1)]
+            # supervise seeds only
+            seed_mask = jnp.arange(n_sub) < seeds_n
+            g["labels"] = jnp.where(seed_mask, lab, -1)
+        return g
+
+    loss = functools.partial(mod.loss_fn, cfg=cfg)
+
+    def step(state, batch):
+        g = build_subgraph(
+            batch["offsets"], batch["dst"], batch["seeds"], batch["key"],
+            batch["node_feat"], batch.get("positions"), batch["labels"],
+        )
+        inner = train_loop.make_train_step(lambda p, b: loss(p, b), OPT_CFG)
+        return inner(state, g)
+
+    if reduced:
+        params = mod.init_params(jax.random.PRNGKey(0), cfg)
+        state = train_loop.init_state(params, OPT_CFG)
+        rng = np.random.default_rng(0)
+        src_np = rng.integers(0, n, e)
+        order = np.argsort(src_np)
+        counts = np.bincount(src_np, minlength=n)
+        offsets = np.zeros(n + 1, np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        batch = {
+            "offsets": jnp.asarray(offsets, jnp.int32),
+            "dst": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+            "seeds": jnp.asarray(rng.integers(0, n, seeds_n), jnp.int32),
+            "key": jax.random.PRNGKey(7),
+            "node_feat": jnp.asarray(rng.standard_normal((n, d_feat)), jnp.float32)
+            if entry.model not in ("mace", "schnet")
+            else jnp.asarray(rng.integers(0, 10, n), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, getattr(cfg, "n_classes", 2), n), jnp.int32)
+            if entry.model == "gcn"
+            else jnp.asarray(rng.standard_normal((n, getattr(cfg, "n_vars", 1))) if entry.model == "graphcast" else rng.standard_normal(n), jnp.float32),
+        }
+        if entry.model in ("mace", "schnet", "graphcast"):
+            batch["positions"] = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    else:
+        state = jax.eval_shape(
+            lambda: train_loop.init_state(
+                mod.init_params(jax.random.PRNGKey(0), cfg), OPT_CFG
+            )
+        )
+        nf = (
+            jax.ShapeDtypeStruct((n, d_feat), jnp.float32)
+            if entry.model not in ("mace", "schnet")
+            else jax.ShapeDtypeStruct((n,), jnp.int32)
+        )
+        lab = (
+            jax.ShapeDtypeStruct((n,), jnp.int32)
+            if entry.model == "gcn"
+            else jax.ShapeDtypeStruct(
+                (n, getattr(cfg, "n_vars", 1)) if entry.model == "graphcast" else (n,),
+                jnp.float32,
+            )
+        )
+        batch = {
+            "offsets": jax.ShapeDtypeStruct((n + 1,), jnp.int32),
+            "dst": jax.ShapeDtypeStruct((e,), jnp.int32),
+            "seeds": jax.ShapeDtypeStruct((seeds_n,), jnp.int32),
+            "key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+            "node_feat": nf,
+            "labels": lab,
+        }
+        if entry.model in ("mace", "schnet", "graphcast"):
+            batch["positions"] = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+    return CellProgram(
+        step_fn=step,
+        args=(state, batch),
+        in_shardings=None,
+        donate=(0,),
+        loop_correction={"kind": "gnn"},
+        meta={"cfg": cfg, "n_sub": n_sub},
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys family
+# ---------------------------------------------------------------------------
+def _recsys_cell(cfg, shape, *, reduced, variant):
+    kind = shape["kind"]
+    if reduced:
+        b, ncand = 8, 64
+    else:
+        b = shape["batch"]
+        ncand = shape.get("n_candidates", 0)
+    nf_u, nf_i, k = cfg.n_user_fields, cfg.n_item_fields, cfg.bag_size
+
+    def mk_bags(n, nf):
+        if reduced:
+            rng = np.random.default_rng(0)
+            return jnp.asarray(
+                rng.integers(-1, cfg.n_items, (n, nf, k)), jnp.int32
+            )
+        return jax.ShapeDtypeStruct((n, nf, k), jnp.int32)
+
+    if kind == "train":
+        loss = functools.partial(tt_mod.loss_fn, cfg=cfg)
+        step = train_loop.make_train_step(lambda p, bb: loss(p, bb), OPT_CFG)
+        if reduced:
+            params = tt_mod.init_params(jax.random.PRNGKey(0), cfg)
+            state = train_loop.init_state(params, OPT_CFG)
+        else:
+            state = jax.eval_shape(
+                lambda: train_loop.init_state(
+                    tt_mod.init_params(jax.random.PRNGKey(0), cfg), OPT_CFG
+                )
+            )
+        batch = {
+            "user_bags": mk_bags(b, nf_u),
+            "item_bags": mk_bags(b, nf_i),
+            "item_logq": jnp.zeros((b,), jnp.float32)
+            if reduced
+            else jax.ShapeDtypeStruct((b,), jnp.float32),
+        }
+        return CellProgram(
+            step_fn=step, args=(state, batch), in_shardings=None, donate=(0,),
+            loop_correction={"kind": "recsys"}, meta={"cfg": cfg},
+        )
+
+    params = (
+        tt_mod.init_params(jax.random.PRNGKey(0), cfg)
+        if reduced
+        else jax.eval_shape(lambda: tt_mod.init_params(jax.random.PRNGKey(0), cfg))
+    )
+    if kind == "serve":
+        def step(p, batch):
+            return tt_mod.serve_step(p, batch, cfg)
+
+        batch = {"user_bags": mk_bags(b, nf_u), "item_bags": mk_bags(b, nf_i)}
+        return CellProgram(
+            step_fn=step, args=(params, batch), in_shardings=None,
+            loop_correction={"kind": "recsys"}, meta={"cfg": cfg},
+        )
+    # retrieval: 1 query vs n_candidates
+    def step(p, batch):
+        return tt_mod.score_candidates(p, batch["user_bags"], batch["cand_bags"], cfg)
+
+    batch = {"user_bags": mk_bags(1, nf_u), "cand_bags": mk_bags(ncand, nf_i)}
+    return CellProgram(
+        step_fn=step, args=(params, batch), in_shardings=None,
+        loop_correction={"kind": "recsys"}, meta={"cfg": cfg},
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch + sharding attach
+# ---------------------------------------------------------------------------
+def build_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    reduced: bool = False,
+    variant: str = "full",
+    data_axes: tuple = (),
+) -> CellProgram:
+    entry = cfgbase.get(arch)
+    shape = cfgbase.FAMILY_SHAPES[entry.family][shape_name]
+    cfg = entry.smoke if reduced else entry.full
+    if data_axes and not reduced:
+        # activation sharding constraints (models/sharding_utils.py)
+        if entry.family == "lm":
+            cfg = dataclasses.replace(cfg, batch_axes=tuple(data_axes), tp_axis="model")
+        elif entry.family == "gnn":
+            cfg = dataclasses.replace(cfg, shard_axes=tuple(data_axes) + ("model",))
+        else:
+            cfg = dataclasses.replace(cfg, shard_axes=tuple(data_axes))
+    if entry.family == "lm":
+        kind = shape["kind"]
+        if kind == "train":
+            cell = _lm_train_cell(cfg, shape, reduced=reduced, variant=variant)
+        elif kind == "prefill":
+            cell = _lm_prefill_cell(cfg, shape, reduced=reduced, variant=variant)
+        else:
+            cell = _lm_decode_cell(cfg, shape, reduced=reduced, variant=variant)
+        cell.loop_correction["full_layers"] = entry.full.n_layers
+        return cell
+    if entry.family == "gnn":
+        if shape["kind"] == "sampled":
+            return _gnn_sampled_cell(entry, cfg, shape, reduced=reduced, variant=variant)
+        return _gnn_train_cell(entry, cfg, shape, reduced=reduced, variant=variant)
+    return _recsys_cell(cfg, shape, reduced=reduced, variant=variant)
+
+
+def build_opt_cell(arch: str, *, variant: str = "cost1") -> CellProgram:
+    """Optimizer-apply-only program (LM): separates optimizer flops/bytes
+    from fwd/bwd so grad-accum scaling in roofline extrapolation is exact."""
+    entry = cfgbase.get(arch)
+    cfg = _lm_cfg_variant(entry.full, variant.replace("opt", "cost"))
+    opt_cfg = OPT_CFG_BF16
+    state = _lm_state(cfg, opt_cfg, concrete=False)
+    grads = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), state["params"]
+    )
+
+    def step(state, grads):
+        new_params, new_opt, _ = opt_mod.update(
+            grads, state["opt_state"], state["params"], opt_cfg
+        )
+        return {"params": new_params, "opt_state": new_opt}
+
+    return CellProgram(
+        step_fn=step,
+        args=(state, grads),
+        in_shardings=None,
+        donate=(0,),
+        loop_correction={"kind": "lm_opt", "full_layers": entry.full.n_layers},
+        meta={"cfg": cfg},
+    )
+
+
+def attach_shardings(cell: CellProgram, mesh, arch: str, shape_name: str):
+    """NamedShardings for the cell's args on the given mesh."""
+    entry = cfgbase.get(arch)
+    shape = cfgbase.FAMILY_SHAPES[entry.family][shape_name]
+    args = cell.args
+    if entry.family == "lm":
+        kind = shape["kind"]
+        if kind == "train":
+            state_s = shard_mod.lm_state_sharding(
+                args[0], mesh, is_moe=entry.full.moe is not None
+            )
+            batch_s = shard_mod.lm_batch_sharding(args[1], mesh)
+            return (state_s, batch_s)
+        if kind == "prefill":
+            shard_mod._MOE_HINT["moe"] = entry.full.moe is not None
+            p_s = shard_mod.tree_spec(
+                args[0], lambda p, m: shard_mod.lm_param_spec(p, m), mesh
+            )
+            t_s = shard_mod.lm_infer_batch_sharding(args[1], mesh)
+            return (p_s, t_s)
+        # decode
+        shard_mod._MOE_HINT["moe"] = entry.full.moe is not None
+        p_s = shard_mod.tree_spec(
+            args[0], lambda p, m: shard_mod.lm_param_spec(p, m), mesh
+        )
+        c_s = shard_mod.lm_cache_sharding(args[1], mesh, batch=shape["global_batch"])
+        t_s = shard_mod.lm_infer_batch_sharding(args[2], mesh)
+        return (p_s, c_s, t_s)
+    if entry.family == "gnn":
+        state_s = shard_mod.gnn_state_sharding(args[0], mesh)
+        batch_s = shard_mod.gnn_batch_sharding(args[1], mesh)
+        return (state_s, batch_s)
+    # recsys
+    if len(args) == 2 and isinstance(args[0], dict) and "opt_state" in args[0]:
+        state_s = shard_mod.recsys_state_sharding(args[0], mesh)
+        batch_s = shard_mod.recsys_batch_sharding(args[1], mesh)
+        return (state_s, batch_s)
+    p_s = shard_mod.recsys_state_sharding(args[0], mesh)
+    b_s = shard_mod.recsys_batch_sharding(args[1], mesh)
+    return (p_s, b_s)

@@ -1,0 +1,76 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) — gcn-cora config.
+
+Ĥ = σ( D̃^{-1/2} Ã D̃^{-1/2} H W ) via gather + segment_sum; the SpMM is
+exactly the paper's traversal primitive, so the dynamic-update benchmarks
+run GCN forward passes on updated graphs (paper §4.2.5 analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .. import sharding_utils as su
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_in: int = 1433
+    n_classes: int = 7
+    aggregator: str = "mean"
+    norm: str = "sym"
+    dropout: float = 0.5
+    shard_axes: tuple = ()   # mesh axes for node/edge dim-0 sharding
+
+
+def init_params(key, cfg: GCNConfig):
+    sizes = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    layers = []
+    for i in range(cfg.n_layers):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (sizes[i], sizes[i + 1]), jnp.float32) / (
+            sizes[i] ** 0.5
+        )
+        layers.append({"w": w, "b": jnp.zeros((sizes[i + 1],), jnp.float32)})
+    return {"layers": layers}
+
+
+def forward(params, g: dict, cfg: GCNConfig):
+    """g: {node_feat [N,F], edge_src [E], edge_dst [E]} (+self-loops added)."""
+    x = g["node_feat"].astype(jnp.float32)
+    n = x.shape[0]
+    src, dst = g["edge_src"], g["edge_dst"]
+    deg = jax.ops.segment_sum(
+        jnp.ones(src.shape[0], jnp.float32), jnp.minimum(dst, n), num_segments=n + 1
+    )[:n] + 1.0
+    inv_sqrt = jax.lax.rsqrt(deg)
+    x = su.maybe_constrain(x, cfg.shard_axes)
+    for i, lp in enumerate(params["layers"]):
+        h = x @ lp["w"] + lp["b"]
+        if cfg.norm == "sym":
+            msg = common.gather(h * inv_sqrt[:, None], src)
+            agg = common.aggregate(msg, dst, n) * inv_sqrt[:, None]
+            agg = agg + h / deg[:, None]  # self loop
+        else:
+            msg = common.gather(h, src)
+            agg = common.aggregate(msg, dst, n, mode=cfg.aggregator) + h
+        x = jax.nn.relu(agg) if i < len(params["layers"]) - 1 else agg
+        x = su.maybe_constrain(x, cfg.shard_axes)
+    return x
+
+
+def loss_fn(params, g: dict, cfg: GCNConfig):
+    logits = forward(params, g, cfg)
+    labels = g["labels"]
+    mask = labels >= 0
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[:, None], axis=-1
+    )[:, 0]
+    ce = jnp.where(mask, lse - gold, 0.0).sum() / jnp.maximum(mask.sum(), 1)
+    return ce, {"ce": ce}

@@ -1,0 +1,227 @@
+"""MACE (arXiv:2206.07697): higher-order E(3)-equivariant message passing,
+l_max=2, correlation order 3 — in **Cartesian tensor form**.
+
+Hardware adaptation (DESIGN.md §2): spherical-harmonic irrep bookkeeping
+(l,m) indexing + CG tables) maps poorly onto the MXU; for l_max ≤ 2 the
+irreps are exactly {scalar, vector, traceless-symmetric matrix}, and every
+Clebsch-Gordan coupling is a classical vector/tensor product:
+
+    0⊗0→0: s·s      1⊗1→0: v·v        2⊗2→0: T:T
+    0⊗1→1: s·v      1⊗1→1: v×v        2⊗1→1: T·v
+    1⊗1→2: sym₀(v⊗v)  0⊗2→2: s·T      2⊗2→2: sym₀(T·T)
+
+All are einsums → MXU-friendly, equivariant by construction.  The ACE
+density A is built per edge from radial (Bessel) × angular (r̂ tensors) ×
+neighbor features; the product basis B applies the coupling table
+recursively to correlation order 3; readout takes invariant (scalar)
+channels.  Energy is extensive (sum of site energies); forces come from
+jax.grad and are equivariant by composition (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .. import sharding_utils as su
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128          # channels per irrep
+    l_max: int = 2
+    correlation_order: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 100
+    # edge-chunked density aggregation: bounds the per-edge rank-2 tensor
+    # working set to chunk·C·9 floats (needed for 10⁷–10⁸-edge graphs);
+    # 0 = unchunked.  The aggregation is linear in edges, so chunking is
+    # exact — it is remat over the edge axis.
+    edge_chunks: int = 0
+    shard_axes: tuple = ()   # mesh axes for node/edge dim-0 sharding
+
+
+# --- Cartesian irrep algebra -------------------------------------------------
+def sym0(t):
+    """Symmetric traceless part of [..., 3, 3]."""
+    s = 0.5 * (t + jnp.swapaxes(t, -1, -2))
+    tr = jnp.trace(s, axis1=-2, axis2=-1)[..., None, None]
+    return s - tr * jnp.eye(3) / 3.0
+
+
+def pairwise_product(a, b, w):
+    """All CG couplings of feature dicts a,b -> feature dict.
+
+    a,b: {"s":[...,C], "v":[...,C,3], "t":[...,C,3,3]}; w: per-path
+    per-channel weights {"path_name": [C]}.
+    """
+    s = (
+        w["ss_s"] * a["s"] * b["s"]
+        + w["vv_s"] * jnp.einsum("...ci,...ci->...c", a["v"], b["v"])
+        + w["tt_s"] * jnp.einsum("...cij,...cij->...c", a["t"], b["t"])
+    )
+    v = (
+        w["sv_v"][:, None] * a["s"][..., None] * b["v"]
+        + w["vs_v"][:, None] * b["s"][..., None] * a["v"]
+        + w["vv_v"][:, None] * jnp.cross(a["v"], b["v"])
+        + w["tv_v"][:, None] * jnp.einsum("...cij,...cj->...ci", a["t"], b["v"])
+        + w["vt_v"][:, None] * jnp.einsum("...cij,...cj->...ci", b["t"], a["v"])
+    )
+    t = (
+        w["vv_t"][:, None, None] * sym0(jnp.einsum("...ci,...cj->...cij", a["v"], b["v"]))
+        + w["st_t"][:, None, None] * a["s"][..., None, None] * b["t"]
+        + w["ts_t"][:, None, None] * b["s"][..., None, None] * a["t"]
+        + w["tt_t"][:, None, None] * sym0(jnp.einsum("...cik,...ckj->...cij", a["t"], b["t"]))
+    )
+    return {"s": s, "v": v, "t": t}
+
+
+_PATHS = ["ss_s", "vv_s", "tt_s", "sv_v", "vs_v", "vv_v", "tv_v", "vt_v",
+          "vv_t", "st_t", "ts_t", "tt_t"]
+
+
+def _init_path_weights(key, c):
+    keys = jax.random.split(key, len(_PATHS))
+    return {p: jax.random.normal(k, (c,), jnp.float32) * 0.5 for p, k in zip(_PATHS, keys)}
+
+
+def bessel_basis(r, cfg: MACEConfig):
+    n = jnp.arange(1, cfg.n_rbf + 1, dtype=jnp.float32)
+    rc = cfg.cutoff
+    rs = jnp.maximum(r, 1e-6)[:, None]
+    basis = jnp.sqrt(2.0 / rc) * jnp.sin(n * jnp.pi * rs / rc) / rs
+    # polynomial cutoff envelope (p=6)
+    u = jnp.clip(r / rc, 0, 1)[:, None]
+    env = 1 - 28 * u**6 + 48 * u**7 - 21 * u**8
+    return basis * env
+
+
+def init_params(key, cfg: MACEConfig):
+    c = cfg.d_hidden
+    keys = jax.random.split(key, 4 + cfg.n_layers * 8)
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.n_species, c), jnp.float32) * 0.3,
+        "layers": [],
+        "readout": common.init_mlp(keys[1], [c, c // 2, 1]),
+    }
+    ki = 2
+    for _ in range(cfg.n_layers):
+        lp = {
+            # radial MLP -> per-channel weights for the 3 A-paths
+            "radial": common.init_mlp(keys[ki], [cfg.n_rbf, 32, 3 * c]),
+            "mix_s": jax.random.normal(keys[ki + 1], (c, c), jnp.float32) / c**0.5,
+            "mix_v": jax.random.normal(keys[ki + 2], (c, c), jnp.float32) / c**0.5,
+            "mix_t": jax.random.normal(keys[ki + 3], (c, c), jnp.float32) / c**0.5,
+            "prod2": _init_path_weights(keys[ki + 4], c),
+            "prod3": _init_path_weights(keys[ki + 5], c),
+            "res": jax.random.normal(keys[ki + 6], (c, c), jnp.float32) / c**0.5,
+            "layer_readout": common.init_mlp(keys[ki + 7], [c, 1]),
+        }
+        params["layers"].append(lp)
+        ki += 8
+    return params
+
+
+def forward(params, g: dict, cfg: MACEConfig):
+    """g: {node_feat [N] species, positions [N,3], edge_src, edge_dst,
+    graph_ids?, n_graphs?} -> per-graph energies."""
+    species = g["node_feat"].astype(jnp.int32)
+    pos = g["positions"].astype(jnp.float32)
+    src, dst = g["edge_src"], g["edge_dst"]
+    n = pos.shape[0]
+    c = cfg.d_hidden
+
+    h = {
+        "s": params["embed"][jnp.clip(species, 0, params["embed"].shape[0] - 1)],
+        "v": jnp.zeros((n, c, 3), jnp.float32),
+        "t": jnp.zeros((n, c, 3, 3), jnp.float32),
+    }
+    energies = jnp.zeros((n,), jnp.float32)
+
+    def density(lp, h, src_e, dst_e):
+        """A-density contribution of an edge set (exact; linear in edges)."""
+        rel = common.gather(pos, src_e) - common.gather(pos, dst_e)
+        emask = ((src_e < n) & (dst_e < n)).astype(jnp.float32)
+        r = jnp.sqrt(jnp.sum(rel * rel, -1) + 1e-12)
+        rhat = rel / jnp.maximum(r, 1e-6)[:, None]
+        y1 = rhat
+        y2 = sym0(jnp.einsum("ei,ej->eij", rhat, rhat)[:, None])[:, 0]
+        rbf = bessel_basis(r, cfg) * emask[:, None]
+        rw = common.mlp(lp["radial"], rbf).reshape(-1, 3, c)
+        hs = common.gather(h["s"], src_e)
+        hv = common.gather(h["v"], src_e)
+        ht = common.gather(h["t"], src_e)
+        a_s = rw[:, 0] * hs
+        a_v = rw[:, 1][..., None] * (hs[..., None] * y1[:, None, :] + hv)
+        a_t = rw[:, 2][..., None, None] * (hs[..., None, None] * y2[:, None] + ht)
+        sx = cfg.shard_axes
+        return {
+            "s": su.maybe_constrain(common.aggregate(a_s, dst_e, n), sx),
+            "v": su.maybe_constrain(common.aggregate(a_v, dst_e, n), sx),
+            "t": su.maybe_constrain(common.aggregate(a_t, dst_e, n), sx),
+        }
+
+    for lp in params["layers"]:
+        if cfg.edge_chunks > 1:
+            e_total = src.shape[0]
+            ck = -(-e_total // cfg.edge_chunks)
+            pad = cfg.edge_chunks * ck - e_total
+            src_p = jnp.concatenate([src, jnp.full((pad,), n, src.dtype)])
+            dst_p = jnp.concatenate([dst, jnp.full((pad,), n, dst.dtype)])
+            src_c = src_p.reshape(cfg.edge_chunks, ck)
+            dst_c = dst_p.reshape(cfg.edge_chunks, ck)
+
+            def body(acc, sd):
+                contrib = density(lp, h, sd[0], sd[1])
+                return jax.tree.map(jnp.add, acc, contrib), None
+
+            zero = {
+                "s": jnp.zeros((n, c), jnp.float32),
+                "v": jnp.zeros((n, c, 3), jnp.float32),
+                "t": jnp.zeros((n, c, 3, 3), jnp.float32),
+            }
+            agg, _ = jax.lax.scan(body, zero, (src_c, dst_c))
+        else:
+            agg = density(lp, h, src, dst)
+        # channel mixing
+        A = {
+            "s": agg["s"] @ lp["mix_s"],
+            "v": jnp.einsum("nci,cd->ndi", agg["v"], lp["mix_v"]),
+            "t": jnp.einsum("ncij,cd->ndij", agg["t"], lp["mix_t"]),
+        }
+        # product basis: correlation order 2 and 3
+        B2 = pairwise_product(A, A, lp["prod2"])
+        B3 = pairwise_product(B2, A, lp["prod3"])
+        h = {
+            "s": su.maybe_constrain(h["s"] @ lp["res"] + A["s"] + B2["s"] + B3["s"], cfg.shard_axes),
+            "v": su.maybe_constrain(A["v"] + B2["v"] + B3["v"], cfg.shard_axes),
+            "t": su.maybe_constrain(A["t"] + B2["t"] + B3["t"], cfg.shard_axes),
+        }
+        energies = energies + common.mlp(lp["layer_readout"], h["s"])[:, 0]
+    energies = energies + common.mlp(params["readout"], h["s"])[:, 0]
+    gid = g.get("graph_ids")
+    if gid is None:
+        return energies.sum(keepdims=True)
+    ng = int(g["n_graphs"])
+    return jax.ops.segment_sum(energies, jnp.minimum(gid, ng), num_segments=ng + 1)[:ng]
+
+
+def loss_fn(params, g: dict, cfg: MACEConfig):
+    energy = forward(params, g, cfg)
+    target = g["labels"].astype(jnp.float32)
+    mse = jnp.mean((energy - target) ** 2)
+    return mse, {"mse": mse}
+
+
+def forces(params, g: dict, cfg: MACEConfig):
+    """F = -∂E/∂pos (equivariance tested in tests/test_models.py)."""
+
+    def e_of_pos(p):
+        return forward(params, {**g, "positions": p}, cfg).sum()
+
+    return -jax.grad(e_of_pos)(g["positions"].astype(jnp.float32))

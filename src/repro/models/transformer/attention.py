@@ -1,0 +1,97 @@
+"""Attention implementations: ref (dense scores), blocked (XLA online
+softmax — the dry-run/compile path with flash-like memory), flash (Pallas).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels.flash_attention import ops as fa_ops
+
+NEG_INF = -1e30
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding; x [..., S, H, Dh], positions [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def ref_attention(q, k, v, *, causal=True, window=0):
+    """Dense-score attention (small shapes / tests)."""
+    return fa_ops.attention_reference(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block"))
+def blocked_attention(q, k, v, *, causal=True, window=0, block=512):
+    """Online-softmax attention as an XLA scan over KV blocks.
+
+    Memory O(S·block) like flash attention; expresses the same schedule in
+    pure jnp so the multi-pod dry-run lowers/costs it faithfully on any
+    backend.  Fully-masked blocks still execute (uniform scan) — the Pallas
+    kernel's @pl.when skip is the TPU upgrade (§Perf).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    nb = skv // block
+    assert skv % block == 0
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    k_blocks = k.reshape(b, hkv, nb, block, d).transpose(2, 0, 1, 3, 4)
+    v_blocks = v.reshape(b, hkv, nb, block, d).transpose(2, 0, 1, 3, 4)
+    q_ids = jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, kb_idx = xs
+        kk = jnp.repeat(kb.astype(jnp.float32), group, axis=1)  # [B,Hq,bk,D]
+        vv = jnp.repeat(vb.astype(jnp.float32), group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kk)
+        k_ids = kb_idx * block + jnp.arange(block)
+        mask = jnp.ones((sq, block), bool)
+        if causal:
+            mask &= k_ids[None, :] <= q_ids[:, None]
+        if window > 0:
+            mask &= k_ids[None, :] > q_ids[:, None] - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (k_blocks, v_blocks, jnp.arange(nb))
+    )
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl="blocked", causal=True, window=0, block=512):
+    if impl == "ref" or q.shape[2] <= block:
+        return ref_attention(q, k, v, causal=causal, window=window)
+    if impl == "blocked":
+        return blocked_attention(q, k, v, causal=causal, window=window, block=block)
+    if impl == "flash":
+        return fa_ops.attention(
+            q, k, v, causal=causal, window=window, block_q=block, block_k=block
+        )
+    raise ValueError(impl)
+
+
+decode_attention = fa_ops.decode_attention

@@ -1,0 +1,358 @@
+"""Unified decoder-only LM: GQA / SWA / QKV-bias / MoE (+dense residual),
+RoPE, RMSNorm, SwiGLU; scan-over-layers with per-layer remat.
+
+Parameters are stacked on a leading layer axis so the compiled HLO is O(1)
+in depth (and the roofline collector multiplies while-body costs by
+``n_layers`` — launch/roofline.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding_utils as su
+from . import attention as attn_mod
+from . import moe as moe_mod
+from .config import TransformerConfig
+
+Params = dict[str, Any]
+
+
+def rms_norm(x, w, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def _layer_param_shapes(cfg: TransformerConfig) -> dict[str, tuple]:
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    shapes = {
+        "wq": (d, hq * dh),
+        "wk": (d, hkv * dh),
+        "wv": (d, hkv * dh),
+        "wo": (hq * dh, d),
+        "ln1": (d,),
+        "ln2": (d,),
+    }
+    if cfg.qkv_bias:
+        shapes |= {"bq": (hq * dh,), "bk": (hkv * dh,), "bv": (hkv * dh,)}
+    if cfg.moe is None:
+        shapes |= {"w1": (d, cfg.d_ff), "w3": (d, cfg.d_ff), "w2": (cfg.d_ff, d)}
+    else:
+        m = cfg.moe
+        shapes |= {
+            "router": (d, m.n_experts),
+            "w1": (m.n_experts, d, m.d_ff_expert),
+            "w3": (m.n_experts, d, m.d_ff_expert),
+            "w2": (m.n_experts, m.d_ff_expert, d),
+        }
+        if m.dense_residual_ff:
+            shapes |= {
+                "dw1": (d, m.dense_residual_ff),
+                "dw3": (d, m.dense_residual_ff),
+                "dw2": (m.dense_residual_ff, d),
+            }
+    return shapes
+
+
+def param_shapes(cfg: TransformerConfig) -> Params:
+    """ShapeDtypeStructs for every parameter (used by init and dry-run)."""
+    l = cfg.n_layers
+    dt = cfg.param_dtype
+    layers = {
+        k: jax.ShapeDtypeStruct((l, *s), dt)
+        for k, s in _layer_param_shapes(cfg).items()
+    }
+    out = {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dt),
+        "layers": layers,
+        "ln_f": jax.ShapeDtypeStruct((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        out["unembed"] = jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), dt)
+    return out
+
+
+def init_params(key, cfg: TransformerConfig) -> Params:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes)
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for k, s in zip(keys, flat):
+        if len(s.shape) >= 2:
+            fan_in = s.shape[-2]
+            leaves.append(
+                (jax.random.normal(k, s.shape, jnp.float32) / (fan_in ** 0.5)).astype(
+                    s.dtype
+                )
+            )
+        else:
+            # norms start at 1, biases at 0
+            fill = 1.0 if s.shape[-1] == cfg.d_model or len(s.shape) == 2 else 0.0
+            leaves.append(jnp.full(s.shape, fill, s.dtype))
+    params = jax.tree.unflatten(treedef, leaves)
+    # norm weights exactly 1, biases exactly 0
+    for name in ("ln1", "ln2"):
+        params["layers"][name] = jnp.ones_like(params["layers"][name])
+    for name in ("bq", "bk", "bv"):
+        if name in params["layers"]:
+            params["layers"][name] = jnp.zeros_like(params["layers"][name])
+    params["ln_f"] = jnp.ones_like(params["ln_f"])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _attention_block(lp, x, positions, cfg: TransformerConfig):
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = cfg.compute_dtype
+    h = rms_norm(x, lp["ln1"].astype(cd), cfg.norm_eps)
+    q = h @ lp["wq"].astype(cd)
+    k = h @ lp["wk"].astype(cd)
+    v = h @ lp["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(cd)
+        k = k + lp["bk"].astype(cd)
+        v = v + lp["bv"].astype(cd)
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    q = attn_mod.rope(q, positions, cfg.rope_theta)
+    k = attn_mod.rope(k, positions, cfg.rope_theta)
+    o = attn_mod.attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        impl=cfg.attn_impl,
+        causal=True,
+        window=cfg.sliding_window,
+        block=cfg.attn_block,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    return x + o @ lp["wo"].astype(cd)
+
+
+def _ffn_block(lp, x, cfg: TransformerConfig):
+    b, s, d = x.shape
+    cd = cfg.compute_dtype
+    h = rms_norm(x, lp["ln2"].astype(cd), cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is None:
+        g = jax.nn.silu(h @ lp["w1"].astype(cd)) * (h @ lp["w3"].astype(cd))
+        out = g @ lp["w2"].astype(cd)
+    else:
+        m = cfg.moe
+        cap = moe_mod.expert_capacity(b * s, m.n_experts, m.top_k, m.capacity_factor)
+        out_f, aux = moe_mod.moe_ffn(
+            h.reshape(b * s, d),
+            lp["router"],
+            lp["w1"],
+            lp["w3"],
+            lp["w2"],
+            top_k=m.top_k,
+            capacity=cap,
+            compute_dtype=cd,
+            ep_axis="data" if cfg.batch_axes else "",
+            token_axes=(),  # flat [B*S, D]: rely on the layer boundary wsc
+        )
+        out = out_f.reshape(b, s, d)
+        if m.dense_residual_ff:
+            g = jax.nn.silu(h @ lp["dw1"].astype(cd)) * (h @ lp["dw3"].astype(cd))
+            out = out + g @ lp["dw2"].astype(cd)
+    return x + out, aux
+
+
+def _boundary_constraint(x, cfg: TransformerConfig):
+    """Layer-boundary activation sharding: batch over the data axes AND
+    sequence over the TP axis (Megatron-SP): the remat/scan-saved carries
+    are then fully sharded; GSPMD all-gathers the sequence inside the
+    layer where attention needs it (§Perf iteration 2)."""
+    if not cfg.batch_axes:
+        return x
+    return su.constrain(x, tuple(cfg.batch_axes), cfg.tp_axis or None)
+
+
+def _layer(lp, carry, cfg: TransformerConfig):
+    x, positions = carry
+    x = _attention_block(lp, x, positions, cfg)
+    x = su.maybe_constrain(x, cfg.batch_axes)
+    x, aux = _ffn_block(lp, x, cfg)
+    x = _boundary_constraint(x, cfg)
+    return x, aux
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """tokens [B, S] -> logits [B, S, V] (compute_dtype), aux losses."""
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+    x = _boundary_constraint(x, cfg)
+    positions = jnp.broadcast_to(
+        jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape
+    )
+
+    layer_fn = functools.partial(_layer, cfg=cfg)
+    if cfg.remat:
+        layer_fn = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    if cfg.scan_layers:
+        def body(carry, lp):
+            x = layer_fn(lp, (carry, positions))
+            return x[0], x[1]
+
+        x, auxes = jax.lax.scan(body, x, params["layers"])
+        aux = auxes.sum()
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, a = layer_fn(lp, (x, positions))
+            aux = aux + a
+    x = rms_norm(x, params["ln_f"].astype(cd), cfg.norm_eps)
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(cd)
+    logits = x @ unembed
+    if cfg.batch_axes:
+        logits = su.constrain(logits, tuple(cfg.batch_axes), None, cfg.tp_axis)
+    return logits, aux
+
+
+def loss_fn(params: Params, batch, cfg: TransformerConfig):
+    """Causal LM loss: CE + z-loss + MoE aux."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    logits, aux = forward(params, tokens, cfg)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    z_loss = 1e-4 * (lse ** 2).mean()
+    return ce + z_loss + 1e-2 * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+def cache_shapes(cfg: TransformerConfig, batch: int, cache_len: int) -> Params:
+    """KV cache ShapeDtypeStructs.  SWA archs get a ring of window size
+    (pow-2 rounded) — the O(w) memory that makes long_500k feasible."""
+    from ...core import alloc as alloc_mod
+
+    if cfg.sliding_window > 0:
+        cache_len = min(cache_len, alloc_mod.next_pow2(cfg.sliding_window))
+    dh, hkv, l = cfg.head_dim, cfg.n_kv_heads, cfg.n_layers
+    kv = jax.ShapeDtypeStruct((l, batch, hkv, cache_len, dh), jnp.bfloat16)
+    return {
+        "k": kv,
+        "v": kv,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg: TransformerConfig, batch: int, cache_len: int) -> Params:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_shapes(cfg, batch, cache_len)
+    )
+
+
+def decode_step(params: Params, cache: Params, tokens: jnp.ndarray, cfg):
+    """One token per sequence: tokens [B, 1] -> (logits [B, 1, V], cache).
+
+    The cache is a linear buffer (or ring for SWA); ``pos`` is the global
+    decode position.  Buffers are donated by the serving jit.
+    """
+    cd = cfg.compute_dtype
+    b = tokens.shape[0]
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    cache_len = cache["k"].shape[3]
+    pos = cache["pos"]
+    slot = jnp.where(
+        cfg.sliding_window > 0, pos % cache_len, jnp.minimum(pos, cache_len - 1)
+    )
+
+    x = params["embed"].astype(cd)[tokens]                  # [B, 1, D]
+    x = su.maybe_constrain(x, cfg.batch_axes)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def body(carry, lp_kv):
+        x = carry
+        lp, k_cache, v_cache = lp_kv
+        h = rms_norm(x, lp["ln1"].astype(cd), cfg.norm_eps)
+        q = h @ lp["wq"].astype(cd)
+        k = h @ lp["wk"].astype(cd)
+        v = h @ lp["wv"].astype(cd)
+        if cfg.qkv_bias:
+            q = q + lp["bq"].astype(cd)
+            k = k + lp["bk"].astype(cd)
+            v = v + lp["bv"].astype(cd)
+        q = attn_mod.rope(q.reshape(b, 1, hq, dh), positions, cfg.rope_theta)
+        k = attn_mod.rope(k.reshape(b, 1, hkv, dh), positions, cfg.rope_theta)
+        v = v.reshape(b, 1, hkv, dh)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.transpose(0, 2, 1, 3).astype(jnp.bfloat16), (0, 0, slot, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.transpose(0, 2, 1, 3).astype(jnp.bfloat16), (0, 0, slot, 0)
+        )
+        live = jnp.minimum(pos + 1, cache_len)
+        o = attn_mod.decode_attention(
+            q.transpose(0, 2, 1, 3).astype(cd),
+            k_cache.astype(cd),
+            v_cache.astype(cd),
+            live,
+        )
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, hq * dh)
+        x = x + o @ lp["wo"].astype(cd)
+        # FFN (dense path for decode; MoE routes a single token per seq)
+        h2 = rms_norm(x, lp["ln2"].astype(cd), cfg.norm_eps)
+        if cfg.moe is None:
+            g = jax.nn.silu(h2 @ lp["w1"].astype(cd)) * (h2 @ lp["w3"].astype(cd))
+            x = x + g @ lp["w2"].astype(cd)
+        else:
+            m = cfg.moe
+            cap = moe_mod.expert_capacity(b, m.n_experts, m.top_k, 2.0)
+            out_f, _ = moe_mod.moe_ffn(
+                h2.reshape(b, -1),
+                lp["router"],
+                lp["w1"],
+                lp["w3"],
+                lp["w2"],
+                top_k=m.top_k,
+                capacity=cap,
+                compute_dtype=cd,
+            )
+            x = x + out_f.reshape(b, 1, -1)
+            if m.dense_residual_ff:
+                g = jax.nn.silu(h2 @ lp["dw1"].astype(cd)) * (
+                    h2 @ lp["dw3"].astype(cd)
+                )
+                x = x + g @ lp["dw2"].astype(cd)
+        x = su.maybe_constrain(x, cfg.batch_axes)
+        return x, (k_cache, v_cache)
+
+    if cfg.scan_layers:
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"])
+        )
+    else:  # unrolled (roofline cost variants)
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, (k_i, v_i) = body(x, (lp, cache["k"][i], cache["v"][i]))
+            ks.append(k_i)
+            vs.append(v_i)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    x = rms_norm(x, params["ln_f"].astype(cd), cfg.norm_eps)
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(cd)
+    logits = x @ unembed
+    new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based dispatch.
+
+Sort-based (dropping) dispatch instead of GShard one-hot matmuls: token→
+expert assignments are sorted by expert, positions within each expert
+computed by a segmented cumsum, tokens over capacity dropped.  FLOPs are
+then dominated by the expert GEMMs (2·T·k·d·f per matmul), which is what
+a roofline should see — one-hot dispatch would add a fake O(T·E·C·d) term.
+
+Expert capacity is pow-2 bucketed (core.alloc policy): the dispatch
+buffers keep a stable compiled shape as token counts vary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import alloc
+from .. import sharding_utils as su
+
+
+def expert_capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    raw = int(n_tokens * top_k * factor / n_experts) + 1
+    return alloc.next_pow2(raw)
+
+
+def moe_ffn(
+    x: jnp.ndarray,            # [T, D] tokens (flattened batch*seq)
+    router_w: jnp.ndarray,     # [D, E]
+    w1: jnp.ndarray,           # [E, D, F]  (gate)
+    w3: jnp.ndarray,           # [E, D, F]  (up)
+    w2: jnp.ndarray,           # [E, F, D]  (down)
+    *,
+    top_k: int,
+    capacity: int,
+    compute_dtype=jnp.bfloat16,
+    ep_axis: str = "",          # expert-parallel mesh axis (experts dim)
+    token_axes: tuple = (),     # token/batch mesh axes
+):
+    """Returns (output [T, D], aux_loss scalar).
+
+    Explicit EP sharding constraints: without them GSPMD replicates the
+    dispatch buffers and all-reduces every expert GEMM output (measured
+    52 GiB/device/layer on qwen3-moe — §Perf iteration 6).
+    """
+    t, d = x.shape
+    e = router_w.shape[-1]
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)                # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_expert = gate_idx.reshape(-1)                                # [T*k]
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, stok, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # position within expert = rank - first_rank_of_expert
+    first = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    pos = jnp.arange(t * top_k, dtype=jnp.int32) - first[se]
+    keep = pos < capacity
+    slot = jnp.where(keep, se * capacity + pos, e * capacity)         # drop -> OOB
+
+    # dispatch via an int32 slot->token index buffer: the feature gather
+    # then reads token-sharded x once (one small all-gather of x) instead
+    # of scattering features across the expert sharding (§Perf iter 6b)
+    idx_buf = jnp.full((e * capacity,), t, jnp.int32).at[slot].set(
+        stok, mode="drop"
+    )
+    live = idx_buf < t
+    buffers = jnp.where(
+        live[:, None], x[jnp.minimum(idx_buf, t - 1)].astype(compute_dtype), 0
+    )
+    buffers = buffers.reshape(e, capacity, d)
+    if ep_axis:
+        buffers = su.constrain(buffers, ep_axis)  # [E(ep), C, D]
+
+    # ---- expert FFN (SwiGLU), batched over experts ---------------------
+    h1 = jnp.einsum("ecd,edf->ecf", buffers, w1.astype(compute_dtype))
+    h3 = jnp.einsum("ecd,edf->ecf", buffers, w3.astype(compute_dtype))
+    h = jax.nn.silu(h1) * h3
+    if ep_axis:
+        h = su.constrain(h, ep_axis)              # [E(ep), C, F]
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w2.astype(compute_dtype))
+    if ep_axis:
+        out_buf = su.constrain(out_buf, ep_axis)  # [E(ep), C, D]
+    out_buf = out_buf.reshape(e * capacity, d)
+
+    # ---- combine back ---------------------------------------------------
+    # scatter expert outputs straight into the token-sharded accumulator:
+    # a per-token gather of the E-sharded out_buf all-reduces a [T·k, D]
+    # f32 tensor per layer (measured 8.6 GiB); the slot->token scatter
+    # all-reduces only [T, D] (§Perf iteration 6c)
+    gate_buf = jnp.zeros((e * capacity,), jnp.float32).at[slot].set(
+        sg, mode="drop"
+    )
+    contrib = out_buf * gate_buf[:, None].astype(compute_dtype)
+    out = jnp.zeros((t, d), jnp.float32)
+    out = out.at[jnp.minimum(idx_buf, t - 1)].add(
+        jnp.where(live[:, None], contrib, 0).astype(jnp.float32)
+    )
+    if token_axes:
+        out = su.constrain(out, tuple(token_axes))
+
+    # ---- load-balancing aux loss (Switch) --------------------------------
+    me = probs.mean(axis=0)                                  # [E]
+    ce = jnp.zeros((e,), jnp.float32).at[flat_expert].add(1.0) / (t * top_k)
+    aux = e * jnp.sum(me * ce)
+    return out.astype(compute_dtype), aux

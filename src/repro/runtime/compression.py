@@ -1,0 +1,92 @@
+"""Gradient compression for the slow (pod) axis all-reduce.
+
+Two standard schemes with error feedback:
+  * int8 quantization (per-tensor scale): 4× fewer bytes on the wire,
+  * top-k sparsification: k largest |g| entries, rest fed back next step.
+
+Error feedback keeps both unbiased-in-the-limit (Karimireddy et al. 2019).
+The compress hook plugs into train.loop.make_train_step(compress_fn=...);
+on a multi-pod mesh it wraps the pod-axis psum inside shard_map.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def make_int8_ef_compressor():
+    """Stateful int8 compressor with error feedback (host-carried state)."""
+    state = {"residual": None}
+
+    def compress(grads):
+        res = state["residual"]
+        if res is None:
+            res = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            q, s = int8_compress(x)
+            deq = int8_decompress(q, s)
+            return deq, x - deq
+
+        pairs = jax.tree.map(one, grads, res)
+        out = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        state["residual"] = jax.tree.map(
+            lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return out
+
+    return compress
+
+
+def topk_compress(g: jnp.ndarray, frac: float = 0.01):
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(int(flat.shape[0] * frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    out = jnp.zeros_like(flat).at[idx].set(kept)
+    return out.reshape(g.shape), (g.astype(jnp.float32) - out.reshape(g.shape))
+
+
+def make_topk_ef_compressor(frac: float = 0.01):
+    state = {"residual": None}
+
+    def compress(grads):
+        res = state["residual"]
+        if res is None:
+            res = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+        def one(g, r):
+            return topk_compress(g.astype(jnp.float32) + r, frac)
+
+        pairs = jax.tree.map(one, grads, res)
+        out = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        state["residual"] = jax.tree.map(
+            lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return out
+
+    return compress
+
+
+def compressed_psum_bytes(n_params: int, scheme: str = "int8", frac: float = 0.01) -> int:
+    """Wire bytes per pod-axis all-reduce — feeds the roofline collective
+    term for the compressed variant (§Perf)."""
+    if scheme == "int8":
+        return n_params * 1 + 4
+    if scheme == "topk":
+        return int(n_params * frac) * 8  # value + index
+    return n_params * 4

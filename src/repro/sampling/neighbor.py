@@ -1,0 +1,92 @@
+"""GraphSAGE-style fanout neighbor sampler (minibatch_lg shape).
+
+Samples a k-hop neighborhood subgraph around seed nodes from a CSR with
+per-hop fanouts (e.g. 15-10).  Fully jit-able: output shapes are static
+(seeds × Π fanouts), sampling uses uniform random slot picks with
+replacement for high-degree rows and masking for low-degree rows —
+the standard padded-TPU formulation of neighbor sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import util
+
+SENTINEL = util.SENTINEL
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledBlock:
+    """One hop: edges (dst_node_idx -> src_node_idx) in *local* numbering."""
+
+    src_nodes: jnp.ndarray   # [n_src] global ids of source (sampled) nodes
+    edge_src: jnp.ndarray    # [n_edges] local index into src_nodes
+    edge_dst: jnp.ndarray    # [n_edges] local index into the previous layer
+    mask: jnp.ndarray        # [n_edges] valid edge
+
+
+@functools.partial(jax.jit, static_argnames=("fanout",))
+def sample_hop(key, offsets, dst, seeds, seed_mask, fanout: int):
+    """Sample ``fanout`` neighbors per seed (with replacement).
+
+    Returns (neigh [S, fanout] global ids, valid [S, fanout]).
+    """
+    deg = offsets[seeds + 1] - offsets[seeds]
+    r = jax.random.uniform(key, (seeds.shape[0], fanout))
+    pick = (r * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+    idx = offsets[seeds][:, None] + pick
+    neigh = dst[jnp.clip(idx, 0, dst.shape[0] - 1)]
+    valid = jnp.broadcast_to(
+        (deg[:, None] > 0) & seed_mask[:, None], (seeds.shape[0], fanout)
+    )
+    return jnp.where(valid, neigh, 0), valid
+
+
+def sample_subgraph(
+    key,
+    offsets: jnp.ndarray,
+    dst: jnp.ndarray,
+    seeds: jnp.ndarray,
+    fanouts: Sequence[int],
+):
+    """Multi-hop sampled subgraph, GraphSAGE layout.
+
+    Layer 0 = seeds; layer h = neighbors of layer h-1 (flattened).  Returns
+    a list of SampledBlock (outermost hop first, as consumed by a GNN that
+    aggregates inward) plus the full node frontier per layer.
+    """
+    layers = [seeds]
+    masks = [jnp.ones_like(seeds, dtype=bool)]
+    blocks: list[SampledBlock] = []
+    for h, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        cur = layers[-1]
+        cur_mask = masks[-1]
+        neigh, valid = sample_hop(sub, offsets, dst, cur, cur_mask, int(f))
+        n_prev = cur.shape[0]
+        edge_dst = jnp.repeat(jnp.arange(n_prev, dtype=jnp.int32), int(f))
+        edge_src = jnp.arange(n_prev * int(f), dtype=jnp.int32)
+        blocks.append(
+            SampledBlock(
+                src_nodes=neigh.reshape(-1),
+                edge_src=edge_src,
+                edge_dst=edge_dst,
+                mask=valid.reshape(-1),
+            )
+        )
+        layers.append(neigh.reshape(-1))
+        masks.append(valid.reshape(-1))
+    return blocks, layers, masks
+
+
+def flat_sizes(batch_nodes: int, fanouts: Sequence[int]) -> list[int]:
+    """Frontier sizes per layer for static shape planning."""
+    sizes = [batch_nodes]
+    for f in fanouts:
+        sizes.append(sizes[-1] * int(f))
+    return sizes

@@ -1,0 +1,98 @@
+"""Training loop: grad-accumulation microbatching, jitted step builder,
+gradient compression hook (pod-axis), deterministic metrics."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt_mod
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+    def as_pytree(self):
+        return {"params": self.params, "opt_state": self.opt_state}
+
+
+def make_train_step(
+    loss_fn: Callable,
+    opt_cfg: opt_mod.OptimizerConfig,
+    *,
+    grad_accum: int = 1,
+    compress_fn: Optional[Callable] = None,
+):
+    """Build ``step(state_pytree, batch) -> (state_pytree, metrics)``.
+
+    ``grad_accum`` > 1 expects batch leaves shaped [accum, ...] and scans
+    microbatches, accumulating f32 grads (memory = one param-sized buffer).
+    ``compress_fn`` (runtime.compression) maps grads -> grads before the
+    optimizer, modelling the pod-axis compressed all-reduce.
+    """
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        return loss, grads
+
+    def step(state, batch):
+        params = state["params"]
+        if grad_accum > 1:
+            def body(acc, mb):
+                loss, grads = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / grad_accum, acc, grads
+                )
+                return acc, loss
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, losses = jax.lax.scan(body, zero, batch)
+            loss = losses.mean()
+        else:
+            loss, grads = grads_of(params, batch)
+        if compress_fn is not None:
+            grads = compress_fn(grads)
+        new_params, new_opt, om = opt_mod.update(
+            grads, state["opt_state"], params, opt_cfg
+        )
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt_state": new_opt}, metrics
+
+    return step
+
+
+def init_state(params, opt_cfg: opt_mod.OptimizerConfig) -> dict:
+    return {"params": params, "opt_state": opt_mod.init(params, opt_cfg)}
+
+
+def train(
+    state: dict,
+    step_fn: Callable,
+    batches,
+    *,
+    hooks=(),
+    log_every: int = 10,
+) -> tuple[dict, list[dict]]:
+    """Simple driver: iterate batches, run hooks (checkpoint/fault)."""
+    jitted = jax.jit(step_fn, donate_argnums=(0,))
+    history = []
+    t0 = time.time()
+    for i, batch in enumerate(batches):
+        state, metrics = jitted(state, batch)
+        for h in hooks:
+            state = h(i, state) or state
+        if i % log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall"] = time.time() - t0
+            history.append(m)
+    return state, history

@@ -1,0 +1,155 @@
+"""Optimizers: AdamW (configurable state dtypes — bf16 m/v for the 480B
+MoE to fit single-pod HBM) and Adafactor (factored second moment), plus
+global-norm clipping and warmup-cosine schedule.  Pure-pytree API."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor | sgd
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32   # bf16 halves optimizer HBM (arctic)
+    min_lr_ratio: float = 0.1
+
+
+def schedule(step, cfg: OptimizerConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def init(params, cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    if cfg.name == "adafactor":
+        def factored(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], cfg.state_dtype),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], cfg.state_dtype),
+                }
+            return {"v": jnp.zeros(p.shape, cfg.state_dtype)}
+
+        return {
+            "f": jax.tree.map(factored, params, is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    if cfg.name == "sgd":
+        return {"step": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def update(grads, state, params, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(step, cfg)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm > 0:
+        grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gn = global_norm(grads)
+
+    if cfg.name == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        m = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g).astype(
+                cfg.state_dtype
+            ),
+            state["m"],
+            grads,
+        )
+        v = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * g * g).astype(
+                cfg.state_dtype
+            ),
+            state["v"],
+            grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mh = m_.astype(jnp.float32) / bc1
+            vh = v_.astype(jnp.float32) / bc2
+            d = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                d = d + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}, {"lr": lr, "grad_norm": gn}
+
+    if cfg.name == "adafactor":
+        eps = 1e-30
+
+        def upd(p, g, f):
+            g32 = g * g + eps
+            if p.ndim >= 2:
+                vr = 0.95 * f["vr"].astype(jnp.float32) + 0.05 * g32.mean(-1)
+                vc = 0.95 * f["vc"].astype(jnp.float32) + 0.05 * g32.mean(-2)
+                denom = (
+                    vr[..., :, None]
+                    * vc[..., None, :]
+                    / jnp.maximum(vr.mean(-1)[..., None, None], eps)
+                )
+                d = g / jnp.sqrt(denom + eps)
+                nf = {"vr": vr.astype(cfg.state_dtype), "vc": vc.astype(cfg.state_dtype)}
+            else:
+                v = 0.95 * f["v"].astype(jnp.float32) + 0.05 * g32
+                d = g / jnp.sqrt(v + eps)
+                nf = {"v": v.astype(cfg.state_dtype)}
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), nf
+
+        flat_p, tp = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_f = state["f"]
+        flat_f_l = jax.tree.leaves(flat_f, is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x))
+        outs = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f_l)]
+        new_params = jax.tree.unflatten(tp, [o[0] for o in outs])
+        new_f = jax.tree.unflatten(
+            jax.tree.structure(flat_f, is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)),
+            [o[1] for o in outs],
+        )
+        return new_params, {"f": new_f, "step": step}, {"lr": lr, "grad_norm": gn}
+
+    if cfg.name == "sgd":
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype),
+            params,
+            grads,
+        )
+        return new_params, {"step": step}, {"lr": lr, "grad_norm": gn}
+    raise ValueError(cfg.name)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on the single real CPU device (dry-run is the only place that
+# forces 512 placeholder devices — see launch/dryrun.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import REPRESENTATIONS, alloc, edgebatch, from_coo, util
+import jax.numpy as jnp
+
+
+# --- allocator policy (paper Alg 11 lines 30-33) ---------------------------
+@given(st.integers(min_value=0, max_value=1 << 24))
+def test_allocation_size_policy(nbytes):
+    a = alloc.allocation_size(nbytes)
+    assert a >= max(nbytes, alloc.MIN_ALLOC_BYTES)
+    if nbytes <= 16:
+        assert a == 16
+    elif nbytes < 8192:
+        assert a == alloc.next_pow2(nbytes) and (a & (a - 1)) == 0
+    else:
+        assert a % alloc.PAGE_SIZE == 0 and a - nbytes < alloc.PAGE_SIZE
+
+
+@given(st.lists(st.integers(min_value=0, max_value=1 << 20), min_size=1, max_size=50))
+def test_edge_capacities_vector_matches_scalar(degrees):
+    vec = alloc.edge_capacities(np.array(degrees))
+    for d, v in zip(degrees, vec):
+        assert v == alloc.edge_capacity(d)
+        assert v >= max(d, 1)
+
+
+@given(st.integers(min_value=0, max_value=1 << 30))
+def test_next_pow2(n):
+    p = alloc.next_pow2(n)
+    assert p >= max(n, 1) and (p & (p - 1)) == 0
+    if n > 1:
+        assert p < 2 * n
+
+
+# --- util invariants --------------------------------------------------------
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 30), st.integers(0, 30)), min_size=1, max_size=64
+    )
+)
+@settings(deadline=None, max_examples=30)
+def test_searchsorted_2d_membership(pairs):
+    arr = sorted(set(pairs))
+    s = jnp.array([p[0] for p in arr], jnp.int32)
+    d = jnp.array([p[1] for p in arr], jnp.int32)
+    qs = jnp.array([p[0] for p in pairs], jnp.int32)
+    qd = jnp.array([p[1] + 1 for p in pairs], jnp.int32)  # half perturbed
+    pos, found = util.searchsorted_2d(s, d, qs, qd)
+    for i, p in enumerate(pairs):
+        assert bool(found[i]) == ((p[0], p[1] + 1) in set(arr))
+
+
+@given(
+    st.lists(st.integers(0, 100), min_size=1, max_size=40),
+    st.lists(st.integers(0, 100), min_size=1, max_size=40),
+)
+@settings(deadline=None, max_examples=30)
+def test_binsearch_window(row, queries):
+    row = sorted(set(row))
+    flat = jnp.array(row + [0] * 5, jnp.int32)  # trailing garbage outside window
+    lo = jnp.zeros(len(queries), jnp.int32)
+    hi = jnp.full(len(queries), len(row), jnp.int32)
+    pos, found = util.binsearch_window(flat, lo, hi, jnp.array(queries, jnp.int32))
+    for i, q in enumerate(queries):
+        assert bool(found[i]) == (q in row)
+        if found[i]:
+            assert row[int(pos[i])] == q
+
+
+# --- representation algebra: union/difference are set ops -------------------
+edge_lists = st.lists(
+    st.tuples(st.integers(0, 15), st.integers(0, 15)), min_size=0, max_size=60
+)
+
+
+@given(base=edge_lists, ins=edge_lists, rem=edge_lists)
+@settings(deadline=None, max_examples=20)
+def test_update_algebra_all_reps(base, ins, rem):
+    n = 16
+    base_set = set(base)
+    if base_set:
+        bs, bd = zip(*sorted(base_set))
+    else:
+        bs, bd = (), ()
+    c = from_coo(np.array(bs + (0,))[: len(bs)] if bs else np.empty(0, np.int64),
+                 np.array(bd)[: len(bd)] if bd else np.empty(0, np.int64),
+                 n=n)
+    for name, cls in REPRESENTATIONS.items():
+        g = cls.from_csr(c)
+        expect = set(base_set)
+        if ins:
+            b = edgebatch.from_arrays([e[0] for e in ins], [e[1] for e in ins])
+            g, _ = g.add_edges(b)
+            expect |= set(ins)
+        if rem:
+            b = edgebatch.from_arrays([e[0] for e in rem], [e[1] for e in rem])
+            g, _ = g.remove_edges(b)
+            expect -= set(rem)
+        got = set()
+        for u, row in enumerate(g.to_edge_sets()):
+            got |= {(u, v) for v in row}
+        assert got == expect, f"{name}: set algebra violated"
+
+
+# --- DiGraph structural invariants ------------------------------------------
+@given(ins=edge_lists, rem=edge_lists)
+@settings(deadline=None, max_examples=20)
+def test_digraph_invariants(ins, rem):
+    from repro.core import DiGraph
+
+    g = DiGraph.empty(16)
+    if ins:
+        g, _ = g.add_edges(edgebatch.from_arrays([e[0] for e in ins], [e[1] for e in ins]))
+    if rem:
+        g, _ = g.remove_edges(edgebatch.from_arrays([e[0] for e in rem], [e[1] for e in rem]))
+    dst = np.asarray(g.dst)
+    for u in range(g.cap_v):
+        cap, start, deg = g.capacities[u], g.starts[u], g.degrees[u]
+        if cap == 0:
+            assert deg == 0
+            continue
+        # pow-2 class invariant (CP2AA policy)
+        assert cap == alloc.edge_capacity(max(deg, 1)) or cap >= deg
+        row = dst[start : start + cap]
+        live = row[row != util.SENTINEL]
+        assert live.shape[0] == deg
+        assert (np.diff(live) > 0).all() if live.shape[0] > 1 else True
+        # live entries packed to the left
+        assert (row[deg:] == util.SENTINEL).all()
+    # edge count consistency
+    assert g.m == int(g.degrees.sum())

@@ -1,0 +1,187 @@
+"""System behaviour tests: every representation vs a python-set oracle.
+
+Covers the paper's four tasks — build/load, clone/snapshot, batch
+insert/delete (in-place and new-instance), traversal — on every
+representation in the registry.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    REPRESENTATIONS,
+    edgebatch,
+    from_coo,
+    traversal,
+)
+from repro.io import synthetic
+
+REPS = list(REPRESENTATIONS.items())
+
+
+def _oracle_csr(oracle):
+    srcs, dsts = [], []
+    for i, x in enumerate(oracle):
+        for v in x:
+            srcs.append(i)
+            dsts.append(v)
+    if not srcs:
+        return None
+    return from_coo(np.array(srcs), np.array(dsts), n=len(oracle))
+
+
+def _edge_sets(g, min_len):
+    got = g.to_edge_sets()
+    while len(got) < min_len:
+        got.append(set())
+    return got
+
+
+@pytest.mark.parametrize("name,cls", REPS)
+def test_from_csr_roundtrip(name, cls):
+    rng = np.random.default_rng(0)
+    src, dst = synthetic.uniform_edges(rng, 64, 400)
+    c = from_coo(src, dst, n=64)
+    g = cls.from_csr(c)
+    assert _edge_sets(g, c.n)[: c.n] == c.to_edge_sets()
+
+
+@pytest.mark.parametrize("name,cls", REPS)
+@pytest.mark.parametrize("seed", [3, 7, 11])
+def test_random_update_sequence_vs_oracle(name, cls, seed):
+    rng = np.random.default_rng(seed)
+    n = 40
+    src, dst = synthetic.uniform_edges(rng, n, 200)
+    c = from_coo(src, dst, n=n)
+    g = cls.from_csr(c)
+    oracle = [set(x) for x in c.to_edge_sets()]
+    for it in range(10):
+        if rng.integers(0, 2) == 0:
+            b = edgebatch.random_insertions(
+                rng, n + int(rng.integers(0, 4)), int(rng.integers(1, 30))
+            )
+            s, d, _ = b.to_numpy()
+            g, _ = g.add_edges(b, inplace=True)
+            need = int(max(s.max(initial=0), d.max(initial=0))) + 1
+            while len(oracle) < need:
+                oracle.append(set())
+            for u, v in zip(s.tolist(), d.tolist()):
+                oracle[u].add(v)
+        else:
+            cc = _oracle_csr(oracle)
+            if cc is None or cc.m == 0:
+                continue
+            b = edgebatch.random_deletions(
+                rng, cc, int(rng.integers(1, min(30, cc.m + 1)))
+            )
+            s, d, _ = b.to_numpy()
+            g, _ = g.remove_edges(b, inplace=True)
+            for u, v in zip(s.tolist(), d.tolist()):
+                if u < len(oracle):
+                    oracle[u].discard(v)
+        got = _edge_sets(g, len(oracle))
+        exp = [set(x) for x in oracle] + [set()] * (len(got) - len(oracle))
+        assert got == exp, f"{name} diverged at iter {it}"
+
+
+@pytest.mark.parametrize("name,cls", REPS)
+def test_new_instance_updates_leave_original(name, cls):
+    rng = np.random.default_rng(5)
+    src, dst = synthetic.uniform_edges(rng, 32, 150)
+    c = from_coo(src, dst, n=32)
+    g = cls.from_csr(c)
+    before = g.to_edge_sets()
+    b = edgebatch.random_insertions(rng, 32, 20)
+    g2, _ = g.add_edges(b, inplace=False)
+    assert g.to_edge_sets() == before, f"{name}: original mutated"
+    s, d, _ = b.to_numpy()
+    exp = [set(x) for x in before]
+    for u, v in zip(s.tolist(), d.tolist()):
+        exp[u].add(v)
+    assert _edge_sets(g2, 32)[:32] == exp
+
+
+@pytest.mark.parametrize("name,cls", REPS)
+def test_snapshot_isolation(name, cls):
+    rng = np.random.default_rng(9)
+    src, dst = synthetic.uniform_edges(rng, 32, 150)
+    c = from_coo(src, dst, n=32)
+    g = cls.from_csr(c)
+    snap = g.snapshot()
+    before = [sorted(x) for x in snap.to_edge_sets()]
+    g, _ = g.add_edges(edgebatch.random_insertions(rng, 32, 25), inplace=True)
+    g, _ = g.remove_edges(
+        edgebatch.random_deletions(rng, g.to_csr(), 10), inplace=True
+    )
+    after = [sorted(x) for x in snap.to_edge_sets()]
+    assert before == after, f"{name}: snapshot saw later updates"
+
+
+@pytest.mark.parametrize("name,cls", REPS)
+def test_clone_independence(name, cls):
+    rng = np.random.default_rng(13)
+    src, dst = synthetic.uniform_edges(rng, 32, 150)
+    g = cls.from_csr(from_coo(src, dst, n=32))
+    cl = g.clone()
+    g, _ = g.add_edges(edgebatch.random_insertions(rng, 32, 25), inplace=True)
+    assert cl.to_csr().m != g.to_csr().m or cl.to_edge_sets() != g.to_edge_sets()
+
+
+@pytest.mark.parametrize("name,cls", REPS)
+def test_reverse_walk_matches_dense_oracle(name, cls):
+    rng = np.random.default_rng(17)
+    src, dst = synthetic.uniform_edges(rng, 48, 250)
+    c = from_coo(src, dst, n=48)
+    g = cls.from_csr(c)
+    # walk on an UPDATED graph (paper §4.2.5: traversal after batch updates)
+    g, _ = g.add_edges(edgebatch.random_insertions(rng, 48, 30), inplace=True)
+    g, _ = g.remove_edges(edgebatch.random_deletions(rng, g.to_csr(), 20), inplace=True)
+    cc = g.to_csr()
+    oracle = traversal.reverse_walk_dense_oracle(cc.to_dense(), 5)
+    got = np.asarray(g.reverse_walk(5))[: cc.n]
+    np.testing.assert_allclose(got, oracle, rtol=1e-5)
+
+
+def test_weight_upsert_semantics():
+    """Re-inserting an existing edge updates its weight (documented policy)."""
+    src, dst, w = [0, 0, 1], [1, 2, 2], [1.0, 2.0, 3.0]
+    c = from_coo(src, dst, w, n=3)
+    for name, cls in REPS:
+        g = cls.from_csr(c)
+        b = edgebatch.from_arrays([0], [1], [9.0])
+        g, dm = g.add_edges(b, inplace=True)
+        cc = g.to_csr()
+        i = int(np.asarray(cc.offsets)[0])
+        row = np.asarray(cc.dst)[i : int(np.asarray(cc.offsets)[1])]
+        ww = np.asarray(cc.wgt)[i : int(np.asarray(cc.offsets)[1])]
+        got = dict(zip(row.tolist(), ww.tolist()))
+        assert got[1] == pytest.approx(9.0), f"{name}: weight not upserted"
+        assert cc.m == 3, f"{name}: duplicate edge created"
+
+
+def test_digraph_empty_to_populated():
+    from repro.core import DiGraph
+
+    g = DiGraph.empty(4)
+    b = edgebatch.from_arrays([0, 0, 3, 2], [1, 2, 0, 2], [1, 1, 1, 1])
+    g, dm = g.add_edges(b)
+    assert dm == 4 and g.m == 4
+    assert g.to_edge_sets()[:4] == [{1, 2}, set(), {2}, {0}]
+
+
+def test_digraph_grow_through_many_classes():
+    """One vertex grows 2 -> 1024+ edges: block moves across every class."""
+    from repro.core import DiGraph
+
+    g = DiGraph.empty(2)
+    total = 0
+    for k in range(1, 9):
+        lo = total
+        total += 2**k
+        b = edgebatch.from_arrays(
+            np.zeros(2**k, np.int64), 10 + np.arange(lo, total)
+        )
+        g, dm = g.add_edges(b)
+        assert dm == 2**k
+    assert g.degree(0) == total
+    row = g.edges_of(0)
+    assert row.shape[0] == total and (np.diff(row) > 0).all()

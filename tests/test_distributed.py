@@ -1,0 +1,83 @@
+"""Distributed graph tests — run in a subprocess with 8 forced host devices
+(the main test process must keep the default single device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, "src")
+    import jax
+    import numpy as np
+    from jax.sharding import AxisType
+    from repro.core import distributed as dist, from_coo, traversal
+    from repro.io import synthetic
+
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+
+    rng = np.random.default_rng(0)
+    src, dstv = synthetic.uniform_edges(rng, 64, 500)
+    c = from_coo(src, dstv, n=64)
+    g = dist.shard_csr(c, 8)
+
+    # 1) sharded reverse walk == dense oracle
+    out = np.asarray(dist.reverse_walk(g, 4, mesh))
+    oracle = traversal.reverse_walk_dense_oracle(c.to_dense(), 4)
+    np.testing.assert_allclose(out, oracle, rtol=1e-5)
+    print("sharded reverse walk OK")
+
+    # 2) distributed insert + delete == host-set oracle
+    ins_s = rng.integers(0, 64, 100); ins_d = rng.integers(0, 64, 100)
+    g2, m_after = dist.apply_updates(g, ins_s, ins_d, None, mesh, op="insert")
+    got = g2 and dist.gather_csr(g2)
+    exp = set(zip(src.tolist(), dstv.tolist())) | set(zip(ins_s.tolist(), ins_d.tolist()))
+    got_set = set()
+    o = np.asarray(got.offsets); d = np.asarray(got.dst)
+    for u in range(got.n):
+        for v in d[o[u]:o[u+1]]:
+            got_set.add((u, int(v)))
+    assert got_set == exp, (len(got_set), len(exp))
+    print("distributed insert OK, m =", m_after)
+
+    del_s = np.array([p[0] for p in list(exp)[:50]]); del_d = np.array([p[1] for p in list(exp)[:50]])
+    g3, m3 = dist.apply_updates(g2, del_s, del_d, None, mesh, op="delete")
+    got = dist.gather_csr(g3)
+    exp2 = exp - set(zip(del_s.tolist(), del_d.tolist()))
+    got_set = set()
+    o = np.asarray(got.offsets); d = np.asarray(got.dst)
+    for u in range(got.n):
+        for v in d[o[u]:o[u+1]]:
+            got_set.add((u, int(v)))
+    assert got_set == exp2
+    print("distributed delete OK, m =", m3)
+
+    # 3) walk on the updated sharded graph still matches oracle
+    out = np.asarray(dist.reverse_walk(g3, 3, mesh))
+    oracle = traversal.reverse_walk_dense_oracle(got.to_dense(), 3)
+    np.testing.assert_allclose(out, oracle, rtol=1e-5)
+    print("walk-after-update OK")
+    """
+)
+
+
+def test_distributed_graph_8dev(tmp_path):
+    p = tmp_path / "dist_check.py"
+    p.write_text(SCRIPT)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, str(p)],
+        capture_output=True,
+        text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env,
+        timeout=600,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "walk-after-update OK" in r.stdout

@@ -1,0 +1,72 @@
+"""MTX loader tests (paper Alg 3-5) + synthetic generators."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import csr as csr_mod
+from repro.io import mtx, synthetic
+
+
+def test_mtx_roundtrip_weighted(tmp_path):
+    c = synthetic.make_graph("social", scale=8, edge_factor=4, seed=2)
+    p = str(tmp_path / "g.mtx")
+    mtx.write_mtx(p, c)
+    c2 = mtx.load_mtx(p)
+    assert (c2.n, c2.m) == (c.n, c.m)
+    np.testing.assert_array_equal(np.asarray(c2.offsets), np.asarray(c.offsets))
+    np.testing.assert_array_equal(np.asarray(c2.dst), np.asarray(c.dst))
+    np.testing.assert_allclose(np.asarray(c2.wgt), np.asarray(c.wgt), rtol=1e-5)
+
+
+def test_mtx_pattern_symmetric(tmp_path):
+    body = (
+        "%%MatrixMarket matrix coordinate pattern symmetric\n"
+        "% a comment line\n4 4 3\n2 1\n3 1\n4 3\n"
+    )
+    p = str(tmp_path / "s.mtx")
+    open(p, "w").write(body)
+    c = mtx.load_mtx(p)
+    assert c.n == 4 and c.m == 6
+    assert c.to_edge_sets() == [{1, 2}, {0}, {0, 3}, {2}]
+
+
+def test_mtx_scientific_weights(tmp_path):
+    body = (
+        "%%MatrixMarket matrix coordinate real general\n"
+        "3 3 2\n1 2 1.5e-2\n3 1 -2.25E+1\n"
+    )
+    p = str(tmp_path / "e.mtx")
+    open(p, "w").write(body)
+    c = mtx.load_mtx(p)
+    np.testing.assert_allclose(
+        sorted(np.asarray(c.wgt).tolist()), [-22.5, 0.015], rtol=1e-6
+    )
+
+
+def test_mtx_partition_invariance(tmp_path):
+    """Alg 5's partition count must not change the result."""
+    c = synthetic.make_graph("road", scale=9, seed=4)
+    p = str(tmp_path / "r.mtx")
+    mtx.write_mtx(p, c)
+    a = mtx.load_mtx(p, num_partitions=1)
+    b = mtx.load_mtx(p, num_partitions=7)
+    np.testing.assert_array_equal(np.asarray(a.offsets), np.asarray(b.offsets))
+    np.testing.assert_array_equal(np.asarray(a.dst), np.asarray(b.dst))
+
+
+@pytest.mark.parametrize("kind", ["web", "social", "road", "uniform"])
+def test_synthetic_families(kind):
+    c = synthetic.make_graph(kind, scale=8, edge_factor=4, seed=1)
+    csr_mod.validate(c)
+    assert c.n == 256 and c.m > 0
+
+
+def test_update_batches_shapes():
+    c = synthetic.make_graph("uniform", scale=8, edge_factor=4, seed=1)
+    for f, b in synthetic.update_batches(c, fractions=(1e-2, 1e-1), kind="insert"):
+        assert b.n == max(int(round(c.m * f)), 1) or b.n <= c.m
+    for f, b in synthetic.update_batches(c, fractions=(1e-2,), kind="delete"):
+        s, d, _ = b.to_numpy()
+        sets = c.to_edge_sets()
+        assert all(v in sets[u] for u, v in zip(s.tolist(), d.tolist()))

@@ -1,0 +1,178 @@
+"""Per-kernel allclose vs the pure-jnp ref oracles (interpret=True),
+with shape/dtype sweeps + hypothesis property tests."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alloc, from_coo, traversal
+from repro.io import synthetic
+from repro.kernels.bsr_spmm import ops as bsr_ops
+from repro.kernels.bsr_spmm.ref import bsr_to_dense
+from repro.kernels.edge_segment_sum import ops as seg_ops
+from repro.kernels.embedding_bag import ops as bag_ops
+from repro.kernels.flash_attention import ops as fa_ops
+
+
+# --------------------------------------------------------------------------
+# bsr_spmm
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,m,b,d", [(100, 600, 32, 16), (300, 2000, 128, 64),
+                                     (64, 300, 8, 8), (200, 1500, 64, 130)])
+def test_bsr_spmm_shapes(n, m, b, d):
+    rng = np.random.default_rng(n)
+    src, dst = synthetic.uniform_edges(rng, n, m)
+    c = from_coo(src, dst, n=n)
+    bsr = bsr_ops.csr_to_bsr(c, block_size=b)
+    dense = bsr_to_dense(bsr.row_ptr, bsr.block_cols, bsr.blocks, bsr.n_rows, bsr.n_cols)
+    np.testing.assert_allclose(dense[:n, :n], c.to_dense() != 0)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    got = np.asarray(bsr_ops.spmm(bsr, jnp.asarray(x), interpret=True))
+    exp = (c.to_dense() != 0).astype(np.float32) @ x
+    np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_spmm_weighted():
+    rng = np.random.default_rng(7)
+    src, dst = synthetic.uniform_edges(rng, 90, 400)
+    w = rng.uniform(0.1, 2.0, src.shape[0]).astype(np.float32)
+    c = from_coo(src, dst, w, n=90)
+    bsr = bsr_ops.csr_to_bsr(c, block_size=32, weighted=True)
+    x = rng.standard_normal((90, 8)).astype(np.float32)
+    got = np.asarray(bsr_ops.spmm(bsr, jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, c.to_dense() @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_reverse_walk_vs_dense_oracle():
+    rng = np.random.default_rng(11)
+    c = from_coo(*synthetic.uniform_edges(rng, 200, 1500), n=200)
+    bsr = bsr_ops.csr_to_bsr(c, block_size=64)
+    got = np.asarray(bsr_ops.reverse_walk_bsr(bsr, 5, 200, interpret=True))
+    exp = traversal.reverse_walk_dense_oracle(c.to_dense(), 5)
+    np.testing.assert_allclose(got, exp, rtol=1e-5)
+
+
+def test_bsr_spmm_matches_ref_module():
+    rng = np.random.default_rng(13)
+    c = from_coo(*synthetic.uniform_edges(rng, 96, 500), n=96)
+    bsr = bsr_ops.csr_to_bsr(c, block_size=32)
+    x = jnp.asarray(rng.standard_normal((96, 16)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(bsr_ops.spmm(bsr, x, interpret=True)),
+        np.asarray(bsr_ops.spmm_reference(bsr, x)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+# --------------------------------------------------------------------------
+# edge_segment_sum
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("e,d,n", [(100, 16, 20), (700, 64, 50), (128, 1, 5),
+                                   (513, 200, 300), (4096, 32, 17)])
+def test_edge_segment_sum_shapes(e, d, n):
+    rng = np.random.default_rng(e)
+    rows = np.sort(rng.integers(0, n, e)).astype(np.int32)
+    vals = rng.standard_normal((e, d)).astype(np.float32)
+    got = np.asarray(seg_ops.edge_segment_sum(
+        jnp.asarray(rows), jnp.asarray(vals), num_segments=n, interpret=True))
+    exp = np.asarray(seg_ops.edge_segment_sum_reference(
+        jnp.asarray(rows), jnp.asarray(vals), num_segments=n))
+    np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    e=st.integers(1, 300),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 100),
+)
+@settings(deadline=None, max_examples=15)
+def test_edge_segment_sum_property(e, n, seed):
+    rng = np.random.default_rng(seed)
+    rows = np.sort(rng.integers(0, n, e)).astype(np.int32)
+    vals = rng.standard_normal((e, 8)).astype(np.float32)
+    got = np.asarray(seg_ops.edge_segment_sum(
+        jnp.asarray(rows), jnp.asarray(vals), num_segments=n, interpret=True))
+    exp = np.zeros((n, 8), np.float32)
+    np.add.at(exp, rows, vals)
+    np.testing.assert_allclose(got, exp, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# embedding_bag
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("combine", ["sum", "mean", "max"])
+@pytest.mark.parametrize("v,d,b,k", [(50, 16, 8, 5), (200, 128, 4, 16), (30, 8, 6, 3)])
+def test_embedding_bag(combine, v, d, b, k):
+    rng = np.random.default_rng(v + k)
+    table = rng.standard_normal((v, d)).astype(np.float32)
+    idx = rng.integers(-1, v, (b, k)).astype(np.int32)
+    w = rng.uniform(0.5, 1.5, (b, k)).astype(np.float32)
+    if combine == "max":
+        w = np.ones_like(w)
+    kp = alloc.next_pow2(k)
+    idx_p = np.concatenate([idx, np.full((b, kp - k), -1, np.int32)], 1)
+    w_p = np.concatenate([w, np.zeros((b, kp - k), np.float32)], 1)
+    got = np.asarray(bag_ops.embedding_bag(
+        jnp.asarray(table), jnp.asarray(idx), jnp.asarray(w),
+        combine=combine, interpret=True))
+    exp = np.asarray(bag_ops.embedding_bag_reference(
+        jnp.asarray(table), jnp.asarray(idx_p), jnp.asarray(w_p), combine=combine))
+    np.testing.assert_allclose(got, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_all_padding_bag():
+    table = jnp.asarray(np.random.default_rng(0).standard_normal((10, 8)), jnp.float32)
+    idx = jnp.asarray(np.array([[-1, -1], [0, 1]], np.int32))
+    out = np.asarray(bag_ops.embedding_bag(table, idx, combine="sum", interpret=True))
+    np.testing.assert_allclose(out[0], 0.0)
+
+
+# --------------------------------------------------------------------------
+# flash_attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d,causal,window",
+    [
+        (2, 4, 2, 256, 64, True, 0),
+        (1, 4, 4, 128, 32, False, 0),
+        (1, 8, 2, 256, 64, True, 96),
+        (1, 2, 1, 512, 128, True, 128),
+        (1, 1, 1, 128, 64, True, 32),
+    ],
+)
+def test_flash_attention(b, hq, hkv, s, d, causal, window):
+    rng = np.random.default_rng(s + d)
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
+    got = np.asarray(fa_ops.attention(q, k, v, causal=causal, window=window, interpret=True))
+    exp = np.asarray(fa_ops.attention_reference(q, k, v, causal=causal, window=window))
+    np.testing.assert_allclose(got, exp, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
+    got = np.asarray(fa_ops.attention(q, k, v, causal=True, interpret=True), np.float32)
+    exp = np.asarray(fa_ops.attention_reference(q, k, v, causal=True), np.float32)
+    np.testing.assert_allclose(got, exp, rtol=5e-2, atol=5e-2)
+
+
+def test_decode_attention_matches_full():
+    """Decode path == last row of full attention over the live prefix."""
+    rng = np.random.default_rng(5)
+    b, hq, hkv, s, d = 1, 4, 2, 64, 32
+    kv_len = 40
+    q_full = rng.standard_normal((b, hq, kv_len, d)).astype(np.float32)
+    k = np.zeros((b, hkv, s, d), np.float32)
+    v = np.zeros((b, hkv, s, d), np.float32)
+    k[:, :, :kv_len] = rng.standard_normal((b, hkv, kv_len, d))
+    v[:, :, :kv_len] = rng.standard_normal((b, hkv, kv_len, d))
+    out_dec = np.asarray(fa_ops.decode_attention(
+        jnp.asarray(q_full[:, :, -1:]), jnp.asarray(k), jnp.asarray(v), kv_len))
+    out_full = np.asarray(fa_ops.attention_reference(
+        jnp.asarray(q_full), jnp.asarray(k[:, :, :kv_len]), jnp.asarray(v[:, :, :kv_len]),
+        causal=True))
+    np.testing.assert_allclose(out_dec[:, :, 0], out_full[:, :, -1], rtol=1e-4, atol=1e-4)

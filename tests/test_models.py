@@ -1,0 +1,214 @@
+"""Model-level invariants: attention impl equivalence, decode==forward,
+MACE E(3) equivariance, MoE routing conservation, two-tower scoring."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import graphcast, mace, schnet
+from repro.models.recsys import two_tower
+from repro.models.transformer import config as tcfg, model as tmodel, moe as tmoe
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_cfg(**kw):
+    base = dict(
+        name="t", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, vocab=101, attn_impl="ref", compute_dtype=jnp.float32,
+    )
+    base.update(kw)
+    return tcfg.TransformerConfig(**base)
+
+
+def test_blocked_attention_equals_ref():
+    cfg = _tiny_cfg(sliding_window=16, qkv_bias=True)
+    cfg_b = dataclasses.replace(cfg, attn_impl="blocked", attn_block=8)
+    p = tmodel.init_params(KEY, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    l1, _ = tmodel.forward(p, toks, cfg)
+    l2, _ = tmodel.forward(p, toks, cfg_b)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-3, atol=2e-3)
+
+
+def test_scan_equals_unrolled_layers():
+    cfg = _tiny_cfg()
+    cfg_u = dataclasses.replace(cfg, scan_layers=False)
+    p = tmodel.init_params(KEY, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    l1, _ = tmodel.forward(p, toks, cfg)
+    l2, _ = tmodel.forward(p, toks, cfg_u)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-4)
+
+
+def test_decode_matches_forward_last_token():
+    cfg = _tiny_cfg()
+    p = tmodel.init_params(KEY, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, cfg.vocab)
+    full, _ = tmodel.forward(p, toks, cfg)
+    cache = tmodel.init_cache(cfg, 2, 16)
+    for i in range(8):
+        logits, cache = tmodel.decode_step(p, cache, toks[:, i : i + 1], cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(full[:, -1]), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_decode_scan_equals_unrolled():
+    cfg = _tiny_cfg()
+    cfg_u = dataclasses.replace(cfg, scan_layers=False)
+    p = tmodel.init_params(KEY, cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(3), (2, 1), 0, cfg.vocab)
+    l1, c1 = tmodel.decode_step(p, tmodel.init_cache(cfg, 2, 8), tok, cfg)
+    l2, c2 = tmodel.decode_step(p, tmodel.init_cache(cfg, 2, 8), tok, cfg_u)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1["k"]), np.asarray(c2["k"]), rtol=1e-5, atol=1e-6)
+
+
+def test_sliding_window_cache_is_ring():
+    cfg = _tiny_cfg(sliding_window=4)
+    cache = tmodel.init_cache(cfg, 2, 1024)
+    # SWA cache must be bounded by the (pow-2 rounded) window, not 1024
+    assert cache["k"].shape[3] <= 8
+
+
+def test_moe_conserves_tokens_and_routes_topk():
+    t, d, e, k, cap = 64, 16, 8, 2, 32
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (t, d))
+    router = jax.random.normal(jax.random.PRNGKey(5), (d, e))
+    w1 = jax.random.normal(jax.random.PRNGKey(6), (e, d, 24)) / 4
+    w3 = jax.random.normal(jax.random.PRNGKey(7), (e, d, 24)) / 4
+    w2 = jax.random.normal(jax.random.PRNGKey(8), (e, 24, d)) / 5
+    out, aux = tmoe.moe_ffn(
+        x, router, w1, w3, w2, top_k=k, capacity=cap, compute_dtype=jnp.float32
+    )
+    assert out.shape == (t, d)
+    assert np.isfinite(np.asarray(out)).all() and float(aux) > 0
+    # capacity large enough -> no token dropped -> output nonzero rows
+    assert (np.abs(np.asarray(out)).sum(-1) > 0).all()
+
+
+def test_moe_drops_over_capacity():
+    """capacity=1: most assignments dropped, output partially zero, no NaN."""
+    t, d, e = 32, 8, 4
+    x = jax.random.normal(KEY, (t, d))
+    router = jnp.zeros((d, e)).at[0, 0].set(10.0)  # everyone wants expert 0
+    w1 = jnp.ones((e, d, 8)) * 0.1
+    w3 = jnp.ones((e, d, 8)) * 0.1
+    w2 = jnp.ones((e, 8, d)) * 0.1
+    out, _ = tmoe.moe_ffn(
+        x, router, w1, w3, w2, top_k=1, capacity=1, compute_dtype=jnp.float32
+    )
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# --- MACE equivariance ------------------------------------------------------
+def _mol(rng, n=24, e=64):
+    return {
+        "node_feat": jnp.asarray(rng.integers(0, 10, n), jnp.int32),
+        "positions": jnp.asarray(rng.standard_normal((n, 3)) * 2, jnp.float32),
+        "edge_src": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        "edge_dst": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        "graph_ids": jnp.zeros((n,), jnp.int32),
+        "n_graphs": 1,
+        "labels": jnp.asarray([0.0], jnp.float32),
+    }
+
+
+def _rotation(rng):
+    q, _ = np.linalg.qr(rng.standard_normal((3, 3)))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_mace_e3_equivariance(seed):
+    rng = np.random.default_rng(seed)
+    cfg = mace.MACEConfig(d_hidden=16, n_rbf=6)
+    p = mace.init_params(KEY, cfg)
+    g = _mol(rng)
+    q = _rotation(rng)
+    pos = np.asarray(g["positions"])
+    e1 = np.asarray(mace.forward(p, g, cfg))
+    e2 = np.asarray(mace.forward(p, {**g, "positions": jnp.asarray(pos @ q.T, jnp.float32)}, cfg))
+    np.testing.assert_allclose(e1, e2, rtol=1e-4, atol=1e-5)  # E invariant
+    f1 = np.asarray(mace.forces(p, g, cfg))
+    f2 = np.asarray(mace.forces(p, {**g, "positions": jnp.asarray(pos @ q.T, jnp.float32)}, cfg))
+    np.testing.assert_allclose(f1 @ q.T, f2, rtol=1e-2, atol=1e-2)  # F equivariant (f32 rounding; violations would be O(1))
+    e3 = np.asarray(mace.forward(p, {**g, "positions": jnp.asarray(pos + 7.0, jnp.float32)}, cfg))
+    np.testing.assert_allclose(e1, e3, rtol=1e-4, atol=1e-5)  # translation
+
+
+def test_mace_chunked_equals_unchunked():
+    rng = np.random.default_rng(3)
+    g = _mol(rng)
+    cfg1 = mace.MACEConfig(d_hidden=16, n_rbf=6)
+    cfg2 = dataclasses.replace(cfg1, edge_chunks=4)
+    p = mace.init_params(KEY, cfg1)
+    np.testing.assert_allclose(
+        np.asarray(mace.forward(p, g, cfg1)),
+        np.asarray(mace.forward(p, g, cfg2)),
+        rtol=1e-4,
+    )
+
+
+def test_schnet_cutoff_kills_far_edges():
+    """Edges beyond the cutoff must contribute (numerically) nothing."""
+    rng = np.random.default_rng(5)
+    cfg = schnet.SchNetConfig(n_rbf=8, d_hidden=16, cutoff=2.0)
+    p = schnet.init_params(KEY, cfg)
+    n = 8
+    pos = np.zeros((n, 3), np.float32)
+    pos[4:] += 100.0  # second cluster far beyond cutoff
+    g = {
+        "node_feat": jnp.asarray(rng.integers(0, 5, n), jnp.int32),
+        "positions": jnp.asarray(pos),
+        "edge_src": jnp.asarray([0, 4], jnp.int32),   # 0-4 crosses clusters
+        "edge_dst": jnp.asarray([4, 0], jnp.int32),
+        "graph_ids": jnp.zeros((n,), jnp.int32),
+        "n_graphs": 1,
+        "labels": jnp.asarray([0.0], jnp.float32),
+    }
+    e_with = np.asarray(schnet.forward(p, g, cfg))
+    g2 = {**g, "edge_src": jnp.asarray([n, n], jnp.int32),
+          "edge_dst": jnp.asarray([n, n], jnp.int32)}  # masked edges
+    e_without = np.asarray(schnet.forward(p, g2, cfg))
+    np.testing.assert_allclose(e_with, e_without, atol=1e-5)
+
+
+def test_graphcast_bf16_close_to_f32():
+    rng = np.random.default_rng(6)
+    cfg = graphcast.GraphCastConfig(n_layers=2, d_hidden=32, n_vars=8)
+    cfgb = dataclasses.replace(cfg, bf16=True)
+    p = graphcast.init_params(KEY, cfg)
+    n, e = 64, 256
+    g = {
+        "node_feat": jnp.asarray(rng.standard_normal((n, 8)), jnp.float32),
+        "edge_src": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        "edge_dst": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        "positions": jnp.asarray(rng.standard_normal((n, 3)), jnp.float32),
+        "labels": jnp.asarray(rng.standard_normal((n, 8)), jnp.float32),
+    }
+    o1 = np.asarray(graphcast.forward(p, g, cfg))
+    o2 = np.asarray(graphcast.forward(p, g, cfgb))
+    np.testing.assert_allclose(o1, o2, rtol=0.1, atol=0.15)
+
+
+def test_two_tower_retrieval_matches_serve():
+    cfg = two_tower.TwoTowerConfig(
+        n_users=100, n_items=100, embed_dim=8, tower_mlp=(16, 8),
+        n_user_fields=2, n_item_fields=2, bag_size=4,
+    )
+    p = two_tower.init_params(KEY, cfg)
+    rng = np.random.default_rng(0)
+    ub = jnp.asarray(rng.integers(-1, 100, (1, 2, 4)), jnp.int32)
+    cb = jnp.asarray(rng.integers(-1, 100, (5, 2, 4)), jnp.int32)
+    scores = np.asarray(two_tower.score_candidates(p, ub, cb, cfg))
+    # pairwise serve on the same pairs must agree
+    batch = {"user_bags": jnp.tile(ub, (5, 1, 1)), "item_bags": cb}
+    pair = np.asarray(two_tower.serve_step(p, batch, cfg))
+    np.testing.assert_allclose(scores, pair, rtol=1e-5, atol=1e-6)
