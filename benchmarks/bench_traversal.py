@@ -1,11 +1,19 @@
 """T4 — 42-step reverse walks on updated graphs (paper Figs. 9/10),
 plus the beyond-paper MXU path (BSR SpMM reverse walk, interpret-validated
-on CPU; its roofline terms live in the dry-run tables)."""
+on CPU; its roofline terms live in the dry-run tables).
+
+For DiGraph two rows are emitted per update kind: the seed full-capacity
+gather+segment_sum path (``digraph_flat``) and the fused slot_walk prefix
+engine that ``DiGraph.reverse_walk`` now dispatches to (``digraph``) —
+their ratio is the headline of the slot_walk PR.  ``occupancy`` records
+the live-slot fraction of the arena prefix at walk time (post-compaction
+for the slot_walk row).
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import REPRESENTATIONS, edgebatch
+from repro.core import REPRESENTATIONS, edgebatch, traversal
 
 from . import common
 
@@ -29,21 +37,45 @@ def run(graph: str = "social_small"):
             g, _ = (
                 g.add_edges(batch) if kind == "insert" else g.remove_edges(batch)
             )
+            m_now = g.to_csr().m
+
+            if rep_name == "digraph":
+                # seed baseline first (before reverse_walk may compact):
+                # full-CAP_E gather+segment_sum, no prefix bound.
+                nv = g.n_max_vertex() + 1
+                occ0 = f"{g.live_fraction:.3f}"
+
+                def walk_flat():
+                    v = traversal.reverse_walk_flat(
+                        g.dst, g.slot_rows, STEPS, nv
+                    )
+                    np.asarray(v)
+
+                t_flat = common.timeit(walk_flat, repeats=3)
+                rows.append(
+                    {
+                        "name": f"walk{STEPS}/{kind}/{graph}/digraph_flat",
+                        "us_per_call": round(t_flat * 1e6, 1),
+                        "occupancy": occ0,
+                        "derived": f"edge_steps_per_s={m_now*STEPS/t_flat/1e6:.1f}M",
+                    }
+                )
 
             def walk():
                 v = g.reverse_walk(STEPS)
                 np.asarray(v)
 
             t = common.timeit(walk, repeats=3)
-            m_now = g.to_csr().m
+            occ = f"{g.live_fraction:.3f}" if hasattr(g, "live_fraction") else ""
             rows.append(
                 {
                     "name": f"walk{STEPS}/{kind}/{graph}/{rep_name}",
                     "us_per_call": round(t * 1e6, 1),
+                    "occupancy": occ,
                     "derived": f"edge_steps_per_s={m_now*STEPS/t/1e6:.1f}M",
                 }
             )
-    return common.emit(rows, ["name", "us_per_call", "derived"])
+    return common.emit(rows, ["name", "us_per_call", "occupancy", "derived"])
 
 
 if __name__ == "__main__":

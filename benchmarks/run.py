@@ -1,11 +1,15 @@
 """Benchmark driver — one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV per benchmark.
+Prints ``name,us_per_call,...`` CSV per benchmark; ``--json PATH``
+additionally writes the structured rows (suite -> [row dicts]) so
+``BENCH_*.json`` trajectory files can accumulate across PRs.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only load|clone|update|traversal|alloc]
+Usage: PYTHONPATH=src python -m benchmarks.run \
+    [--only load|clone|update|traversal|alloc] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -13,6 +17,10 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write results as JSON: {suite: [row, ...]}",
+    )
     args = ap.parse_args()
     from . import bench_alloc, bench_clone, bench_load, bench_traversal, bench_update
 
@@ -23,12 +31,25 @@ def main() -> None:
         "traversal": bench_traversal.run,  # paper Figs. 9-10
         "alloc": bench_alloc.run,        # paper Fig. 11
     }
+    if args.only and args.only not in suites:
+        ap.error(f"unknown suite {args.only!r}; choose from {sorted(suites)}")
+    if args.json:
+        # fail fast on an unwritable --json path before burning suite time,
+        # without truncating an existing trajectory file mid-failure
+        with open(args.json, "a"):
+            pass
+
     t0 = time.time()
+    results: dict[str, list] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
         print(f"# === {name} ===", flush=True)
-        fn()
+        results[name] = fn()
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(results, fh, indent=1, default=str)
+        print(f"# wrote {args.json}", file=sys.stderr)
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 

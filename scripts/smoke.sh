@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# PR smoke gate: tier-1 tests + the traversal benchmark (slot_walk vs the
+# seed digraph_flat path), writing BENCH_traversal.json so perf
+# regressions on the hot path show up in every PR's diff.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== traversal benchmark (social_small, 1e-2 update batches) =="
+python -m benchmarks.run --only traversal --json BENCH_traversal.json
+
+echo "== BENCH_traversal.json written =="

@@ -76,7 +76,10 @@ class AllocStats:
 
     ``relayouts`` counts whole-buffer reallocations (the expensive path the
     pow-2 slack exists to avoid); ``inplace_updates`` counts updates served
-    entirely from existing slack (the cheap path).
+    entirely from existing slack (the cheap path).  ``used_elems`` /
+    ``slack_elems`` track live edges vs dead-or-slack slots inside the
+    arena's bump prefix — the occupancy signal the traversal engine uses to
+    trigger block compaction (DESIGN.md §7).
     """
 
     relayouts: int = 0
@@ -94,3 +97,9 @@ class AllocStats:
     def slack_fraction(self) -> float:
         total = self.slack_elems + self.used_elems
         return self.slack_elems / total if total else 0.0
+
+    @property
+    def live_fraction(self) -> float:
+        """Live-slot share of the occupied arena prefix (1.0 when empty)."""
+        total = self.slack_elems + self.used_elems
+        return self.used_elems / total if total else 1.0

@@ -33,6 +33,12 @@ from . import alloc, arena, csr as csr_mod, edgebatch, util
 
 SENTINEL = util.SENTINEL
 
+#: Live-slot fraction of the arena bump prefix below which traversal-time
+#: auto-compaction kicks in (DESIGN.md §7).
+COMPACT_THRESHOLD = 0.5
+#: Don't bother compacting arenas smaller than this many slots.
+COMPACT_MIN_SLOTS = 4 * 128
+
 
 # ---------------------------------------------------------------------------
 # jitted device helpers (module level, cached per static shape)
@@ -74,35 +80,73 @@ def _jit_move_blocks(w_old: int, w_new: int, donate: bool):
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_lookup():
-    def fn(dst, lo, hi, qd):
-        return util.binsearch_window(dst, lo, hi, qd)
+def _jit_insert_chain(num_rows: int, donate: bool):
+    """Fused insert program: lookup + rank + scatter + per-row counts.
 
-    return jax.jit(fn)
+    One dispatch per batch instead of the seed's four-hop micro-dispatch
+    chain (lookup → ranks → apply → counts).  Query arrays are pow-2
+    padded by the caller (pad ``qd`` = SENTINEL, pad windows empty) so the
+    jit cache stays O(log B); ``num_rows`` is the pow-2-padded segment
+    count.
+    """
 
-
-@functools.lru_cache(maxsize=None)
-def _jit_apply_insert(donate: bool):
-    def fn(dst, wgt, pos, found, qd, qw, ins_pos):
+    def fn(dst, wgt, lo, hi, qd, qw, row_first, row_ids):
+        pos, found = util.binsearch_window(dst, lo, hi, qd)
+        nf = ((~found) & (qd != SENTINEL)).astype(jnp.int32)
+        c = jnp.cumsum(nf)
+        excl = c - nf  # exclusive cumsum
+        ranks = excl - excl[row_first]  # rank among this row's new edges
+        ins_pos = hi + ranks  # hi == row start + degree == first free slot
         oob = dst.shape[0]
         upd_pos = jnp.where(found, pos, oob)          # weight upsert
         wgt = wgt.at[upd_pos].set(qw, mode="drop")
-        new_pos = jnp.where(found | (qd == SENTINEL), oob, ins_pos)
+        new_pos = jnp.where(nf == 0, oob, ins_pos)
         dst = dst.at[new_pos].set(qd, mode="drop")
         wgt = wgt.at[new_pos].set(qw, mode="drop")
-        return dst, wgt
+        nf_counts = jax.ops.segment_sum(nf, row_ids, num_segments=num_rows)
+        return dst, wgt, nf_counts
 
     return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_apply_delete(donate: bool):
-    def fn(dst, pos, found):
+def _jit_delete_chain(num_rows: int, donate: bool):
+    """Fused delete program: lookup + SENTINEL scatter + per-row counts."""
+
+    def fn(dst, lo, hi, qd, row_ids):
+        pos, found = util.binsearch_window(dst, lo, hi, qd)
         oob = dst.shape[0]
         del_pos = jnp.where(found, pos, oob)
-        return dst.at[del_pos].set(SENTINEL, mode="drop")
+        dst = dst.at[del_pos].set(SENTINEL, mode="drop")
+        del_counts = jax.ops.segment_sum(
+            found.astype(jnp.int32), row_ids, num_segments=num_rows
+        )
+        return dst, del_counts
 
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_compact(cap_e: int):
+    """Gather every live edge into a freshly packed buffer (DESIGN.md §7).
+
+    ``src_idx``/``dst_idx`` are host-computed per-edge moves, pow-2 padded
+    (pad src clipped, pad dst out-of-bounds so it drops).  A fresh target
+    buffer makes the pass order-free — no aliasing hazards from moving
+    blocks left within one buffer.
+    """
+
+    def fn(dst, wgt, src_idx, dst_idx):
+        safe = jnp.clip(src_idx, 0, dst.shape[0] - 1)
+        nd = jnp.full((cap_e,), SENTINEL, jnp.int32).at[dst_idx].set(
+            dst[safe], mode="drop"
+        )
+        nw = jnp.zeros((cap_e,), jnp.float32).at[dst_idx].set(
+            wgt[safe], mode="drop"
+        )
+        return nd, nw
+
+    return jax.jit(fn)
 
 
 @functools.lru_cache(maxsize=None)
@@ -126,18 +170,6 @@ def _jit_sort_rows(width: int, donate: bool):
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_insert_ranks():
-    def fn(found, row_first):
-        nf = (~found).astype(jnp.int32)
-        c = jnp.cumsum(nf)
-        excl = c - nf  # exclusive cumsum
-        base = excl[row_first]  # first batch index of this edge's row
-        return excl - base
-
-    return jax.jit(fn)
-
-
-@functools.lru_cache(maxsize=None)
 def _jit_grow_buffer(new_cap: int, cap_v: int):
     def fn(dst, wgt, slot_rows):
         nd = jnp.full((new_cap,), SENTINEL, jnp.int32).at[: dst.shape[0]].set(dst)
@@ -150,19 +182,6 @@ def _jit_grow_buffer(new_cap: int, cap_v: int):
         return nd, nw, nr
 
     return jax.jit(fn)
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_segment_counts():
-    def fn(found, row_ids, num: int):
-        return (
-            jax.ops.segment_sum(found.astype(jnp.int32), row_ids, num_segments=num),
-            jax.ops.segment_sum(
-                (~found).astype(jnp.int32), row_ids, num_segments=num
-            ),
-        )
-
-    return jax.jit(fn, static_argnums=(2,))
 
 
 def _pad_pow2(a: np.ndarray, fill) -> np.ndarray:
@@ -193,6 +212,13 @@ class DiGraph:
     # seal-on-snapshot: while True, a snapshot shares the device payload and
     # the next in-place mutation pays one detach copy before donating again.
     sealed: bool = False
+    # memoized derived views; any mutation resets them to None.
+    _csr_cache: Optional[csr_mod.CSR] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _blocks_cache: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     # ------------------------------------------------------------------
     @property
@@ -254,7 +280,7 @@ class DiGraph:
         slot_rows[:total] = row_of_block
         exists = np.zeros(n_cap, bool)
         exists[: c.n] = True
-        return cls(
+        g = cls(
             degrees=deg,
             capacities=caps,
             starts=starts,
@@ -266,6 +292,8 @@ class DiGraph:
             wgt=jnp.asarray(wgt),
             slot_rows=jnp.asarray(slot_rows),
         )
+        g._refresh_occupancy()
+        return g
 
     @classmethod
     def empty(cls, n_vertices: int = 0) -> "DiGraph":
@@ -314,7 +342,25 @@ class DiGraph:
         self.exists[ids] = True
         added = int(np.unique(ids[newly]).shape[0])
         self.n += added
+        if added:
+            self._invalidate_derived()
         return added
+
+    # ------------------------------------------------------------------
+    # occupancy bookkeeping (live vs dead slots in the bump prefix)
+    # ------------------------------------------------------------------
+    def _refresh_occupancy(self) -> None:
+        self.stats.used_elems = int(self.m)
+        self.stats.slack_elems = max(int(self.layout.bump) - int(self.m), 0)
+
+    @property
+    def live_fraction(self) -> float:
+        """Fraction of the arena's bump prefix holding live edges."""
+        return self.stats.live_fraction
+
+    def _invalidate_derived(self) -> None:
+        self._csr_cache = None
+        self._blocks_cache = None
 
     # ------------------------------------------------------------------
     # the paper's core ops
@@ -360,31 +406,30 @@ class DiGraph:
         else:
             self.stats.record_inplace()
 
-        # membership search + scatter insert (device)
+        # fused lookup + rank + scatter + count (one dispatch, DESIGN.md §2)
         lo = self.starts[s.astype(np.int64)]
         lo = np.where(lo < 0, 0, lo)
         hi = lo + self.degrees[s.astype(np.int64)]
         row_first = np.repeat(first_idx, counts).astype(np.int32)
-
-        qd = jnp.asarray(d)
-        pos, found = _jit_lookup()(
-            self.dst, jnp.asarray(lo.astype(np.int32)), jnp.asarray(hi.astype(np.int32)), qd
-        )
-        ranks = _jit_insert_ranks()(found, jnp.asarray(row_first))
-        ins_pos = jnp.asarray((lo + self.degrees[s.astype(np.int64)]).astype(np.int32)) + ranks
-        self.dst, self.wgt = _jit_apply_insert(donate)(
-            self.dst, self.wgt, pos, found, qd, jnp.asarray(w), ins_pos
-        )
-
-        # per-row new-edge counts -> host metadata
         row_ids = np.repeat(np.arange(rows.shape[0], dtype=np.int32), counts)
-        _, nf_counts = _jit_segment_counts()(
-            found, jnp.asarray(row_ids), int(rows.shape[0])
+        nr_pad = alloc.next_pow2(max(rows.shape[0], 1))
+
+        self.dst, self.wgt, nf_counts = _jit_insert_chain(nr_pad, donate)(
+            self.dst,
+            self.wgt,
+            jnp.asarray(_pad_pow2(lo.astype(np.int32), 0)),
+            jnp.asarray(_pad_pow2(hi.astype(np.int32), 0)),
+            jnp.asarray(_pad_pow2(d.astype(np.int32), SENTINEL)),
+            jnp.asarray(_pad_pow2(w.astype(np.float32), 0.0)),
+            jnp.asarray(_pad_pow2(row_first, 0)),
+            jnp.asarray(_pad_pow2(row_ids, 0)),
         )
-        nf_counts = np.asarray(nf_counts, dtype=np.int64)
+        nf_counts = np.asarray(nf_counts, dtype=np.int64)[: rows.shape[0]]
         self.degrees[rows64] += nf_counts
         dm = int(nf_counts.sum())
         self.m += dm
+        self._invalidate_derived()
+        self._refresh_occupancy()
 
         # restore sorted rows per capacity class
         self._sort_dirty_rows(rows64[nf_counts > 0], donate)
@@ -409,22 +454,21 @@ class DiGraph:
             0,
             lo + self.degrees[s.astype(np.int64)],
         )
-        pos, found = _jit_lookup()(
-            self.dst,
-            jnp.asarray(lo.astype(np.int32)),
-            jnp.asarray(hi.astype(np.int32)),
-            jnp.asarray(d),
-        )
-        self.dst = _jit_apply_delete(donate)(self.dst, pos, found)
-
         row_ids = np.repeat(np.arange(rows.shape[0], dtype=np.int32), counts)
-        del_counts, _ = _jit_segment_counts()(
-            found, jnp.asarray(row_ids), int(rows.shape[0])
+        nr_pad = alloc.next_pow2(max(rows.shape[0], 1))
+        self.dst, del_counts = _jit_delete_chain(nr_pad, donate)(
+            self.dst,
+            jnp.asarray(_pad_pow2(lo.astype(np.int32), 0)),
+            jnp.asarray(_pad_pow2(hi.astype(np.int32), 0)),
+            jnp.asarray(_pad_pow2(d.astype(np.int32), SENTINEL)),
+            jnp.asarray(_pad_pow2(row_ids, 0)),
         )
-        del_counts = np.asarray(del_counts, dtype=np.int64)
+        del_counts = np.asarray(del_counts, dtype=np.int64)[: rows.shape[0]]
         self.degrees[rows64] -= del_counts
         dm = int(del_counts.sum())
         self.m -= dm
+        self._invalidate_derived()
+        self._refresh_occupancy()
         self._sort_dirty_rows(rows64[del_counts > 0], donate)
         self.stats.record_inplace()
         return dm
@@ -504,11 +548,72 @@ class DiGraph:
             )
 
     # ------------------------------------------------------------------
+    # block compaction (DESIGN.md §7)
+    # ------------------------------------------------------------------
+    def compact(self) -> int:
+        """Repack every live block into a dense arena prefix.
+
+        Heavy deletions leave dead SENTINEL slots (and freed/oversized
+        blocks) inside the bump prefix; traversal tiles then burn MXU lanes
+        on padding.  This pass re-derives minimal CP2AA capacity classes
+        from the current degrees, gathers all live edges into a fresh
+        pow-2 buffer in one jitted pass, and resets the arena.  Returns
+        the number of slots reclaimed from the traversal prefix.
+        """
+        live = np.nonzero(self.degrees > 0)[0]
+        deg = self.degrees[live]
+        new_caps = alloc.edge_capacities(deg) if live.size else np.zeros(0, np.int64)
+        csum = np.cumsum(new_caps) if live.size else np.zeros(0, np.int64)
+        new_starts = csum - new_caps
+        total = int(csum[-1]) if live.size else 0
+        new_cap_e = alloc.next_pow2(max(total, 2))
+        old_bump = int(self.layout.bump)
+
+        m = int(deg.sum())
+        if m:
+            dcs = np.cumsum(deg)
+            off = np.arange(m, dtype=np.int64) - np.repeat(dcs - deg, deg)
+            src_idx = (np.repeat(self.starts[live], deg) + off).astype(np.int32)
+            dst_idx = (np.repeat(new_starts, deg) + off).astype(np.int32)
+        else:
+            src_idx = np.zeros(0, np.int32)
+            dst_idx = np.zeros(0, np.int32)
+        self.dst, self.wgt = _jit_compact(new_cap_e)(
+            self.dst,
+            self.wgt,
+            jnp.asarray(_pad_pow2(src_idx, 0)),
+            jnp.asarray(_pad_pow2(dst_idx, new_cap_e)),
+        )
+        slot_rows = np.full(new_cap_e, self.cap_v, np.int32)
+        if total:
+            slot_rows[:total] = np.repeat(live.astype(np.int32), new_caps)
+        self.slot_rows = jnp.asarray(slot_rows)
+
+        self.capacities[:] = 0
+        self.capacities[live] = new_caps
+        self.starts[:] = -1
+        self.starts[live] = new_starts
+        self.layout = arena.ArenaLayout(capacity=new_cap_e, bump=total)
+        self.sealed = False  # fresh buffers: snapshots keep the old payload
+        self.stats.record_relayout()
+        self._refresh_occupancy()
+        self._invalidate_derived()
+        return old_bump - total
+
+    def maybe_compact(self, threshold: float = COMPACT_THRESHOLD) -> bool:
+        """Compact iff dead slots dominate the bump prefix (DESIGN.md §7)."""
+        bump = int(self.layout.bump)
+        if bump < COMPACT_MIN_SLOTS or self.m >= threshold * bump:
+            return False
+        self.compact()
+        return True
+
+    # ------------------------------------------------------------------
     # cloning / snapshots / export (paper Alg 6)
     # ------------------------------------------------------------------
     def clone(self) -> "DiGraph":
         """Deep copy — device buffers copied, layout preserved."""
-        return DiGraph(
+        g = DiGraph(
             degrees=self.degrees.copy(),
             capacities=self.capacities.copy(),
             starts=self.starts.copy(),
@@ -520,6 +625,8 @@ class DiGraph:
             wgt=jnp.array(self.wgt, copy=True),
             slot_rows=jnp.array(self.slot_rows, copy=True),
         )
+        g._refresh_occupancy()  # clone starts with fresh stats
+        return g
 
     def snapshot(self) -> "DiGraph":
         """O(1) device-cost snapshot: shares payload, seals both handles.
@@ -536,10 +643,17 @@ class DiGraph:
             starts=self.starts.copy(),
             exists=self.exists.copy(),
             layout=self.layout.clone(),
+            stats=dataclasses.replace(self.stats),
             sealed=True,
         )
 
     def to_csr(self) -> csr_mod.CSR:
+        """Compact CSR export, memoized until the next mutation."""
+        if self._csr_cache is None:
+            self._csr_cache = self._build_csr()
+        return self._csr_cache
+
+    def _build_csr(self) -> csr_mod.CSR:
         nv = self.n_max_vertex() + 1
         deg = self.degrees[:nv]
         total = int(deg.sum())
@@ -562,13 +676,57 @@ class DiGraph:
             m=total,
         )
 
-    def reverse_walk(self, steps: int) -> jnp.ndarray:
-        """Paper Alg 13 on the slotted buffer (contiguous SoA, no compaction)."""
+    def reverse_walk(
+        self,
+        steps: int,
+        *,
+        backend: str = "auto",
+        auto_compact: bool = True,
+        interpret: bool = False,
+    ) -> jnp.ndarray:
+        """Paper Alg 13 via the fused slot_walk tile engine (DESIGN.md §6).
+
+        Only the arena's bump prefix (pow-2 rounded) is walked, and when
+        dead slots dominate after heavy deletions the blocks are first
+        compacted so traversal tiles stay dense (``auto_compact``).
+        """
         from . import traversal
 
-        return traversal.reverse_walk_flat(
-            self.dst, self.slot_rows, steps, self.n_max_vertex() + 1
+        if auto_compact:
+            self.maybe_compact()
+        # quantize the prefix bound so the jit cache stays bounded (<= 64
+        # shapes per buffer capacity) without pow-2's up-to-2x overshoot.
+        q = max(self.cap_e // 64, 128)
+        edges_hi = min(-(-max(int(self.layout.bump), 1) // q) * q, self.cap_e)
+        nv = self.n_max_vertex() + 1
+        # block intervals feed only the off-TPU scatter-free path
+        use_blocks = backend == "xla" or (
+            backend == "auto" and jax.default_backend() != "tpu"
         )
+        block_lo, block_hi = self._walk_blocks(nv) if use_blocks else (None, None)
+        return traversal.reverse_walk_slotted(
+            self.dst,
+            self.slot_rows,
+            steps,
+            nv,
+            edges_hi=edges_hi,
+            backend=backend,
+            block_lo=block_lo,
+            block_hi=block_hi,
+            interpret=interpret,
+        )
+
+    def _walk_blocks(self, nv: int):
+        """Per-vertex [lo, hi) slot intervals, memoized until mutation."""
+        if self._blocks_cache is None or self._blocks_cache[0] != nv:
+            starts = self.starts[:nv]
+            has_block = starts >= 0
+            lo = np.where(has_block, starts, 0).astype(np.int32)
+            hi = np.where(has_block, starts + self.degrees[:nv], 0).astype(
+                np.int32
+            )
+            self._blocks_cache = (nv, jnp.asarray(lo), jnp.asarray(hi))
+        return self._blocks_cache[1], self._blocks_cache[2]
 
     def n_max_vertex(self) -> int:
         nz = np.nonzero(self.exists)[0]

@@ -31,6 +31,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import alloc, csr as csr_mod, util
 
+if hasattr(jax, "shard_map"):  # jax >= 0.5
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        # older jax spells check_vma as check_rep
+        return _shard_map_legacy(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )
+
 SENTINEL = util.SENTINEL
 
 
@@ -114,7 +126,7 @@ def make_reverse_walk(
             v, _ = jax.lax.scan(body, v, None, length=steps)
             return v[None]
 
-        return jax.shard_map(
+        return _shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(spec, spec, spec),
@@ -205,7 +217,7 @@ def _jit_shard_update(out_cap: int, op: str, mesh_axes, rows_per_shard: int):
 
     def fn(mesh, src_l, dst_l, wgt_l, bs, bd, bw):
         spec = P(mesh_axes)
-        return jax.shard_map(
+        return _shard_map(
             local,
             mesh=mesh,
             in_specs=(spec,) * 6,

@@ -1,8 +1,11 @@
 """k-step reverse walk (paper Alg 13): visits = Aᵀᵏ · 1̄ computed directly on
 the out-edge representation (visits1[u] = Σ_{(u,v)∈E} visits0[v]).
 
-Baseline implementation is gather + segment_sum; the optimized TPU path
-(kernels/bsr_spmm) re-blocks the adjacency for the MXU — see benchmarks.
+``reverse_walk_flat`` is the seed baseline (gather + segment_sum over the
+FULL slot-buffer capacity, re-masking every dead SENTINEL lane per step);
+``reverse_walk_slotted`` is the optimized path through the fused
+``kernels/slot_walk`` tile engine (DESIGN.md §6), which only walks the
+arena's live prefix and uses the MXU one-hot-rank reduction on TPU.
 float32 counts: 42 steps on large graphs overflow int; the paper benchmarks
 wall-time, not values.
 """
@@ -50,6 +53,43 @@ def reverse_walk_flat(
 
     visits, _ = jax.lax.scan(body, visits, None, length=steps)
     return visits
+
+
+def reverse_walk_slotted(
+    dst: jnp.ndarray,
+    slot_rows: jnp.ndarray,
+    steps: int,
+    num_vertices: int,
+    *,
+    edges_hi: int | None = None,
+    backend: str = "auto",
+    block_lo: jnp.ndarray | None = None,
+    block_hi: jnp.ndarray | None = None,
+    normalize: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Reverse walk via the fused slot_walk tile engine (DESIGN.md §6).
+
+    Same semantics as ``reverse_walk_flat`` but only the ``edges_hi``-slot
+    arena prefix is processed, tiled into 128-slot MXU tiles.  ``backend``
+    selects the Pallas kernel ("pallas"), the jnp tile fold ("xla"), or
+    picks per accelerator ("auto"); per-vertex block intervals enable the
+    scatter-free prefix-sum step off-TPU.
+    """
+    from ..kernels.slot_walk import ops as _slot_ops  # lazy: avoid import cycle
+
+    return _slot_ops.slot_walk(
+        dst,
+        slot_rows,
+        steps,
+        num_vertices,
+        edges_hi=edges_hi,
+        backend=backend,
+        block_lo=block_lo,
+        block_hi=block_hi,
+        normalize=normalize,
+        interpret=interpret,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "num_vertices"))

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused reverse-walk tile reduction over the slotted arena.
+
+The k-step reverse walk (paper Alg 13) is, per step, a segment-sum of
+gathered ``visits`` values into the owning row of every live edge slot.  On
+the slotted DiGraph buffer each vertex's block is *contiguous*, so within a
+128-slot tile the row ids form contiguous runs (a run per block, dead-slot
+tails mapped to ``sink``).  That lets each tile be reduced with one MXU
+matmul: cumsum the run-change flags into local *ranks*, build the
+[slot, rank] one-hot matrix, and fold ``vals @ onehot`` into per-rank
+partial sums — O(CAP_E/128) matmuls instead of CAP_E scalar scatters.  A
+tiny cross-tile segment-sum outside the kernel merges tile-seam runs
+(ops.py), and the step loop is a ``lax.scan`` *around* the kernel so
+``visits`` never leaves the device between steps.
+
+Inputs (ops.py pads the live prefix to whole tiles):
+  rows [T, EB]  int32 slot owners; dead/pad slots carry ``sink``
+  vals [T, EB]  f32 gathered visits, zero on dead/pad slots
+Outputs:
+  partials  [T, EB]  per-tile per-rank sums
+  rank_rows [T, EB]  global row id per rank (``sink`` for dead ranks)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(rows_ref, vals_ref, part_ref, rank_ref, *, sink: int):
+    rows = rows_ref[0]                      # [EB]
+    vals = vals_ref[...]                    # [1, EB]
+    eb = rows.shape[0]
+    prev = jnp.concatenate([jnp.full((1,), -1, rows.dtype), rows[:-1]])
+    run_start = rows != prev                # block boundaries within the tile
+    rank = jnp.cumsum(run_start.astype(jnp.int32)) - 1  # [EB] in [0, EB)
+    oh = (
+        jax.lax.broadcasted_iota(jnp.int32, (eb, eb), 1) == rank[:, None]
+    ).astype(jnp.float32)                   # [slot, rank]
+    part_ref[...] = jnp.dot(vals, oh, preferred_element_type=jnp.float32)
+    live = rows < sink
+    rr = jnp.max(
+        jnp.where(oh.astype(bool) & live[:, None], rows[:, None], -1), axis=0
+    )
+    rank_ref[0] = jnp.where(rr >= 0, rr, sink)
+
+
+@functools.partial(jax.jit, static_argnames=("sink", "interpret"))
+def slot_walk_partials(
+    rows: jnp.ndarray,
+    vals: jnp.ndarray,
+    *,
+    sink: int,
+    interpret: bool = False,
+):
+    """One walk step's tile reduction: rows/vals [T, EB] -> (partials, rank_rows)."""
+    t, eb = rows.shape
+    kern = functools.partial(_kernel, sink=sink)
+    part, rank = pl.pallas_call(
+        kern,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, eb), lambda i: (i, 0)),
+            pl.BlockSpec((1, eb), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, eb), lambda i: (i, 0)),
+            pl.BlockSpec((1, eb), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, eb), jnp.float32),
+            jax.ShapeDtypeStruct((t, eb), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, vals)
+    return part, rank

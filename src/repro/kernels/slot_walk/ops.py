@@ -1,0 +1,260 @@
+"""jit'd wrapper: prefix-tile the slotted buffer, scan the step loop.
+
+Two jitted backends behind one dispatcher:
+
+  * ``pallas``  — the MXU tile kernel (kernel.py); ``interpret=True`` runs
+    the same program on CPU for parity tests.
+  * ``xla``     — identical prefix/tile semantics via a plain segment-sum
+    (the fast path off-TPU, and the shape the Pallas kernel must match).
+
+Both only process ``edges_hi`` slots (the arena's bump prefix, rounded up
+to a power of two by the caller so the jit cache stays O(log CAP_E))
+instead of the full CAP_E buffer — on updated graphs that alone is the
+difference between walking the paper's live edges and walking every dead
+SENTINEL lane the allocator ever reserved.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import util
+from . import kernel as _kernel
+
+SENTINEL = util.SENTINEL
+EB = 128  # slots per tile (MXU-native)
+
+
+def _prep(dst, slot_rows, num_vertices: int, edges_hi: int):
+    """Slice the live prefix, mask dead slots, pad to whole tiles.
+
+    Dead/pad slots get row ``sink`` and gather index ``num_vertices`` —
+    the step loop extends ``visits`` with a zero sink entry, so no
+    per-step masking is needed (masks are folded once, here, outside the
+    scan).
+    """
+    e = min(int(edges_hi), dst.shape[0])
+    t = max(-(-e // EB), 1)
+    e_pad = t * EB
+    sink = num_vertices
+    d = dst[:e]
+    sr = slot_rows[:e]
+    valid = (d != SENTINEL) & (sr < num_vertices)
+    rows = jnp.where(valid, sr, sink).astype(jnp.int32)
+    gidx = jnp.where(valid, jnp.clip(d, 0, num_vertices - 1), num_vertices)
+    rows_p = jnp.full((e_pad,), sink, jnp.int32).at[:e].set(rows).reshape(t, EB)
+    gidx_p = (
+        jnp.full((e_pad,), num_vertices, jnp.int32).at[:e].set(gidx).reshape(t, EB)
+    )
+    return rows_p, gidx_p
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("steps", "num_vertices", "edges_hi", "normalize", "interpret"),
+)
+def slot_walk_pallas(
+    dst: jnp.ndarray,
+    slot_rows: jnp.ndarray,
+    steps: int,
+    num_vertices: int,
+    *,
+    edges_hi: int,
+    normalize: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    sink = num_vertices
+    rows_p, gidx_p = _prep(dst, slot_rows, num_vertices, edges_hi)
+    zero = jnp.zeros((1,), jnp.float32)
+    visits = jnp.ones((num_vertices,), jnp.float32)
+
+    def body(visits, _):
+        vals = jnp.concatenate([visits, zero])[gidx_p]  # sink gathers 0.0
+        part, rank = _kernel.slot_walk_partials(
+            rows_p, vals, sink=sink, interpret=interpret
+        )
+        nxt = jax.ops.segment_sum(
+            part.reshape(-1),
+            jnp.minimum(rank.reshape(-1), sink),
+            num_segments=sink + 1,
+        )[:num_vertices]
+        if normalize:
+            nxt = nxt / jnp.maximum(jnp.max(nxt), 1.0)
+        return nxt, None
+
+    visits, _ = jax.lax.scan(body, visits, None, length=steps)
+    return visits
+
+
+@functools.partial(
+    jax.jit, static_argnames=("steps", "num_vertices", "edges_hi", "normalize")
+)
+def slot_walk_xla(
+    dst: jnp.ndarray,
+    slot_rows: jnp.ndarray,
+    steps: int,
+    num_vertices: int,
+    *,
+    edges_hi: int,
+    normalize: bool = False,
+) -> jnp.ndarray:
+    sink = num_vertices
+    rows_p, gidx_p = _prep(dst, slot_rows, num_vertices, edges_hi)
+    rows_f = rows_p.reshape(-1)
+    gidx_f = gidx_p.reshape(-1)
+    zero = jnp.zeros((1,), jnp.float32)
+    visits = jnp.ones((num_vertices,), jnp.float32)
+
+    def body(visits, _):
+        vals = jnp.concatenate([visits, zero])[gidx_f]  # sink gathers 0.0
+        nxt = jax.ops.segment_sum(vals, rows_f, num_segments=sink + 1)[
+            :num_vertices
+        ]
+        if normalize:
+            nxt = nxt / jnp.maximum(jnp.max(nxt), 1.0)
+        return nxt, None
+
+    visits, _ = jax.lax.scan(body, visits, None, length=steps)
+    return visits
+
+
+def _twosum(a, b):
+    """Knuth TwoSum: s + e == a + b exactly (s = fl(a+b))."""
+    s = a + b
+    bp = s - a
+    return s, (a - (s - bp)) + (b - bp)
+
+
+def _comp_scan(x):
+    """Compensated inclusive scan: returns (hi, lo) with hi+lo ≈ exact."""
+
+    def combine(l, r):
+        s, e = _twosum(l[0], r[0])
+        return s, l[1] + r[1] + e
+
+    return jax.lax.associative_scan(combine, (x, jnp.zeros_like(x)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("steps", "num_vertices", "edges_hi", "normalize")
+)
+def slot_walk_blocked(
+    dst: jnp.ndarray,
+    slot_rows: jnp.ndarray,
+    block_lo: jnp.ndarray,
+    block_hi: jnp.ndarray,
+    steps: int,
+    num_vertices: int,
+    *,
+    edges_hi: int,
+    normalize: bool = False,
+) -> jnp.ndarray:
+    """Scatter-free walk step via block-interval prefix sums.
+
+    Each vertex's slots are one contiguous interval [block_lo, block_hi)
+    (§2 invariant) and dead slots gather 0.0, so a step reduces to
+    ``P[hi] - P[lo]`` over the running prefix sum of the gathered values
+    — gather + cumsum + a few [V] gathers, no scatter unit needed.
+    Rows without a block pass lo == hi == 0.
+
+    A naive global f32 cumsum loses the row sum to cancellation once the
+    total dwarfs it (err ~ ulp(total)).  The prefix is therefore kept in
+    two levels: a plain cumsum *within* each 128-slot tile (row-local
+    magnitudes) plus a TwoSum-compensated scan over the T tile totals,
+    and the difference is assembled per part so the large bases are
+    never rounded into the result.
+    """
+    _, gidx_p = _prep(dst, slot_rows, num_vertices, edges_hi)
+    t = gidx_p.shape[0]
+    e_pad = t * EB
+    lo = jnp.clip(block_lo, 0, e_pad).astype(jnp.int32)
+    hi = jnp.clip(block_hi, 0, e_pad).astype(jnp.int32)
+    # split each prefix position into (tile, offset); position e_pad folds
+    # onto the last tile's tail so the gather stays in range.
+    q_lo = jnp.minimum(lo // EB, t - 1)
+    q_hi = jnp.minimum(hi // EB, t - 1)
+    r_lo = lo - q_lo * EB
+    r_hi = hi - q_hi * EB
+    zero = jnp.zeros((1,), jnp.float32)
+    zcol = jnp.zeros((t, 1), jnp.float32)
+    visits = jnp.ones((num_vertices,), jnp.float32)
+
+    def body(visits, _):
+        vals = jnp.concatenate([visits, zero])[gidx_p]   # [t, EB]; sink -> 0.0
+        intra = jnp.concatenate([zcol, jnp.cumsum(vals, axis=1)], axis=1)
+        bh, bl = _comp_scan(intra[:, -1])                # inclusive tile bases
+        bh = jnp.concatenate([zero, bh[:-1]])            # -> exclusive
+        bl = jnp.concatenate([zero, bl[:-1]])
+        intra_f = intra.reshape(-1)
+        ih = intra_f[q_hi * (EB + 1) + r_hi]
+        il = intra_f[q_lo * (EB + 1) + r_lo]
+        nxt = (bh[q_hi] - bh[q_lo]) + ((ih - il) + (bl[q_hi] - bl[q_lo]))
+        if normalize:
+            nxt = nxt / jnp.maximum(jnp.max(nxt), 1.0)
+        return nxt, None
+
+    visits, _ = jax.lax.scan(body, visits, None, length=steps)
+    return visits
+
+
+def slot_walk(
+    dst: jnp.ndarray,
+    slot_rows: jnp.ndarray,
+    steps: int,
+    num_vertices: int,
+    *,
+    edges_hi: int | None = None,
+    backend: str = "auto",
+    block_lo: jnp.ndarray | None = None,
+    block_hi: jnp.ndarray | None = None,
+    normalize: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """k-step reverse walk over the slotted arena's live prefix.
+
+    ``edges_hi`` bounds the slots processed (callers pass the arena bump,
+    quantized); None means the whole buffer.  ``backend`` is ``auto``
+    (pallas on TPU, xla elsewhere), ``pallas`` or ``xla``.  When the
+    caller can supply per-vertex block intervals (``block_lo`` /
+    ``block_hi``, int32 [num_vertices], lo == hi == 0 for blockless
+    rows), the xla backend upgrades to the scatter-free prefix-sum
+    formulation.
+    """
+    if edges_hi is None:
+        edges_hi = dst.shape[0]
+    edges_hi = min(int(edges_hi), dst.shape[0])
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "pallas":
+        return slot_walk_pallas(
+            dst,
+            slot_rows,
+            steps,
+            num_vertices,
+            edges_hi=edges_hi,
+            normalize=normalize,
+            interpret=interpret,
+        )
+    if backend == "xla":
+        if block_lo is not None and block_hi is not None:
+            return slot_walk_blocked(
+                dst,
+                slot_rows,
+                block_lo,
+                block_hi,
+                steps,
+                num_vertices,
+                edges_hi=edges_hi,
+                normalize=normalize,
+            )
+        return slot_walk_xla(
+            dst,
+            slot_rows,
+            steps,
+            num_vertices,
+            edges_hi=edges_hi,
+            normalize=normalize,
+        )
+    raise ValueError(f"unknown slot_walk backend: {backend!r}")

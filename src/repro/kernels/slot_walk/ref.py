@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: full-buffer masked gather + segment_sum walk.
+
+Shape-identical semantics to ops.slot_walk (the seed ``reverse_walk_flat``
+formulation): every slot of the buffer is re-masked each step, so dead
+SENTINEL lanes and stale ``slot_rows`` contribute nothing.  Tests compare
+the tiled kernel against this and against the dense numpy oracle in
+``core.traversal``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import util
+
+SENTINEL = util.SENTINEL
+
+
+def slot_walk_reference(
+    dst: jnp.ndarray,
+    slot_rows: jnp.ndarray,
+    steps: int,
+    num_vertices: int,
+    normalize: bool = False,
+) -> jnp.ndarray:
+    valid = (dst != SENTINEL) & (slot_rows < num_vertices)
+    safe_dst = jnp.where(valid, jnp.clip(dst, 0, num_vertices - 1), 0)
+    rows = jnp.where(valid, slot_rows, num_vertices).astype(jnp.int32)
+    visits = jnp.ones((num_vertices,), jnp.float32)
+    for _ in range(steps):
+        vals = jnp.where(valid, visits[safe_dst], 0.0)
+        visits = jax.ops.segment_sum(
+            vals, rows, num_segments=num_vertices + 1
+        )[:num_vertices]
+        if normalize:
+            visits = visits / jnp.maximum(jnp.max(visits), 1.0)
+    return visits

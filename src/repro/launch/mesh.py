@@ -6,14 +6,24 @@ device state.  The dry-run (and only the dry-run) forces 512 host devices.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types; older versions imply Auto
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _make_mesh(shape: tuple, axes: tuple):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips/pod; multi-pod adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return _make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple:
@@ -23,4 +33,4 @@ def data_axes(mesh) -> tuple:
 
 def make_mesh_like(shape: tuple, axes: tuple):
     """Elastic re-mesh helper: arbitrary (shape, axes) from survivors."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return _make_mesh(shape, axes)

@@ -1,5 +1,10 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dependency — pip install repro[dev]"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import REPRESENTATIONS, alloc, edgebatch, from_coo, util

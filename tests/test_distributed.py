@@ -14,12 +14,12 @@ SCRIPT = textwrap.dedent(
     sys.path.insert(0, "src")
     import jax
     import numpy as np
-    from jax.sharding import AxisType
     from repro.core import distributed as dist, from_coo, traversal
     from repro.io import synthetic
+    from repro.launch import mesh as mesh_mod
 
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = mesh_mod.make_mesh_like((8,), ("data",))
 
     rng = np.random.default_rng(0)
     src, dstv = synthetic.uniform_edges(rng, 64, 500)

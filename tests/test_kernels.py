@@ -3,6 +3,10 @@ with shape/dtype sweeps + hypothesis property tests."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dependency — pip install repro[dev]"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import alloc, from_coo, traversal
