@@ -1,0 +1,74 @@
+"""T6 — interleaved streaming workload (paper Figs. 9-10 setting).
+
+Alternating rounds of one *mixed* update batch (half deletions of
+existing edges, half uniform-random insertions, applied through the
+shared ``apply(UpdatePlan)`` entry point every representation now
+exposes) followed by a reverse-walk traversal.  This is the regime the
+paper's headline comparison lives in: update cost, traversal cost, and
+any deferred consolidation the traversal triggers (LazyCSR assemble,
+DiGraph auto-compaction) all land inside the measured rounds.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import REPRESENTATIONS, edgebatch, updates
+
+from . import common
+
+ROUNDS = 12      # early rounds compile fresh shapes; measure the tail
+WARMUP_ROUNDS = 6
+WALK_STEPS = 4
+
+
+def run(graph: str = "web_small", frac: float = 1e-2):
+    c = common.make_graph(graph)
+    rng = np.random.default_rng(11)
+    half = max(int(c.m * frac) // 2, 1)
+    # one batch pair per round, shared across representations: the plan
+    # cache hands every structure the identical canonical UpdatePlan.
+    batches = [
+        (
+            edgebatch.random_insertions(rng, c.n, half),
+            edgebatch.random_deletions(rng, c, half),
+        )
+        for _ in range(ROUNDS)
+    ]
+    rows = []
+    for rep_name, cls in REPRESENTATIONS.items():
+        g = cls.from_csr(c)
+        t_upd = t_walk = 0.0
+        for i, (ins, dele) in enumerate(batches):
+            plan = updates.plan_update(inserts=ins, deletes=dele)
+            t0 = time.perf_counter()
+            g, _ = g.apply(plan)
+            g.block_on()
+            du = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            jax.block_until_ready(g.reverse_walk(WALK_STEPS))
+            dw = time.perf_counter() - t0
+            if i >= WARMUP_ROUNDS:  # early rounds pay compilation; skip
+                t_upd += du
+                t_walk += dw
+        n_meas = ROUNDS - WARMUP_ROUNDS
+        per_round = (t_upd + t_walk) / n_meas
+        rows.append(
+            {
+                "name": f"stream/{graph}/f{frac:g}/{rep_name}",
+                "us_per_round": round(per_round * 1e6, 1),
+                "derived": f"update_us={t_upd/n_meas*1e6:.1f} "
+                f"walk_us={t_walk/n_meas*1e6:.1f} "
+                f"edges_per_s={2*half/(t_upd/n_meas)/1e6:.2f}M "
+                f"rounds={n_meas}",
+            }
+        )
+    return common.emit(rows, ["name", "us_per_round", "derived"])
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(sys.argv[1] if len(sys.argv) > 1 else "web_small")

@@ -40,6 +40,24 @@ def timeit(fn, *, warmup: int = 1, repeats: int = 3) -> float:
     return float(np.median(times))
 
 
+def timeit_prepared(setup, fn, *, warmup: int = 1, repeats: int = 3) -> float:
+    """Median wall seconds of ``fn(setup())`` with ``setup()`` untimed.
+
+    For in-place mutation benchmarks: ``setup`` builds a fresh victim
+    (e.g. a clone) outside the timed region, so the measurement contains
+    only the operation itself — no clone-cost subtraction heuristics.
+    """
+    for _ in range(warmup):
+        fn(setup())
+    times = []
+    for _ in range(repeats):
+        state = setup()
+        t0 = time.perf_counter()
+        fn(state)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
 def emit(rows, header):
     print(",".join(header))
     for r in rows:

@@ -4,7 +4,7 @@ additionally writes the structured rows (suite -> [row dicts]) so
 ``BENCH_*.json`` trajectory files can accumulate across PRs.
 
 Usage: PYTHONPATH=src python -m benchmarks.run \
-    [--only load|clone|update|traversal|alloc] [--json PATH]
+    [--only load|clone|update|traversal|stream|alloc] [--json PATH]
 """
 from __future__ import annotations
 
@@ -22,13 +22,21 @@ def main() -> None:
         help="also write results as JSON: {suite: [row, ...]}",
     )
     args = ap.parse_args()
-    from . import bench_alloc, bench_clone, bench_load, bench_traversal, bench_update
+    from . import (
+        bench_alloc,
+        bench_clone,
+        bench_load,
+        bench_stream,
+        bench_traversal,
+        bench_update,
+    )
 
     suites = {
         "load": bench_load.run,          # paper Fig. 2 / Table 1
         "clone": bench_clone.run,        # paper Fig. 3
         "update": bench_update.run,      # paper Figs. 5-8
         "traversal": bench_traversal.run,  # paper Figs. 9-10
+        "stream": bench_stream.run,      # paper Figs. 9-10, interleaved
         "alloc": bench_alloc.run,        # paper Fig. 11
     }
     if args.only and args.only not in suites:

@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
-# PR smoke gate: tier-1 tests + the traversal benchmark (slot_walk vs the
-# seed digraph_flat path), writing BENCH_traversal.json so perf
-# regressions on the hot path show up in every PR's diff.
+# PR smoke gate: tier-1 tests + the perf-trajectory benchmarks.
+#  * traversal (slot_walk vs the seed digraph_flat path) -> BENCH_traversal.json
+#  * update    (batch insert/delete, fixed pre-cloned timing) -> BENCH_update.json
+#  * stream    (interleaved mixed-batch apply + walk rounds) -> BENCH_stream.json
+# so perf regressions on both hot paths (updates AND traversal) show up
+# in every PR's diff.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,4 +16,10 @@ python -m pytest -x -q
 echo "== traversal benchmark (social_small, 1e-2 update batches) =="
 python -m benchmarks.run --only traversal --json BENCH_traversal.json
 
-echo "== BENCH_traversal.json written =="
+echo "== update benchmark (web_small, Figs. 5-8) =="
+python -m benchmarks.run --only update --json BENCH_update.json
+
+echo "== stream benchmark (web_small, interleaved mixed batches) =="
+python -m benchmarks.run --only stream --json BENCH_stream.json
+
+echo "== BENCH_traversal.json / BENCH_update.json / BENCH_stream.json written =="

@@ -7,13 +7,14 @@ Representations (DESIGN.md §3):
   ChunkedGraph — Aspen-analogue append-only pages, O(1) snapshots
   Vector2D     — naive per-vertex host arrays (Fig. 1 strawman)
 """
-from . import alloc, arena, bitset, traversal, util  # noqa: F401
+from . import alloc, arena, bitset, traversal, updates, util  # noqa: F401
 from .chunked import ChunkedGraph  # noqa: F401
 from .coo import SortedCOO  # noqa: F401
 from .csr import CSR, from_coo, from_dense  # noqa: F401
 from .digraph import DiGraph  # noqa: F401
 from .edgebatch import EdgeBatch, from_arrays, random_deletions, random_insertions  # noqa: F401
 from .lazy import LazyCSR  # noqa: F401
+from .updates import UpdatePlan, plan_update  # noqa: F401
 from .vector2d import Vector2D  # noqa: F401
 
 #: Representation registry used by benchmarks/tests; ordering mirrors the

@@ -22,39 +22,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import alloc, csr as csr_mod, edgebatch, traversal, util
+from . import alloc, csr as csr_mod, edgebatch, traversal, updates, util
 
 SENTINEL = util.SENTINEL
 PAGE = 64  # edges per page (Aspen chunks are ~dozens of ints)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_merge_rows(k_old: int, k_batch: int, k_new: int):
-    """Merge gathered rows [A,k_old] with batch rows [A,k_batch] -> [A,k_new]."""
+def _jit_apply_rows(k_old: int, k_batch: int, k_new: int):
+    """Mixed merge of batch runs [A,k_batch] into page rows [A,k_old].
 
-    def fn(row_d, row_w, b_d, b_w):
-        # batch first: stable sort + dedup-keep-first = weight upsert
-        keys = jnp.concatenate([b_d, row_d], axis=1)
+    Delete ops mask their row hits to SENTINEL; insert ops concatenate
+    *ahead* of the row so the stable sort + dedup-keep-first pass
+    implements weight upsert — one program for insert, delete and mixed
+    plans (the UpdatePlan guarantees one op per key).
+    """
+
+    def fn(row_d, row_w, b_d, b_w, b_del):
+        bdel = b_del != 0
+        eq = b_d[:, :, None] == row_d[:, None, :]  # [A, K, W]
+        killed = jnp.any(eq & bdel[:, :, None], axis=1)
+        row_d2 = jnp.where(killed, SENTINEL, row_d)
+        ins_d = jnp.where(bdel, SENTINEL, b_d)
+        keys = jnp.concatenate([ins_d, row_d2], axis=1)
         vals = jnp.concatenate([b_w, row_w], axis=1)
         order = jnp.argsort(keys, axis=1, stable=True)
         keys = jnp.take_along_axis(keys, order, axis=1)
         vals = jnp.take_along_axis(vals, order, axis=1)
         keys, vals, counts = util.dedup_sorted_rows(keys, vals)
         return keys[:, :k_new], vals[:, :k_new], counts
-
-    return jax.jit(fn)
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_delete_rows(k_old: int, k_batch: int):
-    def fn(row_d, row_w, b_d):
-        hit = util.row_contains(b_d, row_d)
-        keys = jnp.where(hit, SENTINEL, row_d)
-        order = jnp.argsort(keys, axis=1, stable=True)
-        keys = jnp.take_along_axis(keys, order, axis=1)
-        vals = jnp.take_along_axis(row_w, order, axis=1)
-        counts = jnp.sum(keys != SENTINEL, axis=1).astype(jnp.int32)
-        return keys, vals, counts
 
     return jax.jit(fn)
 
@@ -199,33 +195,26 @@ class ChunkedGraph:
         self.page_owner = jnp.array(self.page_owner, copy=True)
         self.sealed = False
 
-    def _update(self, batch: edgebatch.EdgeBatch, op: str) -> int:
-        if batch.n == 0:
+    def _apply_plan(self, plan: updates.UpdatePlan) -> int:
+        if plan.n_ops == 0:
             return 0
         self._detach()
-        s, d, w = batch.to_numpy()
-        if op == "add":
-            self._reserve_vertices(int(max(s.max(), d.max())) + 1)
-        rows, first_idx, counts = np.unique(s, return_index=True, return_counts=True)
-        if op == "del":
-            keep = rows < len(self.page_table)
-            rows, first_idx, counts = rows[keep], first_idx[keep], counts[keep]
-            if rows.shape[0] == 0:
-                return 0
+        if plan.n_ins:
+            self._reserve_vertices(plan.max_insert_vertex() + 1)
+        # shared out-of-range filter (delete-only runs at unseen rows)
+        sel = np.nonzero(plan.rows_in_range(len(self.page_table)))[0]
+        if sel.shape[0] == 0:
+            return 0
+        rows = plan.rows[sel]
         deg_old = self.degrees[rows]
-        kb_all = int(counts.max())
+        ins_count = plan.ins_count[sel]
         total_dm = 0
-        # bucket rows by pow-2 page count of the merged row
-        if op == "add":
-            pages_new = -(-(deg_old + counts) // PAGE)
-        else:
-            pages_new = np.maximum(-(-deg_old // PAGE), 1)
-        pclass = np.maximum(
-            np.vectorize(alloc.next_pow2)(np.maximum(pages_new, 1)), 1
-        )
+        # bucket rows by pow-2 page count of the merged row (upper bound)
+        pages_new = np.maximum(-(-(deg_old + ins_count) // PAGE), 1)
+        pclass = updates.next_pow2_vec(pages_new)
         for pc in np.unique(pclass):
-            sel = pclass == pc
-            r = rows[sel]
+            gsel = np.nonzero(pclass == pc)[0]
+            r = rows[gsel]
             a_pad = alloc.next_pow2(max(r.shape[0], 1))
             # gather current rows
             tbl = np.full((a_pad, int(pc)), -1, np.int64)
@@ -235,22 +224,15 @@ class ChunkedGraph:
             row_d, row_w = _jit_gather_pages(int(pc))(
                 self.pages_dst, self.pages_wgt, jnp.asarray(tbl)
             )
-            # batch rows
-            kb = alloc.next_pow2(max(int(counts[sel].max()), 1))
-            b_d = np.full((a_pad, kb), SENTINEL, np.int32)
-            b_w = np.zeros((a_pad, kb), np.float32)
-            for i, (fi, ct) in enumerate(zip(first_idx[sel], counts[sel])):
-                b_d[i, :ct] = d[fi : fi + ct]
-                b_w[i, :ct] = w[fi : fi + ct]
-            if op == "add":
-                new_d, new_w, cnts = _jit_merge_rows(int(pc) * PAGE, kb, int(pc) * PAGE)(
-                    row_d, row_w, jnp.asarray(b_d), jnp.asarray(b_w)
-                )
-            else:
-                new_d, new_w, cnts = _jit_delete_rows(int(pc) * PAGE, kb)(
-                    row_d, row_w, jnp.asarray(b_d)
-                )
-            cnts = np.asarray(cnts, np.int64)[: r.shape[0]]
+            # the group's batch runs, built lazily from the plan's op
+            # stream (K floored at 4 to keep the jit-shape lattice coarse)
+            kb = max(alloc.next_pow2(int(plan.run_count[sel[gsel]].max())), 4)
+            b_d, b_w, b_l = plan.run_tiles(sel[gsel], kb, a_pad)
+            n = r.shape[0]
+            new_d, new_w, cnts = _jit_apply_rows(int(pc) * PAGE, kb, int(pc) * PAGE)(
+                row_d, row_w, b_d, b_w, b_l
+            )
+            cnts = np.asarray(cnts, np.int64)[:n]
             # functional write: fresh pages for every touched row
             need_pages = np.maximum(-(-cnts // PAGE), 1)
             new_tbl = np.full((a_pad, int(pc)), -1, np.int64)
@@ -278,13 +260,18 @@ class ChunkedGraph:
 
     def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
         g = self if inplace else self.snapshot()
-        dm = g._update(batch, "add")
+        dm = g._apply_plan(updates.plan_update(inserts=batch))
         return g, dm
 
     def remove_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
         g = self if inplace else self.snapshot()
-        dm = -g._update(batch, "del")
-        return g, dm
+        dm = g._apply_plan(updates.plan_update(deletes=batch))
+        return g, -dm
+
+    def apply(self, plan: updates.UpdatePlan, *, inplace: bool = True):
+        """Mixed delete+insert batch in one pass; returns (graph, net ΔM)."""
+        g = self if inplace else self.snapshot()
+        return g, g._apply_plan(plan)
 
     # ------------------------------------------------------------------
     def snapshot(self) -> "ChunkedGraph":

@@ -3,7 +3,9 @@
 cuGraph applies batch updates by sort-merging the batch with the existing
 edge list and rebuilding the graph.  Here: a (src,dst)-lexsorted COO with
 SENTINEL padding to a pow-2 capacity; *every update builds a new instance*
-(there is no in-place path — exactly cuGraph's behaviour).
+(there is no in-place path — exactly cuGraph's behaviour).  All updates —
+insert, delete, or a mixed batch — run through one fused program
+(``_jit_apply``) fed by the shared ``UpdatePlan`` layer (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -14,19 +16,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import alloc, csr as csr_mod, edgebatch, traversal, util
+from . import alloc, csr as csr_mod, edgebatch, traversal, updates, util
 
 SENTINEL = util.SENTINEL
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_merge(out_cap: int):
-    def fn(gs, gd, gw, bs, bd, bw):
-        # batch first: stable sort keeps batch entries ahead of equal keys,
-        # so dedup-keep-first implements weight upsert.
-        s = jnp.concatenate([bs, gs])
-        d = jnp.concatenate([bd, gd])
-        w = jnp.concatenate([bw, gw])
+def _jit_apply(out_cap: int):
+    """Mixed delete+insert rebuild: mark deletes, sort-merge inserts.
+
+    Graph entries found in the (sorted) delete set blank to SENTINEL;
+    insert entries concatenate *ahead* of the graph so the stable
+    dedup-keep-first pass implements weight upsert.  The plan guarantees
+    one op per key, so deletes and inserts never fight.
+    """
+
+    def fn(gs, gd, gw, ds, dd, is_, id_, iw):
+        _, found = util.searchsorted_2d(ds, dd, gs, gd)
+        gs = jnp.where(found, SENTINEL, gs)
+        gd = jnp.where(found, SENTINEL, gd)
+        s = jnp.concatenate([is_, gs])
+        d = jnp.concatenate([id_, gd])
+        w = jnp.concatenate([iw, gw])
         order = util.lexsort2(s, d)
         s, d, w = s[order], d[order], w[order]
         dup = jnp.concatenate(
@@ -44,20 +55,6 @@ def _jit_merge(out_cap: int):
             w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
         else:
             s, d, w = s[:out_cap], d[:out_cap], w[:out_cap]
-        return s, d, w, m
-
-    return jax.jit(fn)
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_filter():
-    def fn(gs, gd, gw, bs, bd):
-        pos, found = util.searchsorted_2d(bs, bd, gs, gd)
-        keep_s = jnp.where(found, SENTINEL, gs)
-        keep_d = jnp.where(found, SENTINEL, gd)
-        order = util.lexsort2(keep_s, keep_d)
-        s, d, w = keep_s[order], keep_d[order], gw[order]
-        m = jnp.sum(s != SENTINEL).astype(jnp.int32)
         return s, d, w, m
 
     return jax.jit(fn)
@@ -91,28 +88,29 @@ class SortedCOO:
 
     # -- updates (always a new instance, cuGraph semantics) --------------
     def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = False):
-        del inplace  # rebuild-only representation
-        if batch.n == 0:
-            return self, 0
-        n = max(self.n, batch.max_vertex() + 1)
-        out_cap = alloc.next_pow2(max(self.m + batch.n, 2))
-        s, d, w, m = _jit_merge(out_cap)(
-            self.src, self.dst, self.wgt, batch.src, batch.dst, batch.wgt
-        )
-        m = int(m)
-        new = SortedCOO(s, d, w, n, m)
-        return new, m - self.m
+        g, dm = self.apply(updates.plan_update(inserts=batch), inplace=inplace)
+        return g, dm
 
     def remove_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = False):
-        del inplace
-        if batch.n == 0:
+        g, dm = self.apply(updates.plan_update(deletes=batch), inplace=inplace)
+        return g, -dm
+
+    def apply(self, plan: updates.UpdatePlan, *, inplace: bool = False):
+        """Mixed delete+insert rebuild in one fused dispatch (net ΔM)."""
+        del inplace  # rebuild-only representation
+        if plan.n_ops == 0:
             return self, 0
-        s, d, w, m = _jit_filter()(
-            self.src, self.dst, self.wgt, batch.src, batch.dst
+        ins = plan.insert_batch()
+        dele = plan.delete_batch()
+        n = max(self.n, plan.max_insert_vertex() + 1)
+        out_cap = alloc.next_pow2(max(self.m + plan.n_ins, 2))
+        s, d, w, m = _jit_apply(out_cap)(
+            self.src, self.dst, self.wgt,
+            dele.src, dele.dst,
+            ins.src, ins.dst, ins.wgt,
         )
         m = int(m)
-        new = SortedCOO(s, d, w, self.n, m)
-        return new, self.m - m
+        return SortedCOO(s, d, w, n, m), m - self.m
 
     # -- export / queries -------------------------------------------------
     def clone(self) -> "SortedCOO":

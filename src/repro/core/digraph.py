@@ -7,17 +7,17 @@ Layout (SoA, DESIGN.md §2):
 Each vertex owns a contiguous *block* of edge slots whose size is a CP2AA
 power-of-2 class (``alloc.edge_capacity``).  Blocks are handed out by the
 host-side ``ArenaLayout`` (free lists + bump pointer) over one flat device
-buffer.  Rows are ascending with SENTINEL padding, so:
+buffer.  Rows are ascending with SENTINEL padding.
 
-  * membership/insert position = windowed binary search (device),
-  * batch insert  = scatter into slack + per-class row sort   (paper setUnion,
-    O(d_u + Δd_u) per touched row),
-  * batch delete  = scatter SENTINEL + per-class row sort      (setDifference),
-  * growth        = block move to a bigger class (CP2AA realloc path),
-  * "in-place"    = buffer donation (XLA reuses the allocation).
-
-Capacity classes double as jit-cache buckets: every compiled shape is a
-power of two, so steady-state updates never recompile.
+Updates flow through the shared batch-update engine (DESIGN.md §9):
+``core/updates.py`` canonicalizes a batch into an ``UpdatePlan`` once
+(sort, dedup, per-row runs, padded operands — plan-cached for replayed
+batches), then ``apply`` runs ONE fused ``kernels/slot_update`` dispatch
+per pow-2 width group: gather touched rows, merge the sorted runs
+(deletes + weight upserts + ranked inserts), re-sort, and scatter back —
+with grown rows landing directly in their new CP2AA block.  Buffer
+donation keeps it in place; capacity classes double as jit-cache buckets,
+so steady-state updates never recompile.
 """
 from __future__ import annotations
 
@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import alloc, arena, csr as csr_mod, edgebatch, util
+from . import alloc, arena, csr as csr_mod, edgebatch, updates, util
+from ..kernels.slot_update import ops as _su_ops
 
 SENTINEL = util.SENTINEL
 
@@ -38,94 +39,16 @@ SENTINEL = util.SENTINEL
 COMPACT_THRESHOLD = 0.5
 #: Don't bother compacting arenas smaller than this many slots.
 COMPACT_MIN_SLOTS = 4 * 128
+#: Off-TPU write-back dispatch: arenas up to this many slots always use
+#: the full-buffer gather rebuild (its dense passes beat CPU XLA scatter
+#: overhead there); beyond it, batches touching < 1/10 of the arena
+#: switch to per-group scatters so small updates stay O(batch).
+_REBUILD_MAX_CAP = 1 << 21
 
 
 # ---------------------------------------------------------------------------
 # jitted device helpers (module level, cached per static shape)
 # ---------------------------------------------------------------------------
-@functools.lru_cache(maxsize=None)
-def _jit_move_blocks(w_old: int, w_new: int, donate: bool):
-    def fn(dst, wgt, slot_rows, old_starts, new_starts, rows, deg, old_caps):
-        # gather old rows (width w_old), write into new blocks (width w_new)
-        a = old_starts.shape[0]
-        lane_o = jnp.arange(w_old, dtype=jnp.int32)[None, :]
-        lane_n = jnp.arange(w_new, dtype=jnp.int32)[None, :]
-        valid = old_starts[:, None] >= 0
-        src_idx = jnp.clip(old_starts[:, None] + lane_o, 0, dst.shape[0] - 1)
-        row_d = jnp.where(
-            valid & (lane_o < deg[:, None]), dst[src_idx], SENTINEL
-        )
-        row_w = jnp.where(valid & (lane_o < deg[:, None]), wgt[src_idx], 0.0)
-        # sentinel-fill the old region first (freed block must read empty);
-        # each row fills only its OWN old capacity — w_old is the group max.
-        old_flat = jnp.where(
-            valid & (lane_o < old_caps[:, None]),
-            old_starts[:, None] + lane_o,
-            dst.shape[0],
-        ).reshape(-1)
-        dst = dst.at[old_flat].set(SENTINEL, mode="drop")
-        # scatter into the new region
-        ok = new_starts[:, None] >= 0
-        new_flat = jnp.where(ok, new_starts[:, None] + lane_n, dst.shape[0]).reshape(-1)
-        pad_d = jnp.full((a, w_new), SENTINEL, jnp.int32).at[:, :w_old].set(row_d)
-        pad_w = jnp.zeros((a, w_new), jnp.float32).at[:, :w_old].set(row_w)
-        dst = dst.at[new_flat].set(pad_d.reshape(-1), mode="drop")
-        wgt = wgt.at[new_flat].set(pad_w.reshape(-1), mode="drop")
-        slot_rows = slot_rows.at[new_flat].set(
-            jnp.broadcast_to(rows[:, None], (a, w_new)).reshape(-1), mode="drop"
-        )
-        return dst, wgt, slot_rows
-
-    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_insert_chain(num_rows: int, donate: bool):
-    """Fused insert program: lookup + rank + scatter + per-row counts.
-
-    One dispatch per batch instead of the seed's four-hop micro-dispatch
-    chain (lookup → ranks → apply → counts).  Query arrays are pow-2
-    padded by the caller (pad ``qd`` = SENTINEL, pad windows empty) so the
-    jit cache stays O(log B); ``num_rows`` is the pow-2-padded segment
-    count.
-    """
-
-    def fn(dst, wgt, lo, hi, qd, qw, row_first, row_ids):
-        pos, found = util.binsearch_window(dst, lo, hi, qd)
-        nf = ((~found) & (qd != SENTINEL)).astype(jnp.int32)
-        c = jnp.cumsum(nf)
-        excl = c - nf  # exclusive cumsum
-        ranks = excl - excl[row_first]  # rank among this row's new edges
-        ins_pos = hi + ranks  # hi == row start + degree == first free slot
-        oob = dst.shape[0]
-        upd_pos = jnp.where(found, pos, oob)          # weight upsert
-        wgt = wgt.at[upd_pos].set(qw, mode="drop")
-        new_pos = jnp.where(nf == 0, oob, ins_pos)
-        dst = dst.at[new_pos].set(qd, mode="drop")
-        wgt = wgt.at[new_pos].set(qw, mode="drop")
-        nf_counts = jax.ops.segment_sum(nf, row_ids, num_segments=num_rows)
-        return dst, wgt, nf_counts
-
-    return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_delete_chain(num_rows: int, donate: bool):
-    """Fused delete program: lookup + SENTINEL scatter + per-row counts."""
-
-    def fn(dst, lo, hi, qd, row_ids):
-        pos, found = util.binsearch_window(dst, lo, hi, qd)
-        oob = dst.shape[0]
-        del_pos = jnp.where(found, pos, oob)
-        dst = dst.at[del_pos].set(SENTINEL, mode="drop")
-        del_counts = jax.ops.segment_sum(
-            found.astype(jnp.int32), row_ids, num_segments=num_rows
-        )
-        return dst, del_counts
-
-    return jax.jit(fn, donate_argnums=(0,) if donate else ())
-
-
 @functools.lru_cache(maxsize=None)
 def _jit_compact(cap_e: int):
     """Gather every live edge into a freshly packed buffer (DESIGN.md §7).
@@ -147,26 +70,6 @@ def _jit_compact(cap_e: int):
         return nd, nw
 
     return jax.jit(fn)
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_sort_rows(width: int, donate: bool):
-    def fn(dst, wgt, starts):
-        lane = jnp.arange(width, dtype=jnp.int32)[None, :]
-        valid = starts[:, None] >= 0
-        idx = jnp.where(valid, starts[:, None] + lane, dst.shape[0])
-        safe = jnp.clip(idx, 0, dst.shape[0] - 1)
-        keys = jnp.where(valid, dst[safe], SENTINEL)
-        vals = wgt[safe]
-        order = jnp.argsort(keys, axis=1, stable=True)
-        keys = jnp.take_along_axis(keys, order, axis=1)
-        vals = jnp.take_along_axis(vals, order, axis=1)
-        flat = idx.reshape(-1)
-        dst = dst.at[flat].set(keys.reshape(-1), mode="drop")
-        wgt = wgt.at[flat].set(vals.reshape(-1), mode="drop")
-        return dst, wgt
-
-    return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
 
 
 @functools.lru_cache(maxsize=None)
@@ -375,177 +278,212 @@ class DiGraph:
 
     def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
         """Graph union G ∪ ΔG (paper Alg 8).  Returns (graph, ΔM)."""
-        g = self if inplace else self.clone()
-        g._detach()
-        dm = g._add_edges_impl(batch, donate=True)
+        g, dm = self.apply(updates.plan_update(inserts=batch), inplace=inplace)
         return g, dm
 
     def remove_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
         """Graph subtraction G \\ ΔG (paper Alg 7).  Returns (graph, ΔM)."""
+        g, dm = self.apply(updates.plan_update(deletes=batch), inplace=inplace)
+        return g, -dm
+
+    def apply(self, plan: updates.UpdatePlan, *, inplace: bool = True):
+        """Apply a mixed delete+insert UpdatePlan in one pass (DESIGN.md §9).
+
+        Returns ``(graph, ΔM)`` with ΔM the *net* edge-count change
+        (negative when deletions dominate).
+        """
         g = self if inplace else self.clone()
         g._detach()
-        dm = g._remove_edges_impl(batch, donate=True)
+        dm = g._apply_impl(plan, donate=True)
         return g, dm
 
-    # -- insertion ------------------------------------------------------
-    def _add_edges_impl(self, batch: edgebatch.EdgeBatch, donate: bool) -> int:
-        if batch.n == 0:
+    # -- the fused plan/apply pipeline ------------------------------------
+    def _apply_impl(self, plan: updates.UpdatePlan, donate: bool) -> int:
+        if plan.n_ops == 0:
             return 0
-        s, d, w = batch.to_numpy()
-        self.add_vertices(np.concatenate([s, d]))
+        if plan.n_ins:
+            s, d, _ = plan.insert_arrays()
+            self.add_vertices(np.concatenate([s, d]))
 
-        rows, first_idx, counts = np.unique(s, return_index=True, return_counts=True)
-        rows64 = rows.astype(np.int64)
-        deg_old = self.degrees[rows64]
-        ub = deg_old + counts
-        need = alloc.edge_capacities(ub)
-        grow_mask = need > self.capacities[rows64]
+        # shared out-of-range filter: delete-only runs aimed at unseen rows
+        sel = np.nonzero(plan.rows_in_range(self.cap_v))[0]
+        deg_old = self.degrees[plan.rows[sel]]
+        ins_count = plan.ins_count[sel]
+        act = (deg_old > 0) | (ins_count > 0)  # rows with any effect
+        sel, deg_old, ins_count = sel[act], deg_old[act], ins_count[act]
+        if sel.shape[0] == 0:
+            return 0
+        rows = plan.rows[sel]
+        old_caps = self.capacities[rows]
+        old_starts = self.starts[rows]
 
-        if grow_mask.any():
-            self._grow_blocks(rows64[grow_mask], need[grow_mask], donate)
+        # CP2AA grow decisions (host): rows whose insert upper bound spills
+        # their class get a fresh block — the slot_update dispatch moves
+        # them as part of the same program.
+        ub = deg_old + ins_count
+        grow = ub > old_caps
+        new_caps = old_caps.copy()
+        new_starts = old_starts.copy()
+        if grow.any():
+            g_idx = np.nonzero(grow)[0]
+            need = alloc.edge_capacities(ub[grow])
+            new_caps[g_idx] = need
+            pending: list[int] = []
+            for i, c in zip(g_idx, need):
+                got = self.layout.try_alloc(int(c))
+                if got is None:
+                    pending.append(int(i))
+                else:
+                    new_starts[i] = got
+            if pending:
+                target = self.layout.grow_target(int(need.sum()))
+                self.dst, self.wgt, self.slot_rows = _jit_grow_buffer(
+                    target, self.cap_v
+                )(self.dst, self.wgt, self.slot_rows)
+                self.layout.capacity = target
+                self.stats.record_relayout()
+                for i in pending:
+                    got = self.layout.try_alloc(int(new_caps[i]))
+                    assert got is not None
+                    new_starts[i] = got
+            self.stats.record_relayout()
         else:
             self.stats.record_inplace()
 
-        # fused lookup + rank + scatter + count (one dispatch, DESIGN.md §2)
-        lo = self.starts[s.astype(np.int64)]
-        lo = np.where(lo < 0, 0, lo)
-        hi = lo + self.degrees[s.astype(np.int64)]
-        row_first = np.repeat(first_idx, counts).astype(np.int32)
-        row_ids = np.repeat(np.arange(rows.shape[0], dtype=np.int32), counts)
-        nr_pad = alloc.next_pow2(max(rows.shape[0], 1))
-
-        self.dst, self.wgt, nf_counts = _jit_insert_chain(nr_pad, donate)(
-            self.dst,
-            self.wgt,
-            jnp.asarray(_pad_pow2(lo.astype(np.int32), 0)),
-            jnp.asarray(_pad_pow2(hi.astype(np.int32), 0)),
-            jnp.asarray(_pad_pow2(d.astype(np.int32), SENTINEL)),
-            jnp.asarray(_pad_pow2(w.astype(np.float32), 0.0)),
-            jnp.asarray(_pad_pow2(row_first, 0)),
-            jnp.asarray(_pad_pow2(row_ids, 0)),
+        # gather + merge per pow-2 width group (exact capacity classes
+        # off-TPU, 128-slot tiles on TPU — the floor is the backend's,
+        # see kernels/slot_update/ops.py).  Write-back picks the cheaper
+        # of two formulations.  TPU always scatters per group.  Off-TPU
+        # the full-buffer gather rebuild pays a ~cap_e-proportional
+        # constant (~5ns/slot/array + the host slot map) while scatters
+        # pay ~100ns per touched slot plus heavier per-group dispatches;
+        # measured on this container the rebuild wins up to ~2M-slot
+        # arenas even for single-edge batches, so only a big arena with
+        # a proportionally tiny batch takes the scatter path (keeping
+        # small updates O(batch), not O(|E|)).  The Pallas merge is only
+        # exact for ids < 2**24 (f32 one-hot matmuls), so huge-vertex
+        # graphs fall back to the XLA merge.
+        on_tpu = jax.default_backend() == "tpu"
+        merge_backend = (
+            "pallas" if on_tpu and self.cap_v < _su_ops.PALLAS_MAX_ID else "xla"
         )
-        nf_counts = np.asarray(nf_counts, dtype=np.int64)[: rows.shape[0]]
-        self.degrees[rows64] += nf_counts
-        dm = int(nf_counts.sum())
-        self.m += dm
-        self._invalidate_derived()
-        self._refresh_occupancy()
-
-        # restore sorted rows per capacity class
-        self._sort_dirty_rows(rows64[nf_counts > 0], donate)
-        return dm
-
-    # -- deletion ---------------------------------------------------------
-    def _remove_edges_impl(self, batch: edgebatch.EdgeBatch, donate: bool) -> int:
-        if batch.n == 0:
-            return 0
-        s, d, _ = batch.to_numpy()
-        in_range = s < self.cap_v
-        s, d = s[in_range], d[in_range]
-        if s.shape[0] == 0:
-            return 0
-        rows, first_idx, counts = np.unique(s, return_index=True, return_counts=True)
-        rows64 = rows.astype(np.int64)
-
-        lo = self.starts[s.astype(np.int64)]
-        lo = np.where(lo < 0, 0, lo)
-        hi = np.where(
-            self.starts[s.astype(np.int64)] < 0,
-            0,
-            lo + self.degrees[s.astype(np.int64)],
+        touched = int(new_caps.sum() + old_caps[grow].sum())
+        use_scatter = on_tpu or (
+            self.cap_e > _REBUILD_MAX_CAP and touched * 10 < self.cap_e
         )
-        row_ids = np.repeat(np.arange(rows.shape[0], dtype=np.int32), counts)
-        nr_pad = alloc.next_pow2(max(rows.shape[0], 1))
-        self.dst, del_counts = _jit_delete_chain(nr_pad, donate)(
-            self.dst,
-            jnp.asarray(_pad_pow2(lo.astype(np.int32), 0)),
-            jnp.asarray(_pad_pow2(hi.astype(np.int32), 0)),
-            jnp.asarray(_pad_pow2(d.astype(np.int32), SENTINEL)),
-            jnp.asarray(_pad_pow2(row_ids, 0)),
+        wclass = np.maximum(
+            updates.next_pow2_vec(new_caps), _su_ops.width_floor()
         )
-        del_counts = np.asarray(del_counts, dtype=np.int64)[: rows.shape[0]]
-        self.degrees[rows64] -= del_counts
-        dm = int(del_counts.sum())
-        self.m -= dm
-        self._invalidate_derived()
-        self._refresh_occupancy()
-        self._sort_dirty_rows(rows64[del_counts > 0], donate)
-        self.stats.record_inplace()
-        return dm
+        net = 0
+        has_moves = bool(grow.any())
+        d_patches: list = []
+        w_patches: list = []
+        deferred: list = []  # (gsel, device counts) — synced once at the end
+        patch_base = np.zeros(rows.shape[0], np.int64)
+        base = 0
+        for wv in np.unique(wclass):
+            gsel = np.nonzero(wclass == wv)[0]
+            n = gsel.shape[0]
+            # floors keep the (width, A, K) jit-shape lattice coarse, so a
+            # stream of varying batches stops compiling after a few rounds
+            a_pad = max(alloc.next_pow2(n), 16)
 
-    # -- block growth (CP2AA realloc path) -------------------------------
-    def _grow_blocks(self, rows: np.ndarray, new_caps: np.ndarray, donate: bool) -> None:
-        # ensure pool space, regrow device buffer if the arena is exhausted
-        demand = int(new_caps.sum())
-        new_starts = np.empty(rows.shape[0], np.int64)
-        pending: list[int] = []
-        for i, (r, c) in enumerate(zip(rows, new_caps)):
-            got = self.layout.try_alloc(int(c))
-            if got is None:
-                pending.append(i)
-                new_starts[i] = -1
+            def pad1(a, fill, dtype=np.int32):
+                out = np.full(a_pad, fill, dtype)
+                out[:n] = a
+                return out
+
+            # the group's own run width: short runs shouldn't pay a hub
+            # row's padding (K floored at 4 for jit-shape coarseness)
+            k = max(alloc.next_pow2(int(plan.run_count[sel[gsel]].max())), 4)
+            bd, bw, bl = plan.run_tiles(sel[gsel], k, a_pad)
+            if use_scatter:
+                self.dst, self.wgt, self.slot_rows, counts = _su_ops.slot_update(
+                    self.dst,
+                    self.wgt,
+                    self.slot_rows,
+                    pad1(old_starts[gsel], -1),
+                    pad1(old_caps[gsel], 0),
+                    pad1(new_starts[gsel], -1),
+                    pad1(new_caps[gsel], 0),
+                    pad1(deg_old[gsel], 0),
+                    pad1(rows[gsel], self.cap_v),
+                    bd,
+                    bw,
+                    bl,
+                    width=int(wv),
+                    backend=merge_backend,
+                    donate=donate,
+                    has_moves=bool(grow[gsel].any()),
+                )
             else:
-                new_starts[i] = got
-        if pending:
-            target = self.layout.grow_target(demand)
-            self.dst, self.wgt, self.slot_rows = _jit_grow_buffer(
-                target, self.cap_v
-            )(self.dst, self.wgt, self.slot_rows)
-            self.layout.capacity = target
-            self.stats.record_relayout()
-            for i in pending:
-                got = self.layout.try_alloc(int(new_caps[i]))
-                assert got is not None
-                new_starts[i] = got
+                d_rows, w_rows, counts = _su_ops.merge_group(
+                    self.dst,
+                    self.wgt,
+                    pad1(old_starts[gsel], -1),
+                    pad1(deg_old[gsel], 0),
+                    bd,
+                    bw,
+                    bl,
+                    width=int(wv),
+                    backend=merge_backend,
+                )
+                d_patches.append(d_rows)
+                w_patches.append(w_rows)
+                patch_base[gsel] = base + np.arange(n, dtype=np.int64) * int(wv)
+                base += a_pad * int(wv)
+            deferred.append((gsel, counts))
 
-        # group moves by (old-class, new-class) so jit shapes stay pow-2
-        old_caps = self.capacities[rows]
-        for w_new in np.unique(new_caps):
-            sel = new_caps == w_new
-            r_sel = rows[sel]
-            w_old = int(old_caps[sel].max()) if sel.any() else 0
-            w_old = int(min(max(w_old, 0), w_new))
-            a_pad = alloc.next_pow2(max(r_sel.shape[0], 1))
-            os_ = _pad_pow2(self.starts[r_sel].astype(np.int32), -1)[:a_pad]
-            ns_ = _pad_pow2(new_starts[sel].astype(np.int32), -1)[:a_pad]
-            rr = _pad_pow2(r_sel.astype(np.int32), self.cap_v)[:a_pad]
-            dg = _pad_pow2(self.degrees[r_sel].astype(np.int32), 0)[:a_pad]
-            oc_ = _pad_pow2(old_caps[sel].astype(np.int32), 0)[:a_pad]
-            self.dst, self.wgt, self.slot_rows = _jit_move_blocks(
-                max(w_old, 1) if w_old else 1, int(w_new), donate
-            )(
+        for gsel, counts in deferred:
+            counts = np.asarray(counts, dtype=np.int64)[: gsel.shape[0]]
+            self.degrees[rows[gsel]] = counts
+            net += int(counts.sum() - deg_old[gsel].sum())
+
+        if not use_scatter:
+            # host-built slot map: every touched arena slot's patch source
+            slot_map = np.full(self.cap_e, -1, np.int32)
+            if has_moves:  # vacated blocks clear via the trailing slot
+                mv = np.nonzero(grow & (old_starts >= 0) & (old_caps > 0))[0]
+                oc = old_caps[mv]
+                intra = np.arange(int(oc.sum()), dtype=np.int64) - np.repeat(
+                    np.cumsum(oc) - oc, oc
+                )
+                slot_map[np.repeat(old_starts[mv], oc) + intra] = base
+            intra = np.arange(int(new_caps.sum()), dtype=np.int64) - np.repeat(
+                np.cumsum(new_caps) - new_caps, new_caps
+            )
+            arena_idx = np.repeat(new_starts, new_caps) + intra
+            slot_map[arena_idx] = np.repeat(patch_base, new_caps) + intra
+            if has_moves:
+                owner_patch = np.full(base + 1, self.cap_v, np.int32)
+                owner_patch[np.repeat(patch_base, new_caps) + intra] = np.repeat(
+                    rows, new_caps
+                )
+            else:
+                owner_patch = np.zeros(1, np.int32)
+            self.dst, self.wgt, self.slot_rows = _su_ops.rebuild_arena(
                 self.dst,
                 self.wgt,
                 self.slot_rows,
-                jnp.asarray(os_),
-                jnp.asarray(ns_),
-                jnp.asarray(rr),
-                jnp.asarray(dg),
-                jnp.asarray(oc_),
+                slot_map,
+                owner_patch,
+                tuple(d_patches),
+                tuple(w_patches),
+                has_moves=has_moves,
+                donate=donate,
             )
 
-        # free old blocks, install new ones
-        for r, ns, nc in zip(rows, new_starts, new_caps):
-            oc, ost = int(self.capacities[r]), int(self.starts[r])
-            if oc > 0 and ost >= 0:
-                self.layout.free(ost, oc)
-            self.starts[r] = ns
-            self.capacities[r] = nc
-        self.stats.record_relayout()
-
-    # -- row re-sort ------------------------------------------------------
-    def _sort_dirty_rows(self, rows: np.ndarray, donate: bool) -> None:
-        if rows.shape[0] == 0:
-            return
-        caps = self.capacities[rows]
-        for c in np.unique(caps):
-            sel = caps == c
-            r_sel = rows[sel]
-            a_pad = alloc.next_pow2(max(r_sel.shape[0], 1))
-            st = _pad_pow2(self.starts[r_sel].astype(np.int32), -1)[:a_pad]
-            self.dst, self.wgt = _jit_sort_rows(int(c), donate)(
-                self.dst, self.wgt, jnp.asarray(st)
-            )
+        # free vacated blocks, install the new geometry
+        if has_moves:
+            for st, cp in zip(old_starts[grow], old_caps[grow]):
+                if cp > 0 and st >= 0:
+                    self.layout.free(int(st), int(cp))
+            self.starts[rows] = new_starts
+            self.capacities[rows] = new_caps
+        self.m += net
+        self._invalidate_derived()
+        self._refresh_occupancy()
+        return net
 
     # ------------------------------------------------------------------
     # block compaction (DESIGN.md §7)

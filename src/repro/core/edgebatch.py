@@ -59,6 +59,51 @@ class EdgeBatch:
         return np.bincount(s, minlength=n_vertices)
 
 
+def _validate_ids(arr, name: str) -> np.ndarray:
+    """Coerce vertex ids to int32, rejecting anything that can't be one.
+
+    Negative ids, ids >= INT32_MAX (the SENTINEL), non-integral floats
+    and non-numeric dtypes all raise — silently wrapping them into the
+    arena would corrupt rows far from the call site.
+    """
+    a = np.asarray(arr).reshape(-1)
+    if a.dtype.kind == "f":
+        if a.size and not np.all(a == np.floor(a)):
+            raise ValueError(f"{name}: non-integral vertex ids")
+    elif a.dtype.kind not in "iu":
+        raise TypeError(f"{name}: vertex ids must be integers, got {a.dtype}")
+    if a.size:
+        lo, hi = a.min(), a.max()
+        if lo < 0:
+            raise ValueError(f"{name}: negative vertex id {int(lo)}")
+        if hi >= np.iinfo(np.int32).max:
+            raise ValueError(f"{name}: vertex id {int(hi)} overflows int32")
+    return a.astype(np.int32)
+
+
+def dedup_arrays(src: np.ndarray, dst: np.ndarray, *values, keep: str = "first"):
+    """(src, dst)-lexsort host arrays and drop duplicate keys.
+
+    ``keep`` selects which duplicate survives ("first" or "last" in the
+    original order); ``values`` ride along.  Shared by ``from_arrays``
+    and the UpdatePlan canonicalization in ``core/updates.py``.
+    """
+    n = src.shape[0]
+    if keep == "last":
+        order = np.lexsort((-np.arange(n), dst, src))
+    else:
+        order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    values = tuple(v[order] for v in values)
+    if n:
+        uniq = np.concatenate(
+            [[True], (src[1:] != src[:-1]) | (dst[1:] != dst[:-1])]
+        )
+        src, dst = src[uniq], dst[uniq]
+        values = tuple(v[uniq] for v in values)
+    return (src, dst, *values)
+
+
 def from_arrays(
     src,
     dst,
@@ -67,20 +112,28 @@ def from_arrays(
     dedup: bool = True,
     symmetric: bool = False,
 ) -> EdgeBatch:
-    """Host-side constructor: sort by (src,dst), dedup, pad to pow-2."""
-    src = np.asarray(src, dtype=np.int32).reshape(-1)
-    dst = np.asarray(dst, dtype=np.int32).reshape(-1)
+    """Host-side constructor: validate, sort by (src,dst), dedup, pad pow-2."""
+    src = _validate_ids(src, "src")
+    dst = _validate_ids(dst, "dst")
+    if src.shape[0] != dst.shape[0]:
+        raise ValueError(
+            f"src/dst length mismatch: {src.shape[0]} vs {dst.shape[0]}"
+        )
     if wgt is None:
         wgt = np.ones_like(src, dtype=np.float32)
     wgt = np.asarray(wgt, dtype=np.float32).reshape(-1)
+    if wgt.shape[0] != src.shape[0]:
+        raise ValueError(
+            f"wgt length mismatch: {wgt.shape[0]} vs {src.shape[0]} edges"
+        )
     if symmetric:
         src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
         wgt = np.concatenate([wgt, wgt])
-    order = np.lexsort((dst, src))
-    src, dst, wgt = src[order], dst[order], wgt[order]
-    if dedup and src.shape[0]:
-        keep = np.concatenate([[True], (src[1:] != src[:-1]) | (dst[1:] != dst[:-1])])
-        src, dst, wgt = src[keep], dst[keep], wgt[keep]
+    if dedup:
+        src, dst, wgt = dedup_arrays(src, dst, wgt, keep="first")
+    else:
+        order = np.lexsort((dst, src))
+        src, dst, wgt = src[order], dst[order], wgt[order]
     n = int(src.shape[0])
     cap = alloc.next_pow2(max(n, 1))
     pad = cap - n

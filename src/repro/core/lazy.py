@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import alloc, csr as csr_mod, edgebatch, traversal, util
+from . import alloc, csr as csr_mod, edgebatch, traversal, updates, util
 
 SENTINEL = util.SENTINEL
 
@@ -153,54 +153,71 @@ class LazyCSR:
 
     # -- updates ----------------------------------------------------------
     def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
-        if batch.n == 0:
-            return self, 0
-        g = self if inplace else self.clone()
-        g._detach()
-        need = g.p_n + batch.capacity
-        if need > g.p_src.shape[0]:
-            newcap = alloc.next_pow2(need)
-            pad = newcap - g.p_src.shape[0]
-            g.p_src = jnp.concatenate([g.p_src, jnp.full((pad,), SENTINEL, jnp.int32)])
-            g.p_dst = jnp.concatenate([g.p_dst, jnp.full((pad,), SENTINEL, jnp.int32)])
-            g.p_wgt = jnp.concatenate([g.p_wgt, jnp.zeros((pad,), jnp.float32)])
-            g.p_dead = jnp.concatenate([g.p_dead, jnp.zeros((pad,), bool)])
-        g.p_src, g.p_dst, g.p_wgt = _jit_append(True)(
-            g.p_src, g.p_dst, g.p_wgt, batch.src, batch.dst, batch.wgt, g.p_n
-        )
-        g.p_n += batch.capacity
-        g.n = max(g.n, batch.max_vertex() + 1)
-        g.dirty = True
-        return g, batch.n  # lazy dm estimate (exact after assemble)
+        g, dm = self.apply(updates.plan_update(inserts=batch), inplace=inplace)
+        return g, dm
 
     def remove_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
-        if batch.n == 0:
+        g, dm = self.apply(updates.plan_update(deletes=batch), inplace=inplace)
+        return g, -dm
+
+    def apply(self, plan: updates.UpdatePlan, *, inplace: bool = True):
+        """Mixed batch: mark zombies first, then buffer pending inserts.
+
+        GraphBLAS semantics are inherently split — deletions become
+        zombies in the assembled base, insertions wait in the pending
+        ring — so a mixed plan drives both halves from its split views.
+        Returns the *lazy* net ΔM estimate (exact after assemble()).
+        """
+        if plan.n_ops == 0:
             return self, 0
         g = self if inplace else self.clone()
         g._detach()
-        s, d, _ = batch.to_numpy()
-        s64 = s.astype(np.int64)
-        valid = s64 < g.offsets.shape[0] - 1
-        lo = np.where(valid, g.offsets[np.minimum(s64, g.offsets.shape[0] - 2)], 0)
-        hi = np.where(valid, g.offsets[np.minimum(s64 + 1, g.offsets.shape[0] - 1)], 0)
-        g.dead, newly = _jit_mark_base(True)(
-            g.dead,
-            g.base_dst,
-            jnp.asarray(lo.astype(np.int32)),
-            jnp.asarray(hi.astype(np.int32)),
-            jnp.asarray(d),
-        )
-        nz = int(np.asarray(jnp.sum(newly)))
-        g.n_zombies += nz
-        dm = nz
-        if g.p_n > 0:
-            g.p_dead, pfound = _jit_mark_pending(True)(
-                g.p_dead, g.p_src, g.p_dst, jnp.asarray(s), jnp.asarray(d)
-            )
-            g.dirty = True
-        g.m -= nz
+        dm = 0
+        if plan.n_del:
+            dm -= g._mark_deletes(*plan.delete_arrays())
+        if plan.n_ins:
+            dm += g._append_pending(plan.insert_batch())
         g.dirty = True
         return g, dm
+
+    def _mark_deletes(self, s: np.ndarray, d: np.ndarray) -> int:
+        """Zombie-mark (s, d) pairs in base + pending; returns #newly dead."""
+        s64 = s.astype(np.int64)
+        valid = s64 < self.offsets.shape[0] - 1
+        lo = np.where(valid, self.offsets[np.minimum(s64, self.offsets.shape[0] - 2)], 0)
+        hi = np.where(valid, self.offsets[np.minimum(s64 + 1, self.offsets.shape[0] - 1)], 0)
+        self.dead, newly = _jit_mark_base(True)(
+            self.dead,
+            self.base_dst,
+            lo.astype(np.int32),
+            hi.astype(np.int32),
+            d,
+        )
+        nz = int(np.asarray(jnp.sum(newly)))
+        self.n_zombies += nz
+        if self.p_n > 0:
+            self.p_dead, _ = _jit_mark_pending(True)(
+                self.p_dead, self.p_src, self.p_dst, s, d
+            )
+        self.m -= nz
+        return nz
+
+    def _append_pending(self, batch: edgebatch.EdgeBatch) -> int:
+        """Ring-buffer the insert batch; returns the lazy ΔM estimate."""
+        need = self.p_n + batch.capacity
+        if need > self.p_src.shape[0]:
+            newcap = alloc.next_pow2(need)
+            pad = newcap - self.p_src.shape[0]
+            self.p_src = jnp.concatenate([self.p_src, jnp.full((pad,), SENTINEL, jnp.int32)])
+            self.p_dst = jnp.concatenate([self.p_dst, jnp.full((pad,), SENTINEL, jnp.int32)])
+            self.p_wgt = jnp.concatenate([self.p_wgt, jnp.zeros((pad,), jnp.float32)])
+            self.p_dead = jnp.concatenate([self.p_dead, jnp.zeros((pad,), bool)])
+        self.p_src, self.p_dst, self.p_wgt = _jit_append(True)(
+            self.p_src, self.p_dst, self.p_wgt, batch.src, batch.dst, batch.wgt, self.p_n
+        )
+        self.p_n += batch.capacity
+        self.n = max(self.n, batch.max_vertex() + 1)
+        return batch.n
 
     # -- consolidation (GraphBLAS "wait") ----------------------------------
     def assemble(self) -> None:

@@ -1,0 +1,312 @@
+"""UpdatePlan — the shared host planning layer for batch updates (DESIGN.md §9).
+
+Every representation's ``add_edges`` / ``remove_edges`` / ``apply`` funnels
+through one plan object so the host-side work of a batch update — sorting,
+in-batch dedup, per-row run splitting (one ``np.unique`` pass), padded
+device operand layout — happens exactly once per batch, no matter how many
+structures consume it or how many times a stream replays it:
+
+  * **Canonical op stream**: ``(src, dst)``-sorted ops, at most one op per
+    edge key.  In a *mixed* plan an insert wins over a delete of the same
+    key (delete-then-insert ≡ replace), so ``apply`` is deterministic.
+  * **Per-row runs**: ``rows / run_first / run_count / ins_count`` from a
+    single ``np.unique`` pass, plus ``[R, K]`` padded run matrices
+    (``K`` = pow-2 of the longest run) — the operand layout of the fused
+    ``kernels/slot_update`` device pass.
+  * **Pow-2 padding everywhere** so repeated batch shapes hit the same
+    compiled programs (the CP2AA shape policy, ``core/alloc.py``).
+  * **Plan cache**: plans are memoized per source-batch identity, so a
+    steady-state stream that reapplies the same ``EdgeBatch`` (or applies
+    one batch to several representations) skips host planning entirely.
+
+Plans are graph-independent: grow/compact decisions are made by each
+representation against its own metadata at apply time.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import weakref
+from typing import Optional
+
+import numpy as np
+
+from . import alloc, edgebatch, util
+
+SENTINEL = util.SENTINEL
+
+
+def next_pow2_vec(x: np.ndarray) -> np.ndarray:
+    """Vectorized ``alloc.next_pow2`` (exact for values < 2**52)."""
+    x = np.maximum(np.asarray(x, dtype=np.int64), 1)
+    return (2 ** np.ceil(np.log2(x)).astype(np.int64)).astype(np.int64)
+
+
+@dataclasses.dataclass
+class UpdatePlan:
+    """One canonicalized batch of mixed edge updates, device-operand ready."""
+
+    # canonical op stream (host, sorted by (src, dst); one op per key)
+    q_src: np.ndarray  # int32 [Q]
+    q_dst: np.ndarray  # int32 [Q]
+    q_wgt: np.ndarray  # float32 [Q]
+    q_del: np.ndarray  # bool [Q]  (True = delete op)
+    # per-row run structure (one np.unique pass)
+    rows: np.ndarray       # int64 [R] unique touched rows, ascending
+    run_first: np.ndarray  # int64 [R] first op index of each row's run
+    run_count: np.ndarray  # int64 [R] ops per row
+    ins_count: np.ndarray  # int64 [R] insert ops per row
+    #: pow-2 of the longest run — the K ceiling for run_tiles()
+    run_width: int = 1
+    # memoized derived views
+    _ins_batch: Optional[edgebatch.EdgeBatch] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _del_batch: Optional[edgebatch.EdgeBatch] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    # ------------------------------------------------------------------
+    @property
+    def n_ops(self) -> int:
+        return int(self.q_src.shape[0])
+
+    @property
+    def n_ins(self) -> int:
+        return int(self.n_ops - self.q_del.sum())
+
+    @property
+    def n_del(self) -> int:
+        return int(self.q_del.sum())
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def del_count(self) -> np.ndarray:
+        return self.run_count - self.ins_count
+
+    def run_tiles(self, sel: np.ndarray, k: int, a_pad: Optional[int] = None):
+        """Padded [A, k] run matrices for the plan rows indexed by ``sel``.
+
+        Built on demand per width group, so a skewed batch (one hub run
+        next to thousands of single-op rows) never materializes a dense
+        [R, max_run] matrix — each group only pays its own rows at its
+        own run width.  ``k`` must cover every selected run; rows pad to
+        ``a_pad`` (SENTINEL / 0).  Returns (b_dst, b_wgt, b_del).
+        """
+        n = int(sel.shape[0])
+        a = int(a_pad) if a_pad is not None else n
+        bd = np.full((a, k), SENTINEL, np.int32)
+        bw = np.zeros((a, k), np.float32)
+        bl = np.zeros((a, k), np.int32)
+        rc = self.run_count[sel]
+        if n == 0 or int(rc.max(initial=0)) == 0:
+            return bd, bw, bl
+        assert int(rc.max()) <= k, "run width k too small for selected rows"
+        q = int(rc.sum())
+        rowi = np.repeat(np.arange(n, dtype=np.int64), rc)
+        col = np.arange(q, dtype=np.int64) - np.repeat(np.cumsum(rc) - rc, rc)
+        src = np.repeat(self.run_first[sel], rc) + col
+        bd[rowi, col] = self.q_dst[src]
+        bw[rowi, col] = self.q_wgt[src]
+        bl[rowi, col] = self.q_del[src].astype(np.int32)
+        return bd, bw, bl
+
+    def max_insert_vertex(self) -> int:
+        """Largest vertex id an insert op touches (-1 when insert-free)."""
+        ins = ~self.q_del
+        if not ins.any():
+            return -1
+        return int(
+            max(self.q_src[ins].max(), self.q_dst[ins].max())
+        )
+
+    # -- split views (for representations without a fused mixed path) ----
+    def insert_arrays(self):
+        """(src, dst, wgt) of the insert ops, (src, dst)-sorted."""
+        ins = ~self.q_del
+        return self.q_src[ins], self.q_dst[ins], self.q_wgt[ins]
+
+    def delete_arrays(self):
+        """(src, dst) of the delete ops, (src, dst)-sorted."""
+        dl = self.q_del
+        return self.q_src[dl], self.q_dst[dl]
+
+    def insert_batch(self) -> edgebatch.EdgeBatch:
+        """Insert ops as a pow-2 padded EdgeBatch (memoized)."""
+        if self._ins_batch is None:
+            s, d, w = self.insert_arrays()
+            self._ins_batch = edgebatch.from_arrays(s, d, w, dedup=False)
+        return self._ins_batch
+
+    def delete_batch(self) -> edgebatch.EdgeBatch:
+        """Delete ops as a pow-2 padded EdgeBatch (memoized)."""
+        if self._del_batch is None:
+            s, d = self.delete_arrays()
+            self._del_batch = edgebatch.from_arrays(s, d, dedup=False)
+        return self._del_batch
+
+    # -- shared row filtering (all representations) ----------------------
+    def rows_in_range(self, cap_v: int) -> np.ndarray:
+        """Mask of plan rows a graph with ``cap_v`` vertex slots can touch.
+
+        Insert rows are expected to be reserved by the caller first, so
+        after reservation this only drops delete-only runs aimed at rows
+        the graph has never seen — the out-of-range filter every
+        representation shares (previously each delete path hand-rolled
+        its own).
+        """
+        return self.rows < cap_v
+
+
+# ---------------------------------------------------------------------------
+# plan construction
+# ---------------------------------------------------------------------------
+def _empty_plan() -> UpdatePlan:
+    return UpdatePlan(
+        q_src=np.empty(0, np.int32),
+        q_dst=np.empty(0, np.int32),
+        q_wgt=np.empty(0, np.float32),
+        q_del=np.empty(0, bool),
+        rows=np.empty(0, np.int64),
+        run_first=np.empty(0, np.int64),
+        run_count=np.empty(0, np.int64),
+        ins_count=np.empty(0, np.int64),
+    )
+
+
+def _pair_keys(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """(src, dst) -> sortable int64 key (ids are validated non-negative)."""
+    return (src.astype(np.int64) << 32) | dst.astype(np.int64)
+
+
+def _canonicalize(src, dst, *values):
+    """Enforce (src, dst)-sorted unique keys, O(B) when already true.
+
+    EdgeBatches from ``from_arrays`` are already canonical, so the hot
+    path is a strictly-increasing-keys check; only ``dedup=False``
+    batches with duplicate or unsorted keys pay the full re-sort.
+    """
+    keys = _pair_keys(src, dst)
+    if keys.shape[0] < 2 or bool(np.all(keys[1:] > keys[:-1])):
+        return (src, dst, *values)
+    return edgebatch.dedup_arrays(src, dst, *values, keep="first")
+
+
+def _build_plan(
+    inserts: Optional[edgebatch.EdgeBatch],
+    deletes: Optional[edgebatch.EdgeBatch],
+) -> UpdatePlan:
+    ins_s, ins_d, ins_w = (
+        inserts.to_numpy() if inserts is not None else (None, None, None)
+    )
+    del_s, del_d, _ = deletes.to_numpy() if deletes is not None else (None, None, None)
+
+    # enforce the one-op-per-key invariant every consumer relies on —
+    # EdgeBatches are normally pre-deduped (O(B) check), but dedup=False
+    # batches must not smuggle duplicate keys into the merge kernels.
+    if ins_s is not None and ins_s.shape[0]:
+        ins_s, ins_d, ins_w = _canonicalize(ins_s, ins_d, ins_w)
+    if del_s is not None and del_s.shape[0]:
+        del_s, del_d = _canonicalize(del_s, del_d)
+
+    if del_s is not None and del_s.shape[0] and ins_s is not None and ins_s.shape[0]:
+        # cross-batch dedup: an insert wins over a delete of the same key
+        # (delete-then-insert ≡ replace), so conflicting deletes drop out.
+        ins_keys = _pair_keys(ins_s, ins_d)
+        del_keys = _pair_keys(del_s, del_d)
+        pos = np.searchsorted(ins_keys, del_keys)
+        pos_c = np.minimum(pos, ins_keys.shape[0] - 1)
+        clash = (pos < ins_keys.shape[0]) & (ins_keys[pos_c] == del_keys)
+        del_s, del_d = del_s[~clash], del_d[~clash]
+
+    parts_s, parts_d, parts_w, parts_del = [], [], [], []
+    if ins_s is not None and ins_s.shape[0]:
+        parts_s.append(ins_s)
+        parts_d.append(ins_d)
+        parts_w.append(ins_w)
+        parts_del.append(np.zeros(ins_s.shape[0], bool))
+    if del_s is not None and del_s.shape[0]:
+        parts_s.append(del_s)
+        parts_d.append(del_d)
+        parts_w.append(np.zeros(del_s.shape[0], np.float32))
+        parts_del.append(np.ones(del_s.shape[0], bool))
+    if not parts_s:
+        return _empty_plan()
+
+    q_src = np.concatenate(parts_s)
+    q_dst = np.concatenate(parts_d)
+    q_wgt = np.concatenate(parts_w).astype(np.float32)
+    q_del = np.concatenate(parts_del)
+    # both sides are individually (src, dst)-sorted and their keys are now
+    # disjoint, so one stable argsort over the merged keys canonicalizes.
+    if len(parts_s) > 1:
+        order = np.argsort(_pair_keys(q_src, q_dst), kind="stable")
+        q_src, q_dst, q_wgt, q_del = (
+            q_src[order], q_dst[order], q_wgt[order], q_del[order]
+        )
+
+    # per-row runs: the single np.unique pass shared by insert and delete
+    rows, run_first, run_count = np.unique(
+        q_src, return_index=True, return_counts=True
+    )
+    rows = rows.astype(np.int64)
+    run_first = run_first.astype(np.int64)
+    run_count = run_count.astype(np.int64)
+    ins_count = np.add.reduceat((~q_del).astype(np.int64), run_first)
+    k = int(next_pow2_vec(run_count.max())[()]) if rows.shape[0] else 1
+
+    return UpdatePlan(
+        q_src=q_src,
+        q_dst=q_dst,
+        q_wgt=q_wgt,
+        q_del=q_del,
+        rows=rows,
+        run_first=run_first,
+        run_count=run_count,
+        ins_count=ins_count,
+        run_width=k,
+    )
+
+
+# ---------------------------------------------------------------------------
+# plan cache — steady-state streams skip host planning entirely
+# ---------------------------------------------------------------------------
+_CACHE_SIZE = 32
+_cache: "collections.OrderedDict[tuple[int, int], tuple]" = collections.OrderedDict()
+
+
+def _ref(obj):
+    if obj is None:
+        return lambda: None
+    return weakref.ref(obj)
+
+
+def plan_update(
+    inserts: Optional[edgebatch.EdgeBatch] = None,
+    deletes: Optional[edgebatch.EdgeBatch] = None,
+) -> UpdatePlan:
+    """Build (or recall) the UpdatePlan for an insert/delete batch pair.
+
+    Plans are memoized by batch identity: reapplying the same
+    ``EdgeBatch`` objects — a replayed stream round, or one batch applied
+    to all five representations — returns the cached plan with zero host
+    work.  Identity is verified through weakrefs, so a recycled ``id()``
+    can never alias a dead batch.
+    """
+    key = (id(inserts), id(deletes))
+    hit = _cache.get(key)
+    if hit is not None and hit[0]() is inserts and hit[1]() is deletes:
+        _cache.move_to_end(key)
+        return hit[2]
+    plan = _build_plan(inserts, deletes)
+    _cache[key] = (_ref(inserts), _ref(deletes), plan)
+    while len(_cache) > _CACHE_SIZE:
+        _cache.popitem(last=False)
+    return plan
+
+
+def plan_cache_clear() -> None:
+    _cache.clear()

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from . import csr as csr_mod, edgebatch, traversal
+from . import csr as csr_mod, edgebatch, traversal, updates
 
 
 class Vector2D:
@@ -39,40 +39,42 @@ class Vector2D:
         self.n = max(self.n, n)
 
     def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
-        g = self if inplace else self.clone()
-        s, d, w = batch.to_numpy()
-        if s.shape[0] == 0:
-            return g, 0
-        g._reserve(int(max(s.max(), d.max())) + 1)
-        dm = 0
-        rows, first, counts = np.unique(s, return_index=True, return_counts=True)
-        for u, fi, ct in zip(rows, first, counts):
-            old = g.rows[u]
-            add_d, add_w = d[fi : fi + ct], w[fi : fi + ct]
-            new = np.union1d(old, add_d).astype(np.int32)  # fresh allocation
-            pos = np.searchsorted(new, old)
-            neww = np.zeros(new.shape[0], np.float32)
-            neww[pos] = g.wrows[u]
-            neww[np.searchsorted(new, add_d)] = add_w  # batch weight wins
-            dm += new.shape[0] - old.shape[0]
-            g.rows[u], g.wrows[u] = new, neww
-        g.m += dm
+        g, dm = self.apply(updates.plan_update(inserts=batch), inplace=inplace)
         return g, dm
 
     def remove_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
+        g, dm = self.apply(updates.plan_update(deletes=batch), inplace=inplace)
+        return g, -dm
+
+    def apply(self, plan: updates.UpdatePlan, *, inplace: bool = True):
+        """Mixed plan, one reallocation per touched row (the point)."""
         g = self if inplace else self.clone()
-        s, d, _ = batch.to_numpy()
+        if plan.n_ops == 0:
+            return g, 0
+        if plan.n_ins:
+            g._reserve(plan.max_insert_vertex() + 1)
         dm = 0
-        rows, first, counts = np.unique(s, return_index=True, return_counts=True)
-        for u, fi, ct in zip(rows, first, counts):
-            if u >= len(g.rows):
+        for u, fi, ct in zip(plan.rows, plan.run_first, plan.run_count):
+            if u >= len(g.rows):  # delete-only run at an unseen row
                 continue
-            old = g.rows[u]
-            keep = ~np.isin(old, d[fi : fi + ct])
-            dm += old.shape[0] - int(keep.sum())
-            g.rows[u] = old[keep]          # fresh allocation
-            g.wrows[u] = g.wrows[u][keep]
-        g.m -= dm
+            run_d = plan.q_dst[fi : fi + ct]
+            run_w = plan.q_wgt[fi : fi + ct]
+            run_del = plan.q_del[fi : fi + ct]
+            old, oldw = g.rows[u], g.wrows[u]
+            if run_del.any():
+                keep = ~np.isin(old, run_d[run_del])
+                old, oldw = old[keep], oldw[keep]  # fresh allocation
+            ins_d, ins_w = run_d[~run_del], run_w[~run_del]
+            if ins_d.shape[0]:
+                new = np.union1d(old, ins_d).astype(np.int32)  # fresh again
+                neww = np.zeros(new.shape[0], np.float32)
+                neww[np.searchsorted(new, old)] = oldw
+                neww[np.searchsorted(new, ins_d)] = ins_w  # batch weight wins
+            else:
+                new, neww = old, oldw
+            dm += new.shape[0] - g.rows[u].shape[0]
+            g.rows[u], g.wrows[u] = new, neww
+        g.m += dm
         return g, dm
 
     def clone(self) -> "Vector2D":

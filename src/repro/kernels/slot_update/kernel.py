@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused sorted-merge of batch runs into arena rows.
+
+One grid step merges one touched row's gathered block prefix ``[1, W]``
+with its batch run ``[1, K]`` (both ascending, SENTINEL-padded; at most
+one op per key, guaranteed by UpdatePlan).  The merge is scatter-free —
+TPUs have no scatter unit, so every output element is *ranked* instead of
+moved:
+
+  membership   [K, W] equality matrix between run values and row values
+               (VPU compares; K and W are pow-2, lanes stay dense),
+  ranks        survivors keep ``cumsum`` order plus the count of new
+               inserts below them; new inserts symmetrically — two
+               comparison-matrix reductions give both counts,
+  placement    ``[slot, rank]`` one-hot matrices fold values into their
+               final positions with two MXU matmuls (``vals @ onehot``),
+               exactly the slot_walk one-hot-rank trick run in reverse.
+
+f32 matmuls place int32 vertex ids, so ids must stay below 2**24 (f32
+mantissa); ``ops.py`` only routes to this kernel on TPU (or for
+interpret-mode parity tests) and documents that bound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core import util
+
+SENTINEL = util.SENTINEL
+
+
+def _kernel(deg_ref, d_ref, w_ref, bd_ref, bw_ref, bdel_ref,
+            od_ref, ow_ref, cnt_ref):
+    d = d_ref[...]        # [1, W] int32 row values (live prefix ascending)
+    w = w_ref[...]        # [1, W] f32 row weights
+    bd = bd_ref[...]      # [1, K] int32 run values (ascending, SENTINEL pad)
+    bw = bw_ref[...]      # [1, K] f32 run weights
+    bdel = bdel_ref[...] != 0  # [1, K] delete-op mask
+    deg = deg_ref[0, 0]
+    kk = bd.shape[1]
+    ww = d.shape[1]
+
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (1, ww), 1)
+    live = iota_w < deg
+    bvalid = bd != SENTINEL
+    bd_c = bd.reshape(kk, 1)          # run values as a column
+    bdel_c = bdel.reshape(kk, 1)
+
+    # membership: eq[k, s] — run op k hits live row slot s
+    eq = (bd_c == d) & live           # [K, W]
+    found = jnp.any(eq, axis=1).reshape(1, kk) & bvalid
+    new_ins = (~found) & (~bdel) & bvalid
+    # deletions kill their row slot; upserts replace its weight
+    killed = jnp.any(eq & bdel_c, axis=0).reshape(1, ww)
+    upd = eq & (~bdel_c)
+    w_up = jnp.sum(jnp.where(upd, bw.reshape(kk, 1), 0.0), axis=0).reshape(1, ww)
+    has_up = jnp.any(upd, axis=0).reshape(1, ww)
+    w2 = jnp.where(has_up, w_up, w)
+    surv = live & ~killed
+
+    # ranks: survivors shift up by the new inserts below them, and vice
+    # versa — both counts fall out of the same comparison matrix.
+    surv_i = surv.astype(jnp.int32)
+    surv_rank = jnp.cumsum(surv_i, axis=1) - surv_i
+    below = bd_c < d                  # [K, W]
+    ins_before = jnp.sum(
+        (below & new_ins.reshape(kk, 1)).astype(jnp.int32), axis=0
+    ).reshape(1, ww)
+    pos_surv = surv_rank + ins_before
+    ins_i = new_ins.astype(jnp.int32)
+    ins_rank = jnp.cumsum(ins_i, axis=1) - ins_i
+    surv_before = jnp.sum(
+        ((~below) & (bd_c != d) & surv).astype(jnp.int32), axis=1
+    ).reshape(1, kk)
+    pos_ins = ins_rank + surv_before
+
+    # placement: one-hot [slot, rank] matmuls (MXU) fold both sources
+    pw = jax.lax.broadcasted_iota(jnp.int32, (ww, ww), 1)
+    oh_s = ((pos_surv.reshape(ww, 1) == pw) & surv.reshape(ww, 1)).astype(
+        jnp.float32
+    )
+    pk = jax.lax.broadcasted_iota(jnp.int32, (kk, ww), 1)
+    oh_i = ((pos_ins.reshape(kk, 1) == pk) & new_ins.reshape(kk, 1)).astype(
+        jnp.float32
+    )
+    out_d = jnp.dot(
+        jnp.where(surv, d, 0).astype(jnp.float32), oh_s,
+        preferred_element_type=jnp.float32,
+    ) + jnp.dot(
+        jnp.where(new_ins, bd, 0).astype(jnp.float32), oh_i,
+        preferred_element_type=jnp.float32,
+    )
+    out_w = jnp.dot(
+        jnp.where(surv, w2, 0.0), oh_s, preferred_element_type=jnp.float32
+    ) + jnp.dot(
+        jnp.where(new_ins, bw, 0.0), oh_i, preferred_element_type=jnp.float32
+    )
+    count = jnp.sum(surv_i) + jnp.sum(ins_i)
+    od_ref[...] = jnp.where(iota_w < count, out_d.astype(jnp.int32), SENTINEL)
+    ow_ref[...] = jnp.where(iota_w < count, out_w, 0.0)
+    cnt_ref[0, 0] = count
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_rows_pallas(
+    d_rows: jnp.ndarray,
+    w_rows: jnp.ndarray,
+    degs: jnp.ndarray,
+    b_dst: jnp.ndarray,
+    b_wgt: jnp.ndarray,
+    b_del: jnp.ndarray,
+    *,
+    interpret: bool = False,
+):
+    """Row-tile merge: [A, W] rows × [A, K] runs -> (out_d, out_w, counts).
+
+    ``surv_before``'s comparison uses ``~(bd < d) & (bd != d)`` rather
+    than ``d < bd`` so SENTINEL row padding never counts (it equals the
+    run padding value).
+    """
+    a, w = d_rows.shape
+    k = b_dst.shape[1]
+    deg2 = degs.reshape(a, 1).astype(jnp.int32)
+    row_spec = pl.BlockSpec((1, w), lambda i: (i, 0))
+    run_spec = pl.BlockSpec((1, k), lambda i: (i, 0))
+    one_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    out_d, out_w, counts = pl.pallas_call(
+        _kernel,
+        grid=(a,),
+        in_specs=[one_spec, row_spec, row_spec, run_spec, run_spec, run_spec],
+        out_specs=[row_spec, row_spec, one_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((a, w), jnp.int32),
+            jax.ShapeDtypeStruct((a, w), jnp.float32),
+            jax.ShapeDtypeStruct((a, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(deg2, d_rows, w_rows, b_dst, b_wgt, b_del)
+    return out_d, out_w, counts.reshape(a)

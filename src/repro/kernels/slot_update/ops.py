@@ -1,0 +1,283 @@
+"""jit'd wrappers: one fused dispatch applies a mixed update plan group.
+
+``slot_update`` replaces the retired ``_jit_insert_chain`` /
+``_jit_delete_chain`` / per-class ``_sort_dirty_rows`` / ``_jit_move_blocks``
+micro-dispatch pipeline in ``core/digraph.py`` with a single program per
+width group:
+
+  gather   touched rows' live prefixes into [A, W] tiles (W = the group's
+           pow-2 width class, >= every member's capacity; EB=128 floor so
+           all small classes share one compiled shape),
+  merge    the sorted batch runs [A, K] into the sorted rows — deletes,
+           weight upserts and ranked inserts in one pass (two backends:
+           the Pallas one-hot-rank kernel in kernel.py, or a plain XLA
+           searchsorted + argsort formulation),
+  scatter  merged rows back — grown rows land directly in their NEW block
+           while their old block is SENTINEL-filled, so CP2AA block moves
+           ride the same dispatch instead of paying their own.
+
+Buffer donation keeps the arena update in place; every operand shape is
+pow-2 bucketed so steady-state streams never recompile.  The Pallas
+backend places int32 ids via f32 matmuls and therefore requires vertex
+ids < 2**24; ``auto`` only selects it on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import util
+from . import kernel as _kernel
+
+SENTINEL = util.SENTINEL
+#: TPU row-group width floor: merges run in whole 128-slot MXU tiles.  The
+#: XLA fallback instead groups rows by their exact pow-2 capacity class
+#: (floor XLA_FLOOR) — CPU sort/scatter cost is linear in slots touched,
+#: so padding every small class to 128 lanes would inflate it ~10x.
+EB = 128
+XLA_FLOOR = 8
+#: The Pallas kernel places int32 vertex ids through f32 matmuls, which
+#: are exact only below the f32 mantissa bound.  Callers must route
+#: graphs with ids >= this to the XLA formulation (DiGraph does, by
+#: cap_v) — above it the kernel silently rounds ids to the nearest
+#: representable float.
+PALLAS_MAX_ID = 1 << 24
+
+
+def width_floor(backend: str = "auto") -> int:
+    """Row-group width floor for a (resolved) backend."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return EB if backend == "pallas" else XLA_FLOOR
+
+
+# ---------------------------------------------------------------------------
+# merge core, XLA formulation (shape-identical to the Pallas kernel)
+# ---------------------------------------------------------------------------
+def _merge_rows_xla(d_rows, w_rows, degs, b_dst, b_wgt, b_del):
+    """Scatter-free row merge: two windowed binary searches + one sort.
+
+    CPU XLA scatters cost ~100ns per index, so nothing here scatters:
+    op→slot membership flags the *new* inserts, slot→op membership flags
+    deletions and gathers upserted weights, and the new inserts ride a
+    concatenated [A, W+K] unstable key-value sort back into position
+    (keys are unique per row — one op per key — so stability is not
+    needed; SENTINEL ties only ever carry weights that get zeroed).
+    """
+    w = d_rows.shape[1]
+    bdel = b_del != 0
+
+    # one [A, K, W] equality matrix answers membership both ways — a
+    # fused compare+reduce beats binary search here, whose lax.scan
+    # steps cost ~0.5ms of fixed overhead per dispatch on CPU.  K is the
+    # group's run width (small), so the matrix stays a few hundred KB.
+    live = jnp.arange(w, dtype=jnp.int32)[None, :] < degs[:, None]
+    eq = (b_dst[:, :, None] == d_rows[:, None, :]) & live[:, None, :]
+    found = jnp.any(eq, axis=2) & (b_dst != SENTINEL)
+    new_ins = (~found) & (~bdel) & (b_dst != SENTINEL)
+    killed = jnp.any(eq & bdel[:, :, None], axis=1)
+    upsel = eq & (~bdel)[:, :, None]
+    w_up = jnp.sum(jnp.where(upsel, b_wgt[:, :, None], 0.0), axis=1)
+    d_keep = jnp.where(live & ~killed, d_rows, SENTINEL)
+    w_keep = jnp.where(jnp.any(upsel, axis=1), w_up, w_rows)
+
+    keys = jnp.concatenate(
+        [d_keep, jnp.where(new_ins, b_dst, SENTINEL)], axis=1
+    )
+    vals = jnp.concatenate([w_keep, b_wgt], axis=1)
+    keys, vals = jax.lax.sort(
+        (keys, vals), dimension=1, num_keys=1, is_stable=False
+    )
+    d_out = keys[:, :w]
+    w_out = jnp.where(d_out != SENTINEL, vals[:, :w], 0.0)
+    counts = jnp.sum(d_out != SENTINEL, axis=1).astype(jnp.int32)
+    return d_out, w_out, counts
+
+
+def merge_rows(
+    d_rows, w_rows, degs, b_dst, b_wgt, b_del, *, backend="xla", interpret=False
+):
+    """Backend-dispatched row merge (parity-test entry point)."""
+    if backend == "pallas":
+        return _kernel.merge_rows_pallas(
+            d_rows, w_rows, degs, b_dst, b_wgt, b_del, interpret=interpret
+        )
+    if backend == "xla":
+        return _merge_rows_xla(d_rows, w_rows, degs, b_dst, b_wgt, b_del)
+    raise ValueError(f"unknown slot_update backend: {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# rebuild write-back: gather-only full-buffer pass (the off-TPU fast path)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _jit_merge_group(width: int, backend: str, interpret: bool):
+    """Read-only gather + merge for one width group (no write-back)."""
+
+    def fn(dst, wgt, old_starts, degs, b_dst, b_wgt, b_del):
+        d_rows = util.rows_to_padded(dst, old_starts, degs, width, SENTINEL)
+        w_rows = util.rows_to_padded(wgt, old_starts, degs, width, 0.0)
+        return merge_rows(
+            d_rows, w_rows, degs, b_dst, b_wgt, b_del,
+            backend=backend, interpret=interpret,
+        )
+
+    return jax.jit(fn)
+
+
+def merge_group(
+    dst, wgt, old_starts, degs, b_dst, b_wgt, b_del,
+    *, width: int, backend: str = "auto", interpret: bool = False,
+):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return _jit_merge_group(int(width), backend, interpret)(
+        dst, wgt, old_starts, degs, b_dst, b_wgt, b_del
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_rebuild(n_patches: int, has_moves: bool, donate: bool):
+    """One gather pass rewrites every touched arena slot.
+
+    ``slot_map[CAP]`` (host-built) holds -1 for untouched slots, a patch
+    index for slots of a touched row's (possibly new) block, and ``P``
+    (one past the concatenated patches) for vacated old blocks, which a
+    trailing SENTINEL/0 patch slot then clears.  XLA scatters on CPU cost
+    ~100ns per slot written; this formulation replaces them with three
+    dense gather+select passes over the buffer (~10ns/slot), which wins
+    whenever a batch touches more than ~a few percent of the arena —
+    scatter mode (``_jit_apply``) remains the TPU path.
+    """
+
+    def fn(dst, wgt, slot_rows, slot_map, owner_patch, *patches):
+        pd = jnp.concatenate(
+            [p.reshape(-1) for p in patches[:n_patches]]
+            + [jnp.full((1,), SENTINEL, jnp.int32)]
+        )
+        pw = jnp.concatenate(
+            [p.reshape(-1) for p in patches[n_patches:]]
+            + [jnp.zeros((1,), jnp.float32)]
+        )
+        safe = jnp.clip(slot_map, 0, pd.shape[0] - 1)
+        touched = slot_map >= 0
+        dst = jnp.where(touched, pd[safe], dst)
+        wgt = jnp.where(touched, pw[safe], wgt)
+        if has_moves:
+            slot_rows = jnp.where(touched, owner_patch[safe], slot_rows)
+        return dst, wgt, slot_rows
+
+    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
+
+
+def rebuild_arena(
+    dst, wgt, slot_rows, slot_map, owner_patch, d_patches, w_patches,
+    *, has_moves: bool, donate: bool = True,
+):
+    """Write all merged groups back in one gather pass (see _jit_rebuild)."""
+    return _jit_rebuild(len(d_patches), bool(has_moves), donate)(
+        dst, wgt, slot_rows, slot_map, owner_patch, *d_patches, *w_patches
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused apply: gather + merge + scatter (+ block move) in one program
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _jit_apply(width: int, backend: str, interpret: bool, donate: bool,
+               has_moves: bool):
+    def fn(
+        dst, wgt, slot_rows,
+        old_starts, old_caps, new_starts, new_caps, degs, row_ids,
+        b_dst, b_wgt, b_del,
+    ):
+        a = old_starts.shape[0]
+        cap_e = dst.shape[0]
+        lane = jnp.arange(width, dtype=jnp.int32)[None, :]
+
+        d_rows = util.rows_to_padded(dst, old_starts, degs, width, SENTINEL)
+        w_rows = util.rows_to_padded(wgt, old_starts, degs, width, 0.0)
+        d_rows, w_rows, counts = merge_rows(
+            d_rows, w_rows, degs, b_dst, b_wgt, b_del,
+            backend=backend, interpret=interpret,
+        )
+
+        if has_moves:
+            # grown rows: SENTINEL-fill the vacated block (freed blocks
+            # must read empty; slot_rows may go stale there — consumers
+            # mask on dst != SENTINEL)
+            moved = (new_starts != old_starts) & (old_starts >= 0)
+            old_idx = jnp.where(
+                moved[:, None] & (lane < old_caps[:, None]),
+                old_starts[:, None] + lane,
+                cap_e,
+            )
+            dst = dst.at[old_idx.reshape(-1)].set(
+                SENTINEL, mode="drop", unique_indices=True
+            )
+
+        # write each merged row over its (possibly new) full block
+        ok = new_starts >= 0
+        new_idx = jnp.where(
+            ok[:, None] & (lane < new_caps[:, None]),
+            new_starts[:, None] + lane,
+            cap_e,
+        ).reshape(-1)
+        dst = dst.at[new_idx].set(
+            d_rows.reshape(-1), mode="drop", unique_indices=True
+        )
+        wgt = wgt.at[new_idx].set(
+            w_rows.reshape(-1), mode="drop", unique_indices=True
+        )
+        if has_moves:
+            # only moved rows need fresh slot owners
+            slot_rows = slot_rows.at[new_idx].set(
+                jnp.broadcast_to(row_ids[:, None], (a, width)).reshape(-1),
+                mode="drop",
+                unique_indices=True,
+            )
+        return dst, wgt, slot_rows, counts
+
+    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
+
+
+def slot_update(
+    dst: jnp.ndarray,
+    wgt: jnp.ndarray,
+    slot_rows: jnp.ndarray,
+    old_starts: jnp.ndarray,
+    old_caps: jnp.ndarray,
+    new_starts: jnp.ndarray,
+    new_caps: jnp.ndarray,
+    degs: jnp.ndarray,
+    row_ids: jnp.ndarray,
+    b_dst: jnp.ndarray,
+    b_wgt: jnp.ndarray,
+    b_del: jnp.ndarray,
+    width: int,
+    backend: str = "auto",
+    interpret: bool = False,
+    donate: bool = True,
+    has_moves: bool = True,
+):
+    """Apply one width group of a mixed UpdatePlan to the slotted arena.
+
+    ``width`` is the group's static pow-2 row class (>= every member's
+    ``new_caps``; callers floor it at ``width_floor(backend)``).  All row
+    operands are [A] (A pow-2; pad rows carry ``old_starts == new_starts
+    == -1`` and drop out), run operands are [A, K]; numpy operands are
+    fine — jit's argument path transfers them cheaper than explicit
+    ``device_put`` calls.  ``has_moves=False`` elides the block-move
+    writes (old-block SENTINEL fill + slot-owner refresh) for groups
+    where no row changed class.  Returns ``(dst, wgt, slot_rows,
+    counts)`` with ``counts`` the merged live length per row.
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return _jit_apply(int(width), backend, interpret, donate, bool(has_moves))(
+        dst, wgt, slot_rows,
+        old_starts, old_caps, new_starts, new_caps, degs, row_ids,
+        b_dst, b_wgt, b_del,
+    )

@@ -7,7 +7,15 @@ pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st
 
-from repro.core import REPRESENTATIONS, alloc, edgebatch, from_coo, util
+from repro.core import (
+    REPRESENTATIONS,
+    alloc,
+    edgebatch,
+    from_coo,
+    traversal,
+    updates,
+    util,
+)
 import jax.numpy as jnp
 
 
@@ -108,6 +116,58 @@ def test_update_algebra_all_reps(base, ins, rem):
         for u, row in enumerate(g.to_edge_sets()):
             got |= {(u, v) for v in row}
         assert got == expect, f"{name}: set algebra violated"
+
+
+# --- interleaved streaming property: all reps vs a numpy CSR oracle ---------
+stream_rounds = st.lists(
+    st.tuples(edge_lists, edge_lists, st.booleans()),  # (inserts, deletes, walk?)
+    min_size=1,
+    max_size=4,
+)
+
+
+@given(rounds=stream_rounds)
+@settings(deadline=None, max_examples=12)
+def test_interleaved_stream_all_reps_vs_csr_oracle(rounds):
+    """Random mixed insert/delete/walk streams through apply(UpdatePlan).
+
+    The oracle is a dense numpy adjacency: mixed-batch semantics (one op
+    per key, insert wins over delete) applied per round, with
+    reverse-walk equivalence checked whenever the stream asks for it —
+    the paper's interleaved update/traversal regime end-to-end.
+    """
+    n = 16
+    adj = np.zeros((n, n), bool)
+    adj[0, 1] = True  # non-empty seed graph
+    c = from_coo([0], [1], n=n)
+    graphs = {name: cls.from_csr(c) for name, cls in REPRESENTATIONS.items()}
+    for ins, rem, do_walk in rounds:
+        ins_b = edgebatch.from_arrays(
+            [e[0] for e in ins], [e[1] for e in ins]
+        ) if ins else None
+        rem_b = edgebatch.from_arrays(
+            [e[0] for e in rem], [e[1] for e in rem]
+        ) if rem else None
+        plan = updates.plan_update(inserts=ins_b, deletes=rem_b)
+        # oracle: deletes first, inserts win conflicts
+        for s, d, dl in zip(plan.q_src, plan.q_dst, plan.q_del):
+            adj[int(s), int(d)] = not dl
+        expect = [set(np.nonzero(adj[u])[0].tolist()) for u in range(n)]
+        for name, g in graphs.items():
+            g, _ = g.apply(plan)
+            graphs[name] = g
+            got = g.to_edge_sets()
+            while len(got) < n:
+                got.append(set())
+            assert got[:n] == expect, f"{name}: stream diverged"
+        if do_walk:
+            walk_exp = traversal.reverse_walk_dense_oracle(adj, 3)
+            for name, g in graphs.items():
+                got = np.asarray(g.reverse_walk(3))
+                got = np.pad(got, (0, max(n - got.shape[0], 0)))[:n]
+                np.testing.assert_allclose(
+                    got, walk_exp, rtol=1e-5, err_msg=f"{name}: walk diverged"
+                )
 
 
 # --- DiGraph structural invariants ------------------------------------------
