@@ -1,13 +1,24 @@
-"""T2 — cloning / snapshotting (paper Fig. 3).
+"""T2 — cloning / snapshotting (paper Fig. 3) + per-buffer COW detach.
 
-clone() = deep copy (PetGraph/SNAP/cuGraph/our-DiGraph class);
-snapshot() = version handle (Aspen zero-cost / GraphBLAS lazy class).
+clone()    = deep copy (PetGraph/SNAP/cuGraph/our-DiGraph class), now one
+             fused async device dispatch per representation;
+snapshot() = version handle (Aspen zero-cost / GraphBLAS lazy class);
+cow        = the first small in-place update AFTER a snapshot — what the
+             per-buffer copy-on-write protocol (DESIGN.md §10) makes
+             cheap by detaching only the buffers the update touches.
 """
 from __future__ import annotations
 
-from repro.core import REPRESENTATIONS
+import numpy as np
+
+from repro.core import REPRESENTATIONS, edgebatch
 
 from . import common
+
+
+def _small_batch(c, rng):
+    k = max(int(c.m * 1e-3), 1)
+    return edgebatch.random_insertions(rng, c.n, k)
 
 
 def run():
@@ -16,6 +27,7 @@ def run():
         c = common.make_graph(gname)
         for rep_name, cls in REPRESENTATIONS.items():
             g = cls.from_csr(c)
+            rng = np.random.default_rng(7)
 
             def do_clone():
                 g2 = g.clone()
@@ -27,13 +39,39 @@ def run():
 
             t_clone = common.timeit(do_clone)
             t_snap = common.timeit(do_snap)
+
+            # first-mutation-after-snapshot vs plain mutation: the gap is
+            # the COW detach cost (buffers actually copied).  One fixed
+            # batch for every repeat keeps jit shapes and the plan cache
+            # warm, so the delta isolates the detach itself.
+            batch = _small_batch(c, rng)
+
+            def setup_plain():
+                return cls.from_csr(c), batch
+
+            def setup_snapped():
+                h = cls.from_csr(c)
+                h.snapshot()
+                return h, batch
+
+            def do_update(state):
+                h, b = state
+                h2, _ = h.add_edges(b, inplace=True)
+                h2.block_on()
+
+            t_plain = common.timeit_prepared(
+                setup_plain, do_update, warmup=2
+            )
+            t_cow = common.timeit_prepared(setup_snapped, do_update, warmup=2)
             rows.append(
                 {
                     "name": f"clone/{gname}/{rep_name}",
                     "us_per_call": round(t_clone * 1e6, 1),
                     "derived": f"snapshot_us={t_snap*1e6:.1f} "
                     f"edges_per_s={c.m/t_clone/1e6:.1f}M "
-                    f"snap_speedup={t_clone/max(t_snap,1e-9):.0f}x",
+                    f"snap_speedup={t_clone/max(t_snap,1e-9):.0f}x "
+                    f"cow_first_update_us={t_cow*1e6:.1f} "
+                    f"plain_update_us={t_plain*1e6:.1f}",
                 }
             )
     return common.emit(rows, ["name", "us_per_call", "derived"])

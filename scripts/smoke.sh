@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # PR smoke gate: tier-1 tests + the perf-trajectory benchmarks.
+#  * load      (device-resident ingest vs seed loader) -> BENCH_load.json
+#  * clone     (fused clone / snapshot / COW detach)   -> BENCH_clone.json
 #  * traversal (slot_walk vs the seed digraph_flat path) -> BENCH_traversal.json
 #  * update    (batch insert/delete, fixed pre-cloned timing) -> BENCH_update.json
 #  * stream    (interleaved mixed-batch apply + walk rounds) -> BENCH_stream.json
-# so perf regressions on both hot paths (updates AND traversal) show up
-# in every PR's diff.
+# so perf regressions on every paper task (load, clone, updates,
+# traversal) show up in every PR's diff.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,6 +14,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
+
+echo "== load benchmark (paper Fig. 2, seed-baseline row) =="
+python -m benchmarks.run --only load --json BENCH_load.json
+
+echo "== clone benchmark (paper Fig. 3 + COW detach) =="
+python -m benchmarks.run --only clone --json BENCH_clone.json
 
 echo "== traversal benchmark (social_small, 1e-2 update batches) =="
 python -m benchmarks.run --only traversal --json BENCH_traversal.json
@@ -22,4 +30,4 @@ python -m benchmarks.run --only update --json BENCH_update.json
 echo "== stream benchmark (web_small, interleaved mixed batches) =="
 python -m benchmarks.run --only stream --json BENCH_stream.json
 
-echo "== BENCH_traversal.json / BENCH_update.json / BENCH_stream.json written =="
+echo "== BENCH_{load,clone,traversal,update,stream}.json written =="

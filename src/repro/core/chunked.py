@@ -101,10 +101,12 @@ class ChunkedGraph:
     n: int
     m: int
     next_page: int
-    # seal-on-snapshot: True while any snapshot shares the device payload.
-    # The next mutation detaches (one functional copy = coarse-grained COW),
-    # after which updates donate buffers again (in-place into fresh pages).
-    sealed: bool = False
+    # per-buffer seal-on-snapshot (DESIGN.md §10): names of device buffers
+    # shared with a snapshot.  Page writes detach the page pool; growing
+    # the pool concatenates into fresh buffers and unseals for free.
+    _sealed: set = dataclasses.field(default_factory=set)
+
+    _PAYLOAD = ("pages_dst", "pages_wgt", "page_owner")
 
     # ------------------------------------------------------------------
     @property
@@ -120,41 +122,35 @@ class ChunkedGraph:
 
     @classmethod
     def from_csr(cls, c: csr_mod.CSR) -> "ChunkedGraph":
+        """Vectorized page-pool build (DESIGN.md §10).
+
+        The seed filled pages with a python loop over vertices; this is
+        the csr_build shifted-offset fill quantized to PAGE-sized blocks
+        — a handful of numpy passes + three transfers regardless of n.
+        """
+        from ..kernels.csr_build import ops as _cb_ops
+
         degrees = np.asarray(c.degrees, np.int64)
         npages = -(-degrees // PAGE)
         total_pages = int(npages.sum())
         p_cap = alloc.next_pow2(max(total_pages, 2))
-        pages_d = np.full((p_cap, PAGE), SENTINEL, np.int32)
-        pages_w = np.zeros((p_cap, PAGE), np.float32)
-        owner = np.full(p_cap, c.n, np.int32)
-        table: list[np.ndarray] = []
-        o = np.asarray(c.offsets)
-        dd = np.asarray(c.dst)
-        ww = np.asarray(c.wgt) if c.wgt is not None else np.ones(c.m, np.float32)
-        cur = 0
-        for u in range(c.n):
-            k = int(npages[u])
-            ids = np.arange(cur, cur + k, dtype=np.int64)
-            table.append(ids)
-            row = dd[o[u] : o[u + 1]]
-            roww = ww[o[u] : o[u + 1]]
-            flat_d = np.full(k * PAGE, SENTINEL, np.int32)
-            flat_w = np.zeros(k * PAGE, np.float32)
-            flat_d[: row.shape[0]] = row
-            flat_w[: row.shape[0]] = roww
-            pages_d[cur : cur + k] = flat_d.reshape(k, PAGE)
-            pages_w[cur : cur + k] = flat_w.reshape(k, PAGE)
-            owner[cur : cur + k] = u
-            cur += k
+        ww = c.wgt if c.wgt is not None else np.ones(c.m, np.float32)
+        page_base = np.cumsum(npages) - npages
+        pages_d, pages_w, owner = _cb_ops.pages_image_host(
+            c.offsets, c.dst, ww, page_base, npages, PAGE, p_cap, int(c.n)
+        )
+        bounds = np.cumsum(npages)
+        all_ids = np.arange(total_pages, dtype=np.int64)
+        table = np.split(all_ids, bounds[:-1]) if c.n else []
         return cls(
             pages_dst=jnp.asarray(pages_d),
             pages_wgt=jnp.asarray(pages_w),
             page_owner=jnp.asarray(owner),
-            page_table=table,
+            page_table=list(table),
             degrees=degrees.copy(),
             n=int(c.n),
             m=int(c.m),
-            next_page=cur,
+            next_page=total_pages,
         )
 
     # ------------------------------------------------------------------
@@ -181,24 +177,23 @@ class ChunkedGraph:
             self.page_owner = jnp.concatenate(
                 [self.page_owner, jnp.full((padp,), self.cap_v, jnp.int32)]
             )
+            self._sealed.clear()  # grown pool = fresh buffers
         ids = np.arange(self.next_page, self.next_page + count, dtype=np.int64)
         self.next_page += count
         return ids
 
     # ------------------------------------------------------------------
-    def _detach(self) -> None:
-        """Coarse-grained COW: pay one copy so outstanding snapshots stay valid."""
-        if not self.sealed:
-            return
-        self.pages_dst = jnp.array(self.pages_dst, copy=True)
-        self.pages_wgt = jnp.array(self.pages_wgt, copy=True)
-        self.page_owner = jnp.array(self.page_owner, copy=True)
-        self.sealed = False
+    @property
+    def sealed(self) -> bool:
+        return bool(self._sealed)
+
+    def _detach(self, *names: str) -> None:
+        """COW: copy the named snapshot-shared buffers in one fused dispatch."""
+        util.cow_detach(self, self._sealed, names or self._PAYLOAD)
 
     def _apply_plan(self, plan: updates.UpdatePlan) -> int:
         if plan.n_ops == 0:
             return 0
-        self._detach()
         if plan.n_ins:
             self._reserve_vertices(plan.max_insert_vertex() + 1)
         # shared out-of-range filter (delete-only runs at unseen rows)
@@ -241,6 +236,10 @@ class ChunkedGraph:
                 self.page_table[u] = ids
                 new_tbl[i, : ids.shape[0]] = ids
             rr = _pad2(r.astype(np.int32), a_pad, self.cap_v)
+            # detach at the write site, AFTER _alloc_pages: pool growth
+            # concatenates into fresh buffers and unseals for free, so a
+            # growing post-snapshot batch pays no COW copy at all
+            self._detach()
             self.pages_dst, self.pages_wgt, self.page_owner = _jit_write_pages(
                 int(pc), True
             )(
@@ -277,25 +276,26 @@ class ChunkedGraph:
     def snapshot(self) -> "ChunkedGraph":
         """Aspen acquire_version(): O(#vertices) host metadata, zero device.
 
-        Seals the shared payload; the next mutation on either handle pays a
-        single detach copy (coarse-grained copy-on-write).
+        Seals the shared payload; the next page write on either handle
+        pays one fused detach copy (copy-on-write), while pool growth
+        unseals for free.
         """
-        self.sealed = True
+        self._sealed = set(self._PAYLOAD)
         return dataclasses.replace(
             self,
             page_table=[ids for ids in self.page_table],
             degrees=self.degrees.copy(),
-            sealed=True,
+            _sealed=set(self._PAYLOAD),
         )
 
     def clone(self) -> "ChunkedGraph":
+        copies = util.fused_copy(*(getattr(self, n) for n in self._PAYLOAD))
         return dataclasses.replace(
             self,
-            pages_dst=jnp.array(self.pages_dst, copy=True),
-            pages_wgt=jnp.array(self.pages_wgt, copy=True),
-            page_owner=jnp.array(self.page_owner, copy=True),
             page_table=[ids.copy() for ids in self.page_table],
             degrees=self.degrees.copy(),
+            _sealed=set(),
+            **dict(zip(self._PAYLOAD, copies)),
         )
 
     def vacuum(self) -> None:

@@ -74,13 +74,11 @@ class SortedCOO:
 
     @classmethod
     def from_csr(cls, c: csr_mod.CSR) -> "SortedCOO":
+        from ..kernels.csr_build import ops as _cb_ops
+
         cap = alloc.next_pow2(max(c.m, 2))
-        rows = util.expand_rows(c.offsets, c.m)
-        pad = cap - c.m
-        src = jnp.concatenate([rows, jnp.full((pad,), SENTINEL, jnp.int32)])
-        dst = jnp.concatenate([c.dst, jnp.full((pad,), SENTINEL, jnp.int32)])
-        w = c.wgt if c.wgt is not None else jnp.ones((c.m,), jnp.float32)
-        wgt = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
+        w = c.wgt if c.wgt is not None else np.ones(c.m, np.float32)
+        src, dst, wgt = _cb_ops.flat_image(c.offsets, c.dst, w, cap)
         return cls(src, dst, wgt, int(c.n), int(c.m))
 
     def block_on(self) -> None:
@@ -115,11 +113,7 @@ class SortedCOO:
     # -- export / queries -------------------------------------------------
     def clone(self) -> "SortedCOO":
         return SortedCOO(
-            jnp.array(self.src, copy=True),
-            jnp.array(self.dst, copy=True),
-            jnp.array(self.wgt, copy=True),
-            self.n,
-            self.m,
+            *util.fused_copy(self.src, self.dst, self.wgt), self.n, self.m
         )
 
     def snapshot(self) -> "SortedCOO":

@@ -81,35 +81,69 @@ def from_coo(
     num_partitions: int = 4,
     dedup: bool = True,
     sort: bool = True,
+    engine: str = "auto",
+    presorted: Optional[bool] = None,
 ) -> CSR:
-    """Build a CSR from COO arrays (host numpy path, mirrors Alg 5).
+    """Build a CSR from COO arrays via the counting-sort engines (Alg 5).
 
     ``num_partitions`` reproduces the paper's per-partition degree counting;
     partial bincounts are computed per block of edges and summed, exactly the
-    role partitions play in Alg 5 lines 4-8.
+    role partitions play in Alg 5 lines 4-8.  ``engine`` selects the
+    ``kernels/csr_build`` backend: ``host`` (packed-key radix argsort,
+    default off-TPU), ``xla`` (one fused device program, default on TPU)
+    or ``pallas`` (tile-kernel degree count).  The seed's ``np.lexsort``
+    is retired — the packed single-key sort does the same stable
+    (src, dst) ordering in one radix pass.
     """
+    from ..kernels.csr_build import ops as _build_ops
+
     src = np.asarray(src, dtype=np.int64)
     dst_a = np.asarray(dst, dtype=np.int64)
     w = np.asarray(wgt, dtype=np.float32) if wgt is not None else None
     if n is None:
         n = int(max(src.max(initial=-1), dst_a.max(initial=-1)) + 1)
+    if engine == "auto":
+        engine = _build_ops.default_engine()
 
-    # per-partition degree counting (Alg 5: degrees[0] += degrees[p])
-    rho = max(int(num_partitions), 1)
-    bounds = np.linspace(0, src.shape[0], rho + 1).astype(np.int64)
-    degrees = np.zeros(n, dtype=np.int64)
-    for p in range(rho):
-        lo, hi = bounds[p], bounds[p + 1]
-        degrees += np.bincount(src[lo:hi], minlength=n)
+    if engine in ("xla", "pallas") and sort and not dedup:
+        return _from_coo_device(src, dst_a, w, n=int(n), engine=engine)
 
-    # shifted-offset fill: a stable sort by src realizes the same placement
-    # the paper achieves with atomic offset increments.
-    if sort:
-        order = np.lexsort((dst_a, src))
+    # shifted-offset fill: a stable counting sort realizes the same
+    # placement the paper achieves with atomic offset increments.  Inputs
+    # already in (src, dst) order — CSR-order files, which is how both
+    # our writer and most real MTX corpora lay edges out — skip the sort
+    # AND the three permutation gathers, and read offsets straight off
+    # the sorted runs (no degree-count pass at all).
+    # ``presorted`` lets the caller pass an order observation made for
+    # free elsewhere (the compiled row parser tracks it while folding);
+    # None means detect here.
+    if presorted is None:
+        presorted = sort and _build_ops.is_coo_sorted(src, dst_a)
+    else:
+        presorted = bool(presorted) and sort
+    if presorted:
+        src_s, dst_s, w_s = src, dst_a, w
+    elif sort:
+        src_s, dst_s, *wrest = (
+            _build_ops.sort_coo_host(src, dst_a, w)
+            if w is not None
+            else _build_ops.sort_coo_host(src, dst_a)
+        )
+        w_s = wrest[0] if w is not None else None
     else:
         order = np.argsort(src, kind="stable")
-    src_s, dst_s = src[order], dst_a[order]
-    w_s = w[order] if w is not None else None
+        src_s, dst_s = src[order], dst_a[order]
+        w_s = w[order] if w is not None else None
+
+    if (presorted and not dedup) or (dedup and sort and src_s.shape[0]):
+        # offsets come straight off the sorted runs, or the dedup pass
+        # below recounts — a degree pass here would only be discarded
+        degrees = None
+    else:
+        # per-partition degree counting (Alg 5: degrees[0] += degrees[p])
+        degrees = _build_ops.count_degrees(
+            src, int(n), num_partitions=num_partitions, engine="host"
+        )
 
     if dedup and sort and src_s.shape[0]:
         keep = np.concatenate(
@@ -119,14 +153,70 @@ def from_coo(
         w_s = w_s[keep] if w_s is not None else None
         degrees = np.bincount(src_s, minlength=n)
 
-    offsets = np.zeros(n + 1, dtype=np.int64)
-    np.cumsum(degrees, out=offsets[1:])
+    if degrees is None:
+        offsets = np.searchsorted(src_s, np.arange(n + 1, dtype=np.int64))
+    else:
+        offsets = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(degrees, out=offsets[1:])
+    # out-of-range ids (negative or >= n) fall out of both the degree
+    # histogram and the searchsorted window; the seed's np.bincount
+    # raised on them — keep failing loudly instead of emitting a CSR
+    # whose offsets orphan edges
+    if int(offsets[0]) != 0 or int(offsets[-1]) != int(src_s.shape[0]):
+        raise ValueError("from_coo: source id out of range [0, n)")
     return CSR(
         offsets=jnp.asarray(offsets, dtype=jnp.int32),
         dst=jnp.asarray(dst_s, dtype=jnp.int32),
         wgt=jnp.asarray(w_s, dtype=jnp.float32) if w_s is not None else None,
         n=int(n),
         m=int(dst_s.shape[0]),
+    )
+
+
+def _from_coo_device(src, dst, wgt, *, n: int, engine: str) -> CSR:
+    """Fused on-device counting-sort build (pow-2 padded, no host sort).
+
+    Pad edges carry src = n so they sort to the tail; the returned CSR
+    slices them off.  With ``engine="pallas"`` the degree histogram runs
+    through the partitioned tile kernel instead of the scatter-add.
+    """
+    from ..kernels.csr_build import ops as _build_ops
+    from . import alloc
+
+    m = int(src.shape[0])
+    m_pad = alloc.next_pow2(max(m, 2))
+    sp = np.full(m_pad, n, np.int32)
+    sp[:m] = src
+    dp = np.zeros(m_pad, np.int32)
+    dp[:m] = dst
+    wp = np.zeros(m_pad, np.float32)
+    if wgt is not None:
+        wp[:m] = wgt
+    else:
+        wp[:m] = 1.0
+    if engine == "pallas":
+        # the tile kernel supplies the histogram; sort-only device pass
+        # (no second degree count + cumsum inside the fused build)
+        _, dst_s, wgt_s = _build_ops.sort_coo_device(sp, dp, wp)
+        deg = _build_ops.count_degrees(sp, n, engine="pallas")
+        offsets = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(deg, dtype=jnp.int32)]
+        )
+    else:
+        offsets, _, dst_s, wgt_s = _build_ops.coo_to_csr_device(sp, dp, wp, n=n)
+    # same loud failure as the host engine: ids outside [0, n) fall out
+    # of the degree histogram (negatives additionally shift every row's
+    # window) — a 2-element readback is cheap insurance against silently
+    # orphaned edges
+    ends = np.asarray(offsets[jnp.array([0, n])])
+    if int(ends[0]) != 0 or int(ends[1]) != m:
+        raise ValueError("from_coo: source id out of range [0, n)")
+    return CSR(
+        offsets=offsets,
+        dst=dst_s[:m],
+        wgt=wgt_s[:m] if wgt is not None else None,
+        n=n,
+        m=m,
     )
 
 

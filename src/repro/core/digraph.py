@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import alloc, arena, csr as csr_mod, edgebatch, updates, util
+from ..kernels.csr_build import ops as _cb_ops
 from ..kernels.slot_update import ops as _su_ops
 
 SENTINEL = util.SENTINEL
@@ -112,9 +113,11 @@ class DiGraph:
     wgt: jnp.ndarray
     slot_rows: jnp.ndarray
     stats: alloc.AllocStats = dataclasses.field(default_factory=alloc.AllocStats)
-    # seal-on-snapshot: while True, a snapshot shares the device payload and
-    # the next in-place mutation pays one detach copy before donating again.
-    sealed: bool = False
+    # per-buffer seal-on-snapshot (DESIGN.md §10): names of device buffers
+    # currently shared with a snapshot.  A mutation detaches ONLY the
+    # buffers it is about to write — a small post-snapshot update copies
+    # dst/wgt but keeps sharing slot_rows until a block actually moves.
+    _sealed: set = dataclasses.field(default_factory=set)
     # memoized derived views; any mutation resets them to None.
     _csr_cache: Optional[csr_mod.CSR] = dataclasses.field(
         default=None, repr=False, compare=False
@@ -151,8 +154,16 @@ class DiGraph:
     # construction
     # ------------------------------------------------------------------
     @classmethod
-    def from_csr(cls, c: csr_mod.CSR) -> "DiGraph":
-        degrees = np.asarray(c.degrees, dtype=np.int64)
+    def from_csr(cls, c: csr_mod.CSR, *, engine: str = "auto") -> "DiGraph":
+        """Direct CSR -> arena-image construction (DESIGN.md §10).
+
+        Host metadata (CP2AA block placement) stays numpy; the device
+        payload comes from ``kernels/csr_build.arena_image`` — a numpy
+        shifted-offset fill + one transfer off-TPU, or a fused on-device
+        scatter program on TPU (no host round-trip for a device CSR).
+        """
+        offsets_h = np.asarray(c.offsets, dtype=np.int64)
+        degrees = np.diff(offsets_h)
         n_cap = alloc.reserve_size(c.n)
         deg = np.zeros(n_cap, np.int64)
         deg[: c.n] = degrees
@@ -166,21 +177,12 @@ class DiGraph:
         cap_e = alloc.next_pow2(max(total, 2))
         lay = arena.ArenaLayout(capacity=cap_e, bump=total)
 
-        # device fill
-        gidx = np.repeat(starts[: c.n].clip(0), degrees) + (
-            np.arange(c.m) - np.repeat(np.asarray(c.offsets)[:-1], degrees)
+        wgt_src = c.wgt if c.wgt is not None else np.ones(c.m, np.float32)
+        dst_d, wgt_d, rows_d = _cb_ops.arena_image(
+            c.offsets, c.dst, wgt_src,
+            starts[: c.n], caps[: c.n], cap_e, n_cap,
+            total=total, engine=engine,
         )
-        dst = np.full(cap_e, SENTINEL, np.int32)
-        dst[gidx] = np.asarray(c.dst)
-        wgt = np.zeros(cap_e, np.float32)
-        wgt[gidx] = (
-            np.asarray(c.wgt) if c.wgt is not None else np.ones(c.m, np.float32)
-        )
-        slot_rows = np.full(cap_e, n_cap, np.int32)
-        row_of_block = np.repeat(
-            np.arange(c.n, dtype=np.int32), caps[: c.n].astype(np.int64)
-        )
-        slot_rows[:total] = row_of_block
         exists = np.zeros(n_cap, bool)
         exists[: c.n] = True
         g = cls(
@@ -191,9 +193,9 @@ class DiGraph:
             layout=lay,
             n=int(c.n),
             m=int(c.m),
-            dst=jnp.asarray(dst),
-            wgt=jnp.asarray(wgt),
-            slot_rows=jnp.asarray(slot_rows),
+            dst=dst_d,
+            wgt=wgt_d,
+            slot_rows=rows_d,
         )
         g._refresh_occupancy()
         return g
@@ -268,13 +270,20 @@ class DiGraph:
     # ------------------------------------------------------------------
     # the paper's core ops
     # ------------------------------------------------------------------
-    def _detach(self) -> None:
-        if not self.sealed:
-            return
-        self.dst = jnp.array(self.dst, copy=True)
-        self.wgt = jnp.array(self.wgt, copy=True)
-        self.slot_rows = jnp.array(self.slot_rows, copy=True)
-        self.sealed = False
+    @property
+    def sealed(self) -> bool:
+        """True while ANY device buffer is shared with a snapshot."""
+        return bool(self._sealed)
+
+    def _detach(self, *names: str) -> None:
+        """Per-buffer copy-on-write (DESIGN.md §10).
+
+        Copies ONLY the named snapshot-shared buffers (all of them when
+        called bare), in one fused dispatch, and marks them private.
+        """
+        util.cow_detach(
+            self, self._sealed, names or ("dst", "wgt", "slot_rows")
+        )
 
     def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
         """Graph union G ∪ ΔG (paper Alg 8).  Returns (graph, ΔM)."""
@@ -290,10 +299,11 @@ class DiGraph:
         """Apply a mixed delete+insert UpdatePlan in one pass (DESIGN.md §9).
 
         Returns ``(graph, ΔM)`` with ΔM the *net* edge-count change
-        (negative when deletions dominate).
+        (negative when deletions dominate).  Detaching from snapshots is
+        per-buffer and happens inside ``_apply_impl`` once it knows which
+        buffers the batch actually writes.
         """
         g = self if inplace else self.clone()
-        g._detach()
         dm = g._apply_impl(plan, donate=True)
         return g, dm
 
@@ -340,6 +350,7 @@ class DiGraph:
                 self.dst, self.wgt, self.slot_rows = _jit_grow_buffer(
                     target, self.cap_v
                 )(self.dst, self.wgt, self.slot_rows)
+                self._sealed.clear()  # grow copies into fresh buffers
                 self.layout.capacity = target
                 self.stats.record_relayout()
                 for i in pending:
@@ -376,6 +387,10 @@ class DiGraph:
         )
         net = 0
         has_moves = bool(grow.any())
+        # per-buffer COW: dst/wgt are always written; the owner map only
+        # when a block moves — a sealed slot_rows stays snapshot-shared
+        # through every non-moving update.
+        self._detach("dst", "wgt", *(("slot_rows",) if has_moves else ()))
         d_patches: list = []
         w_patches: list = []
         deferred: list = []  # (gsel, device counts) — synced once at the end
@@ -532,7 +547,7 @@ class DiGraph:
         self.starts[:] = -1
         self.starts[live] = new_starts
         self.layout = arena.ArenaLayout(capacity=new_cap_e, bump=total)
-        self.sealed = False  # fresh buffers: snapshots keep the old payload
+        self._sealed.clear()  # fresh buffers: snapshots keep the old payload
         self.stats.record_relayout()
         self._refresh_occupancy()
         self._invalidate_derived()
@@ -550,7 +565,15 @@ class DiGraph:
     # cloning / snapshots / export (paper Alg 6)
     # ------------------------------------------------------------------
     def clone(self) -> "DiGraph":
-        """Deep copy — device buffers copied, layout preserved."""
+        """Deep copy in ONE fused async device dispatch (DESIGN.md §10).
+
+        The seed issued three ``jnp.array(copy=True)`` dispatches (each a
+        synchronous transfer-queue round-trip); ``util.fused_copy`` runs
+        a single jitted program that copies all three payload buffers and
+        returns without blocking — the clone is usable immediately and
+        only synchronizes when first read.
+        """
+        dst, wgt, slot_rows = util.fused_copy(self.dst, self.wgt, self.slot_rows)
         g = DiGraph(
             degrees=self.degrees.copy(),
             capacities=self.capacities.copy(),
@@ -559,9 +582,9 @@ class DiGraph:
             layout=self.layout.clone(),
             n=self.n,
             m=self.m,
-            dst=jnp.array(self.dst, copy=True),
-            wgt=jnp.array(self.wgt, copy=True),
-            slot_rows=jnp.array(self.slot_rows, copy=True),
+            dst=dst,
+            wgt=wgt,
+            slot_rows=slot_rows,
         )
         g._refresh_occupancy()  # clone starts with fresh stats
         return g
@@ -569,11 +592,12 @@ class DiGraph:
     def snapshot(self) -> "DiGraph":
         """O(1) device-cost snapshot: shares payload, seals both handles.
 
-        The next in-place update on either handle pays one detach copy —
-        JAX immutability gives Aspen-style snapshots for free as long as
-        donation is suspended (DESIGN.md §2).
+        The next in-place update on either handle pays a detach copy of
+        ONLY the buffers it writes (per-buffer COW) — JAX immutability
+        gives Aspen-style snapshots for free as long as donation is
+        suspended on shared buffers (DESIGN.md §2/§10).
         """
-        self.sealed = True
+        self._sealed = {"dst", "wgt", "slot_rows"}
         return dataclasses.replace(
             self,
             degrees=self.degrees.copy(),
@@ -582,7 +606,7 @@ class DiGraph:
             exists=self.exists.copy(),
             layout=self.layout.clone(),
             stats=dataclasses.replace(self.stats),
-            sealed=True,
+            _sealed={"dst", "wgt", "slot_rows"},
         )
 
     def to_csr(self) -> csr_mod.CSR:

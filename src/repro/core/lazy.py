@@ -106,17 +106,26 @@ class LazyCSR:
     m: int                       # live-edge count (exact when clean)
     n_zombies: int
     dirty: bool
-    sealed: bool = False         # seal-on-snapshot (see DiGraph)
+    # per-buffer seal-on-snapshot (DESIGN.md §10): zombie marking detaches
+    # only the masks, pending appends only the ring — the (large) base
+    # arrays are never mutated in place and therefore never copied.
+    _sealed: set = dataclasses.field(default_factory=set)
+
+    #: every device buffer participating in snapshot sharing
+    _PAYLOAD = (
+        "base_rows", "base_dst", "base_wgt", "dead",
+        "p_src", "p_dst", "p_wgt", "p_dead",
+    )
 
     @classmethod
     def from_csr(cls, c: csr_mod.CSR) -> "LazyCSR":
+        from ..kernels.csr_build import ops as _cb_ops
+
         cap = alloc.next_pow2(max(c.m, 2))
-        rows = util.expand_rows(c.offsets, c.m)
-        pad = cap - c.m
-        base_rows = jnp.concatenate([rows, jnp.full((pad,), SENTINEL, jnp.int32)])
-        base_dst = jnp.concatenate([c.dst, jnp.full((pad,), SENTINEL, jnp.int32)])
-        w = c.wgt if c.wgt is not None else jnp.ones((c.m,), jnp.float32)
-        base_wgt = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
+        w = c.wgt if c.wgt is not None else np.ones(c.m, np.float32)
+        base_rows, base_dst, base_wgt = _cb_ops.flat_image(
+            c.offsets, c.dst, w, cap
+        )
         pcap = 16
         return cls(
             base_rows=base_rows,
@@ -138,18 +147,13 @@ class LazyCSR:
     def block_on(self) -> None:
         self.base_dst.block_until_ready()
 
-    def _detach(self) -> None:
-        if not self.sealed:
-            return
-        self.base_rows = jnp.array(self.base_rows, copy=True)
-        self.base_dst = jnp.array(self.base_dst, copy=True)
-        self.base_wgt = jnp.array(self.base_wgt, copy=True)
-        self.dead = jnp.array(self.dead, copy=True)
-        self.p_src = jnp.array(self.p_src, copy=True)
-        self.p_dst = jnp.array(self.p_dst, copy=True)
-        self.p_wgt = jnp.array(self.p_wgt, copy=True)
-        self.p_dead = jnp.array(self.p_dead, copy=True)
-        self.sealed = False
+    @property
+    def sealed(self) -> bool:
+        return bool(self._sealed)
+
+    def _detach(self, *names: str) -> None:
+        """Copy ONLY the named snapshot-shared buffers (one fused dispatch)."""
+        util.cow_detach(self, self._sealed, names or self._PAYLOAD)
 
     # -- updates ----------------------------------------------------------
     def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
@@ -171,7 +175,6 @@ class LazyCSR:
         if plan.n_ops == 0:
             return self, 0
         g = self if inplace else self.clone()
-        g._detach()
         dm = 0
         if plan.n_del:
             dm -= g._mark_deletes(*plan.delete_arrays())
@@ -182,6 +185,8 @@ class LazyCSR:
 
     def _mark_deletes(self, s: np.ndarray, d: np.ndarray) -> int:
         """Zombie-mark (s, d) pairs in base + pending; returns #newly dead."""
+        # zombie masks are the only buffers this writes (per-buffer COW)
+        self._detach("dead", *(("p_dead",) if self.p_n > 0 else ()))
         s64 = s.astype(np.int64)
         valid = s64 < self.offsets.shape[0] - 1
         lo = np.where(valid, self.offsets[np.minimum(s64, self.offsets.shape[0] - 2)], 0)
@@ -212,6 +217,11 @@ class LazyCSR:
             self.p_dst = jnp.concatenate([self.p_dst, jnp.full((pad,), SENTINEL, jnp.int32)])
             self.p_wgt = jnp.concatenate([self.p_wgt, jnp.zeros((pad,), jnp.float32)])
             self.p_dead = jnp.concatenate([self.p_dead, jnp.zeros((pad,), bool)])
+            # ring growth produced fresh buffers; any snapshot keeps the old
+            self._sealed -= {"p_src", "p_dst", "p_wgt", "p_dead"}
+        else:
+            # only the pending ring is written (per-buffer COW)
+            self._detach("p_src", "p_dst", "p_wgt")
         self.p_src, self.p_dst, self.p_wgt = _jit_append(True)(
             self.p_src, self.p_dst, self.p_wgt, batch.src, batch.dst, batch.wgt, self.p_n
         )
@@ -252,27 +262,28 @@ class LazyCSR:
         self.p_n = 0
         self.n_zombies = 0
         self.dirty = False
-        self.sealed = False  # fresh buffers, nothing shared
+        self._sealed.clear()  # fresh buffers, nothing shared
 
     # -- export / queries ---------------------------------------------------
     def clone(self) -> "LazyCSR":
+        copies = util.fused_copy(*(getattr(self, n) for n in self._PAYLOAD))
         return dataclasses.replace(
             self,
-            base_rows=jnp.array(self.base_rows, copy=True),
-            base_dst=jnp.array(self.base_dst, copy=True),
-            base_wgt=jnp.array(self.base_wgt, copy=True),
             offsets=self.offsets.copy(),
-            dead=jnp.array(self.dead, copy=True),
-            p_src=jnp.array(self.p_src, copy=True),
-            p_dst=jnp.array(self.p_dst, copy=True),
-            p_wgt=jnp.array(self.p_wgt, copy=True),
-            p_dead=jnp.array(self.p_dead, copy=True),
+            _sealed=set(),
+            **dict(zip(self._PAYLOAD, copies)),
         )
 
     def snapshot(self) -> "LazyCSR":
-        """GraphBLAS-style lazy copy: share buffers until next mutation."""
-        self.sealed = True
-        return dataclasses.replace(self, offsets=self.offsets.copy(), sealed=True)
+        """GraphBLAS-style lazy copy: share buffers until next mutation.
+
+        Per-buffer COW keeps the base arrays shared forever — updates
+        only ever detach the zombie masks or the pending ring.
+        """
+        self._sealed = set(self._PAYLOAD)
+        return dataclasses.replace(
+            self, offsets=self.offsets.copy(), _sealed=set(self._PAYLOAD)
+        )
 
     def to_csr(self) -> csr_mod.CSR:
         self.assemble()

@@ -12,6 +12,38 @@ SENTINEL = np.int32(np.iinfo(np.int32).max)
 ZOMBIE = np.int32(np.iinfo(np.int32).max - 1)
 
 
+@jax.jit
+def _fused_copy(*arrays):
+    return tuple(jnp.copy(a) for a in arrays)
+
+
+def fused_copy(*arrays):
+    """Deep-copy device arrays in ONE jitted dispatch (async).
+
+    ``clone()`` paths used to issue one ``jnp.array(copy=True)`` dispatch
+    per buffer; a single fused program copies a whole representation's
+    payload with one launch and no host sync — the caller blocks only
+    when it first reads the clone.
+    """
+    return _fused_copy(*arrays)
+
+
+def cow_detach(obj, sealed: set, names) -> None:
+    """Per-buffer copy-on-write detach (DESIGN.md §10), shared by every
+    representation: copy the named snapshot-shared attribute buffers of
+    ``obj`` in one fused dispatch and mark them private.  The protocol
+    lives here once so the donation-discipline invariant (a sealed
+    buffer is never donated) has a single implementation to audit.
+    """
+    need = [n for n in names if n in sealed]
+    if not need:
+        return
+    copies = fused_copy(*(getattr(obj, n) for n in need))
+    for n, c in zip(need, copies):
+        setattr(obj, n, c)
+        sealed.discard(n)
+
+
 def lexsort2(primary: jnp.ndarray, secondary: jnp.ndarray) -> jnp.ndarray:
     """Order sorting by (primary, secondary), both int arrays.
 

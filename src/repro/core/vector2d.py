@@ -23,11 +23,17 @@ class Vector2D:
     @classmethod
     def from_csr(cls, c: csr_mod.CSR) -> "Vector2D":
         o = np.asarray(c.offsets)
-        d = np.asarray(c.dst)
-        w = np.asarray(c.wgt) if c.wgt is not None else np.ones(c.m, np.float32)
-        rows = [d[o[u] : o[u + 1]].copy() for u in range(c.n)]
-        wrows = [w[o[u] : o[u + 1]].copy() for u in range(c.n)]
-        return cls(rows, wrows, int(c.n), int(c.m))
+        d = np.ascontiguousarray(np.asarray(c.dst))
+        w = np.ascontiguousarray(
+            np.asarray(c.wgt) if c.wgt is not None else np.ones(c.m, np.float32)
+        )
+        # one np.split instead of n fancy-index copies; rows are views of
+        # one backing buffer, which is safe because updates always REPLACE
+        # a row array (union1d / boolean keep), never write into it
+        cuts = o[1:-1]
+        rows = np.split(d, cuts) if c.n else []
+        wrows = np.split(w, cuts) if c.n else []
+        return cls(list(rows), list(wrows), int(c.n), int(c.m))
 
     def block_on(self) -> None:  # host rep: nothing to wait for
         pass

@@ -1,0 +1,1 @@
+"""csr_build — counting-sort COO→CSR→arena construction (DESIGN.md §10)."""

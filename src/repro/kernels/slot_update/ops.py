@@ -167,9 +167,13 @@ def _jit_rebuild(n_patches: int, has_moves: bool, donate: bool):
         wgt = jnp.where(touched, pw[safe], wgt)
         if has_moves:
             slot_rows = jnp.where(touched, owner_patch[safe], slot_rows)
-        return dst, wgt, slot_rows
+            return dst, wgt, slot_rows
+        # owner map untouched: neither donated nor returned (per-buffer COW)
+        return dst, wgt
 
-    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
+    if not donate:
+        return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(0, 1, 2) if has_moves else (0, 1))
 
 
 def rebuild_arena(
@@ -177,9 +181,12 @@ def rebuild_arena(
     *, has_moves: bool, donate: bool = True,
 ):
     """Write all merged groups back in one gather pass (see _jit_rebuild)."""
-    return _jit_rebuild(len(d_patches), bool(has_moves), donate)(
+    out = _jit_rebuild(len(d_patches), bool(has_moves), donate)(
         dst, wgt, slot_rows, slot_map, owner_patch, *d_patches, *w_patches
     )
+    if has_moves:
+        return out
+    return out[0], out[1], slot_rows
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +195,10 @@ def rebuild_arena(
 @functools.lru_cache(maxsize=None)
 def _jit_apply(width: int, backend: str, interpret: bool, donate: bool,
                has_moves: bool):
+    """Without moves, ``slot_rows`` is read-only: it is neither donated
+    nor returned, so a snapshot-shared owner map stays shared (per-buffer
+    COW — the graph handle keeps its existing array object)."""
+
     def fn(
         dst, wgt, slot_rows,
         old_starts, old_caps, new_starts, new_caps, degs, row_ids,
@@ -238,9 +249,13 @@ def _jit_apply(width: int, backend: str, interpret: bool, donate: bool,
                 mode="drop",
                 unique_indices=True,
             )
-        return dst, wgt, slot_rows, counts
+        if has_moves:
+            return dst, wgt, slot_rows, counts
+        return dst, wgt, counts
 
-    return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
+    if not donate:
+        return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(0, 1, 2) if has_moves else (0, 1))
 
 
 def slot_update(
@@ -271,13 +286,20 @@ def slot_update(
     fine — jit's argument path transfers them cheaper than explicit
     ``device_put`` calls.  ``has_moves=False`` elides the block-move
     writes (old-block SENTINEL fill + slot-owner refresh) for groups
-    where no row changed class.  Returns ``(dst, wgt, slot_rows,
-    counts)`` with ``counts`` the merged live length per row.
+    where no row changed class — then ``slot_rows`` is read-only and
+    passes through untouched (never donated, never copied: the caller's
+    array object survives, which is what makes per-buffer COW free for
+    non-moving updates).  Returns ``(dst, wgt, slot_rows, counts)`` with
+    ``counts`` the merged live length per row.
     """
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
-    return _jit_apply(int(width), backend, interpret, donate, bool(has_moves))(
+    out = _jit_apply(int(width), backend, interpret, donate, bool(has_moves))(
         dst, wgt, slot_rows,
         old_starts, old_caps, new_starts, new_caps, degs, row_ids,
         b_dst, b_wgt, b_del,
     )
+    if has_moves:
+        return out
+    d, w, counts = out
+    return d, w, slot_rows, counts

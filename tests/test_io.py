@@ -24,9 +24,9 @@ def test_mtx_pattern_symmetric(tmp_path):
         "%%MatrixMarket matrix coordinate pattern symmetric\n"
         "% a comment line\n4 4 3\n2 1\n3 1\n4 3\n"
     )
-    p = str(tmp_path / "s.mtx")
-    open(p, "w").write(body)
-    c = mtx.load_mtx(p)
+    p = tmp_path / "s.mtx"
+    p.write_text(body)
+    c = mtx.load_mtx(str(p))
     assert c.n == 4 and c.m == 6
     assert c.to_edge_sets() == [{1, 2}, {0}, {0, 3}, {2}]
 
@@ -36,9 +36,9 @@ def test_mtx_scientific_weights(tmp_path):
         "%%MatrixMarket matrix coordinate real general\n"
         "3 3 2\n1 2 1.5e-2\n3 1 -2.25E+1\n"
     )
-    p = str(tmp_path / "e.mtx")
-    open(p, "w").write(body)
-    c = mtx.load_mtx(p)
+    p = tmp_path / "e.mtx"
+    p.write_text(body)
+    c = mtx.load_mtx(str(p))
     np.testing.assert_allclose(
         sorted(np.asarray(c.wgt).tolist()), [-22.5, 0.015], rtol=1e-6
     )
