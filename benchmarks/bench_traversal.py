@@ -2,12 +2,17 @@
 plus the beyond-paper MXU path (BSR SpMM reverse walk, interpret-validated
 on CPU; its roofline terms live in the dry-run tables).
 
-For DiGraph two rows are emitted per update kind: the seed full-capacity
-gather+segment_sum path (``digraph_flat``) and the fused slot_walk prefix
-engine that ``DiGraph.reverse_walk`` now dispatches to (``digraph``) —
-their ratio is the headline of the slot_walk PR.  ``occupancy`` records
-the live-slot fraction of the arena prefix at walk time (post-compaction
-for the slot_walk row).
+Every representation now walks through the universal walk-image layer
+(DESIGN.md §11), so the table compares image layouts, not engines.  For
+DiGraph two rows are emitted per update kind: the seed full-capacity
+gather+segment_sum path (``digraph_flat``) and the walk-image engine
+(``digraph``) — their ratio is the headline of the slot_walk PR.
+``occupancy`` records each representation's live-fraction (live edges /
+allocated image slots) read off its walk image, making the paper's
+occupancy story comparable across the whole table.  All rows warm
+uniformly through ``common.timeit_prepared`` (jit compilation and the
+one-time image build land in the untimed warmup for every
+representation, not just digraph).
 """
 from __future__ import annotations
 
@@ -45,13 +50,15 @@ def run(graph: str = "social_small"):
                 nv = g.n_max_vertex() + 1
                 occ0 = f"{g.live_fraction:.3f}"
 
-                def walk_flat():
+                def walk_flat(_):
                     v = traversal.reverse_walk_flat(
                         g.dst, g.slot_rows, STEPS, nv
                     )
                     np.asarray(v)
 
-                t_flat = common.timeit(walk_flat, repeats=3)
+                t_flat = common.timeit_prepared(
+                    lambda: None, walk_flat, repeats=5, reduce="min"
+                )
                 rows.append(
                     {
                         "name": f"walk{STEPS}/{kind}/{graph}/digraph_flat",
@@ -61,12 +68,17 @@ def run(graph: str = "social_small"):
                     }
                 )
 
-            def walk():
-                v = g.reverse_walk(STEPS)
-                np.asarray(v)
+            def walk(_):
+                np.asarray(g.reverse_walk(STEPS))
 
-            t = common.timeit(walk, repeats=3)
-            occ = f"{g.live_fraction:.3f}" if hasattr(g, "live_fraction") else ""
+            # uniform warmup: the untimed pass builds the walk image and
+            # compiles the step programs for EVERY representation.  The
+            # min-of-5 estimator keeps the --compare gate stable against
+            # the container's bimodal CPU throttling.
+            t = common.timeit_prepared(
+                lambda: None, walk, repeats=5, reduce="min"
+            )
+            occ = f"{g.walk_occupancy():.3f}"
             rows.append(
                 {
                     "name": f"walk{STEPS}/{kind}/{graph}/{rep_name}",

@@ -3,8 +3,15 @@ Prints ``name,us_per_call,...`` CSV per benchmark; ``--json PATH``
 additionally writes the structured rows (suite -> [row dicts]) so
 ``BENCH_*.json`` trajectory files can accumulate across PRs.
 
+``--compare BASELINE.json`` diffs this run's per-row timing columns
+against a checked-in trajectory file (loaded BEFORE ``--json``
+overwrites it) and exits non-zero when any ``digraph`` row regresses by
+more than ``REGRESSION_FACTOR`` — the smoke-gate guard for the paper's
+headline representation.
+
 Usage: PYTHONPATH=src python -m benchmarks.run \
-    [--only load|clone|update|traversal|stream|alloc] [--json PATH]
+    [--only load|clone|update|traversal|stream|alloc] [--json PATH] \
+    [--compare BASELINE.json]
 """
 from __future__ import annotations
 
@@ -13,6 +20,66 @@ import json
 import sys
 import time
 
+#: A digraph row slower than baseline by more than this fails --compare.
+REGRESSION_FACTOR = 1.3
+#: Row columns holding the comparable per-row timing (first match wins).
+_TIME_KEYS = ("us_per_call", "us_per_round", "ms_per_call")
+
+
+def _row_time(row: dict):
+    for k in _TIME_KEYS:
+        if k in row:
+            try:
+                return float(row[k])
+            except (TypeError, ValueError):
+                return None
+    return None
+
+
+def compare_results(
+    results: dict, baseline: dict, *, factor: float = REGRESSION_FACTOR
+) -> list[str]:
+    """Diff per-row timings vs a baseline; return regression messages.
+
+    Rows are matched by their ``name`` field across all suites present
+    in BOTH runs.  Only rows whose representation component (the last
+    ``/``-separated token) is exactly ``digraph`` gate the run — the
+    comparison ratios of the *other* representations are the measured
+    result, not an invariant, and ``digraph_flat`` is the seed baseline
+    row kept for reference.
+    """
+    base_rows = {
+        r["name"]: r
+        for rows in baseline.values()
+        if isinstance(rows, list)
+        for r in rows
+        if isinstance(r, dict) and "name" in r
+    }
+    failures: list[str] = []
+    for suite, rows in results.items():
+        for row in rows:
+            name = row.get("name")
+            old = base_rows.get(name)
+            if old is None:
+                continue
+            t_new, t_old = _row_time(row), _row_time(old)
+            if t_new is None or t_old is None or t_old <= 0:
+                continue
+            ratio = t_new / t_old
+            gate = name.rsplit("/", 1)[-1] == "digraph"
+            tag = "FAIL" if gate and ratio > factor else "ok"
+            print(
+                f"# compare {tag}: {name} {t_old:.1f} -> {t_new:.1f} "
+                f"({ratio:.2f}x)",
+                file=sys.stderr,
+            )
+            if gate and ratio > factor:
+                failures.append(
+                    f"{name}: {t_old:.1f} -> {t_new:.1f} ({ratio:.2f}x > "
+                    f"{factor}x)"
+                )
+    return failures
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -20,6 +87,11 @@ def main() -> None:
     ap.add_argument(
         "--json", default=None, metavar="PATH",
         help="also write results as JSON: {suite: [row, ...]}",
+    )
+    ap.add_argument(
+        "--compare", default=None, metavar="BASELINE",
+        help="diff per-row timings against a BENCH_*.json baseline and "
+        f"fail on >{REGRESSION_FACTOR}x regression of any digraph row",
     )
     args = ap.parse_args()
     from . import (
@@ -46,6 +118,20 @@ def main() -> None:
         # without truncating an existing trajectory file mid-failure
         with open(args.json, "a"):
             pass
+    baseline = None
+    if args.compare:
+        # load the baseline up front: --json may overwrite the same file.
+        # A missing/empty baseline (fresh checkout — note the --json
+        # writability touch above may have just created a 0-byte file)
+        # skips the gate instead of crashing: the first run seeds it.
+        try:
+            with open(args.compare) as fh:
+                baseline = json.load(fh)
+        except (FileNotFoundError, json.JSONDecodeError):
+            print(
+                f"# no usable baseline at {args.compare}; skipping compare",
+                file=sys.stderr,
+            )
 
     t0 = time.time()
     results: dict[str, list] = {}
@@ -54,11 +140,31 @@ def main() -> None:
             continue
         print(f"# === {name} ===", flush=True)
         results[name] = fn()
-    if args.json:
-        with open(args.json, "w") as fh:
-            json.dump(results, fh, indent=1, default=str)
-        print(f"# wrote {args.json}", file=sys.stderr)
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    # compare BEFORE --json may overwrite the same file: a failed gate
+    # must leave the checked-in baseline intact, or the next run would
+    # silently ratchet the regression in by comparing against it.
+    failures: list[str] = []
+    if baseline is not None:
+        failures = compare_results(results, baseline)
+    if args.json:
+        if failures:
+            print(
+                f"# regression: NOT updating {args.json}", file=sys.stderr
+            )
+        else:
+            with open(args.json, "w") as fh:
+                json.dump(results, fh, indent=1, default=str)
+            print(f"# wrote {args.json}", file=sys.stderr)
+    if baseline is not None:
+        if failures:
+            print(
+                "# REGRESSION vs " + args.compare + ":\n#   "
+                + "\n#   ".join(failures),
+                file=sys.stderr,
+            )
+            sys.exit(1)
+        print(f"# compare vs {args.compare}: ok", file=sys.stderr)
 
 
 if __name__ == "__main__":

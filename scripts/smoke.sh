@@ -22,12 +22,17 @@ echo "== clone benchmark (paper Fig. 3 + COW detach) =="
 python -m benchmarks.run --only clone --json BENCH_clone.json
 
 echo "== traversal benchmark (social_small, 1e-2 update batches) =="
-python -m benchmarks.run --only traversal --json BENCH_traversal.json
+# --compare gates the smoke run: >1.3x regression of any digraph row vs
+# the checked-in trajectory fails (the baseline is read before --json
+# rewrites the file)
+python -m benchmarks.run --only traversal \
+  --compare BENCH_traversal.json --json BENCH_traversal.json
 
 echo "== update benchmark (web_small, Figs. 5-8) =="
 python -m benchmarks.run --only update --json BENCH_update.json
 
 echo "== stream benchmark (web_small, interleaved mixed batches) =="
-python -m benchmarks.run --only stream --json BENCH_stream.json
+python -m benchmarks.run --only stream \
+  --compare BENCH_stream.json --json BENCH_stream.json
 
 echo "== BENCH_{load,clone,traversal,update,stream}.json written =="

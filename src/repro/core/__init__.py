@@ -7,7 +7,7 @@ Representations (DESIGN.md §3):
   ChunkedGraph — Aspen-analogue append-only pages, O(1) snapshots
   Vector2D     — naive per-vertex host arrays (Fig. 1 strawman)
 """
-from . import alloc, arena, bitset, traversal, updates, util  # noqa: F401
+from . import alloc, arena, bitset, traversal, updates, util, walk_image  # noqa: F401
 from .chunked import ChunkedGraph  # noqa: F401
 from .coo import SortedCOO  # noqa: F401
 from .csr import CSR, from_coo, from_dense  # noqa: F401
@@ -16,6 +16,7 @@ from .edgebatch import EdgeBatch, from_arrays, random_deletions, random_insertio
 from .lazy import LazyCSR  # noqa: F401
 from .updates import UpdatePlan, plan_update  # noqa: F401
 from .vector2d import Vector2D  # noqa: F401
+from .walk_image import WalkImage  # noqa: F401
 
 #: Representation registry used by benchmarks/tests; ordering mirrors the
 #: paper's comparison tables.

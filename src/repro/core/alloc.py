@@ -32,6 +32,19 @@ def next_pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
+def pow2_with_headroom(total: int) -> int:
+    """Pow-2 capacity >= ``total`` with at least 25% bump headroom.
+
+    The walk-image build paths size their buffers with this so grown
+    rows can relocate to bump blocks a while before a rebuild; keeping
+    the policy here means every image layout shares one rebuild cadence.
+    """
+    cap = next_pow2(max(int(total), 2))
+    if cap * 4 < total * 5:  # < 25% headroom: take the next class
+        cap *= 2
+    return cap
+
+
 def allocation_size(nbytes: int) -> int:
     """Paper Alg 11, allocationSize(): size class in bytes for a request.
 

@@ -17,12 +17,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import alloc, csr as csr_mod, edgebatch, traversal, updates, util
+from . import alloc, csr as csr_mod, edgebatch, updates, util, walk_image
 
 SENTINEL = util.SENTINEL
 PAGE = 64  # edges per page (Aspen chunks are ~dozens of ints)
@@ -105,6 +106,11 @@ class ChunkedGraph:
     # shared with a snapshot.  Page writes detach the page pool; growing
     # the pool concatenates into fresh buffers and unseals for free.
     _sealed: set = dataclasses.field(default_factory=set)
+    # cached walk image (DESIGN.md §11): the flat page gather, patched
+    # incrementally instead of being reconstructed on every walk.
+    _image: Optional[walk_image.WalkImage] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     _PAYLOAD = ("pages_dst", "pages_wgt", "page_owner")
 
@@ -255,6 +261,8 @@ class ChunkedGraph:
             self.degrees[r] = cnts
             total_dm += dm
         self.m += total_dm
+        if self._image is not None:
+            self._image.queue(plan)  # the flat walk view patches lazily
         return total_dm
 
     def add_edges(self, batch: edgebatch.EdgeBatch, *, inplace: bool = True):
@@ -286,6 +294,7 @@ class ChunkedGraph:
             page_table=[ids for ids in self.page_table],
             degrees=self.degrees.copy(),
             _sealed=set(self._PAYLOAD),
+            _image=None,  # images are handle-private (patched in place)
         )
 
     def clone(self) -> "ChunkedGraph":
@@ -295,6 +304,7 @@ class ChunkedGraph:
             page_table=[ids.copy() for ids in self.page_table],
             degrees=self.degrees.copy(),
             _sealed=set(),
+            _image=None,
             **dict(zip(self._PAYLOAD, copies)),
         )
 
@@ -329,28 +339,78 @@ class ChunkedGraph:
             dedup=False,
         )
 
-    def reverse_walk(self, steps: int) -> jnp.ndarray:
-        # liveness is version-local (superseded pages stay in the pool for
-        # older snapshots), so the walk view gathers THIS version's pages.
-        lens = np.array([ids.shape[0] for ids in self.page_table[: self.n]])
-        if lens.sum() == 0:
-            return jnp.zeros((self.n,), jnp.float32)
+    def to_walk_image(self) -> walk_image.WalkImage:
+        """Cached walk image: one flat gather of THIS version's pages.
+
+        Liveness is version-local (superseded pages stay in the pool for
+        older snapshots), so the build gathers the current page_table
+        into a packed buffer whose blocks are the rows' page runs —
+        PAGE-quantized slack that the patch engine then maintains
+        incrementally, so repeat walks and update/walk streams never
+        reconstruct the flat view again.
+        """
+        img = self._image
+        if img is not None and img.flush():
+            return img
+        self._image = img = self._build_image()
+        return img
+
+    def _build_image(self) -> walk_image.WalkImage:
+        lens = np.array(
+            [ids.shape[0] for ids in self.page_table[: self.n]], np.int64
+        )
+        total_pages = int(lens.sum())
+        if total_pages == 0:
+            return walk_image.WalkImage.from_blocks(
+                jnp.full((2,), SENTINEL, jnp.int32),
+                jnp.zeros((2,), jnp.float32),
+                jnp.full((2,), self.n, jnp.int32),
+                np.full(max(self.n, 1), -1, np.int64),
+                np.zeros(max(self.n, 1), np.int64),
+                np.zeros(max(self.n, 1), np.int64),
+                self.n, 0, 0,
+            )
         live = np.concatenate(
             [ids for ids in self.page_table[: self.n] if ids.shape[0]]
         )
-        owners = np.repeat(
+        bump = total_pages * PAGE
+        cap_pages = alloc.pow2_with_headroom(total_pages)
+        live_p = np.full(cap_pages, -1, np.int64)
+        live_p[:total_pages] = live
+        own_p = np.full(cap_pages, self.n, np.int32)
+        own_p[:total_pages] = np.repeat(
             np.arange(self.n, dtype=np.int32), lens
         )
-        cap = alloc.next_pow2(live.shape[0])
-        live_p = np.full(cap, -1, np.int64)
-        live_p[: live.shape[0]] = live
-        own_p = np.full(cap, self.cap_v, np.int32)
-        own_p[: owners.shape[0]] = owners
-        pages = self.pages_dst[jnp.clip(jnp.asarray(live_p), 0, self.p_cap - 1)]
-        pages = jnp.where(jnp.asarray(live_p)[:, None] >= 0, pages, SENTINEL)
-        flat_d = pages.reshape(-1)
-        rows = jnp.repeat(jnp.asarray(own_p), PAGE)
-        return traversal.reverse_walk_flat(flat_d, rows, steps, self.n)
+        ids_d = jnp.asarray(live_p)
+        pages_d = jnp.where(
+            ids_d[:, None] >= 0,
+            self.pages_dst[jnp.clip(ids_d, 0, self.p_cap - 1)],
+            SENTINEL,
+        )
+        pages_w = jnp.where(
+            ids_d[:, None] >= 0,
+            self.pages_wgt[jnp.clip(ids_d, 0, self.p_cap - 1)],
+            0.0,
+        )
+        csum = np.cumsum(lens)
+        starts = np.where(lens > 0, (csum - lens) * PAGE, -1)
+        return walk_image.WalkImage.from_blocks(
+            pages_d.reshape(-1),
+            pages_w.reshape(-1),
+            jnp.repeat(jnp.asarray(own_p), PAGE),
+            starts,
+            lens * PAGE,
+            self.degrees[: self.n].copy(),
+            self.n, bump, int(self.m),
+        )
+
+    def walk_occupancy(self) -> float:
+        return self.to_walk_image().occupancy
+
+    def reverse_walk(
+        self, steps: int, *, visits0: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        return self.to_walk_image().walk(steps, visits0=visits0)
 
     def to_edge_sets(self) -> list[set[int]]:
         return self.to_csr().to_edge_sets()

@@ -11,12 +11,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import alloc, csr as csr_mod, edgebatch, traversal, updates, util
+from . import alloc, csr as csr_mod, edgebatch, updates, util, walk_image
 
 SENTINEL = util.SENTINEL
 
@@ -67,6 +68,11 @@ class SortedCOO:
     wgt: jnp.ndarray
     n: int
     m: int
+    # cached walk image (DESIGN.md §11), migrated to the successor
+    # instance on apply() so update/walk streams never rebuild it
+    _image: Optional[walk_image.WalkImage] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def capacity(self) -> int:
@@ -108,7 +114,15 @@ class SortedCOO:
             ins.src, ins.dst, ins.wgt,
         )
         m = int(m)
-        return SortedCOO(s, d, w, n, m), m - self.m
+        g = SortedCOO(s, d, w, n, m)
+        # the successor inherits the walk image + queues the plan on it;
+        # this handle's arrays are rebuilt anyway (cuGraph semantics), so
+        # it rebuilds its image lazily if walked again.
+        img, self._image = self._image, None
+        if img is not None:
+            img.queue(plan)
+            g._image = img
+        return g, m - self.m
 
     # -- export / queries -------------------------------------------------
     def clone(self) -> "SortedCOO":
@@ -117,7 +131,7 @@ class SortedCOO:
         )
 
     def snapshot(self) -> "SortedCOO":
-        return dataclasses.replace(self)
+        return dataclasses.replace(self, _image=None)
 
     def to_csr(self) -> csr_mod.CSR:
         s = np.asarray(self.src)[: self.m]
@@ -125,8 +139,30 @@ class SortedCOO:
         w = np.asarray(self.wgt)[: self.m]
         return csr_mod.from_coo(s, d, w, n=self.n, dedup=False)
 
-    def reverse_walk(self, steps: int) -> jnp.ndarray:
-        return traversal.reverse_walk_coo(self.src, self.dst, steps, self.n)
+    def to_walk_image(self) -> walk_image.WalkImage:
+        """Cached walk image: patched per queued plan, rebuilt on demand.
+
+        The (src, dst)-sorted buffer is already CSR-ordered, so the
+        build reads offsets off one host ``searchsorted`` and reuses the
+        ingest engine's slack-padded arena fill.
+        """
+        img = self._image
+        if img is not None and img.flush():
+            return img
+        s = np.asarray(self.src)[: self.m].astype(np.int64)
+        offsets = np.searchsorted(s, np.arange(self.n + 1, dtype=np.int64))
+        self._image = img = walk_image.WalkImage.from_csr_arrays(
+            offsets, self.dst, self.wgt, self.n
+        )
+        return img
+
+    def walk_occupancy(self) -> float:
+        return self.to_walk_image().occupancy
+
+    def reverse_walk(
+        self, steps: int, *, visits0: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        return self.to_walk_image().walk(steps, visits0=visits0)
 
     def to_edge_sets(self) -> list[set[int]]:
         return self.to_csr().to_edge_sets()

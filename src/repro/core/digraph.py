@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import alloc, arena, csr as csr_mod, edgebatch, updates, util
+from . import alloc, arena, csr as csr_mod, edgebatch, updates, util, walk_image
 from ..kernels.csr_build import ops as _cb_ops
 from ..kernels.slot_update import ops as _su_ops
 
@@ -122,7 +122,7 @@ class DiGraph:
     _csr_cache: Optional[csr_mod.CSR] = dataclasses.field(
         default=None, repr=False, compare=False
     )
-    _blocks_cache: Optional[tuple] = dataclasses.field(
+    _image: Optional[walk_image.WalkImage] = dataclasses.field(
         default=None, repr=False, compare=False
     )
 
@@ -265,7 +265,7 @@ class DiGraph:
 
     def _invalidate_derived(self) -> None:
         self._csr_cache = None
-        self._blocks_cache = None
+        self._image = None
 
     # ------------------------------------------------------------------
     # the paper's core ops
@@ -315,15 +315,12 @@ class DiGraph:
             s, d, _ = plan.insert_arrays()
             self.add_vertices(np.concatenate([s, d]))
 
-        # shared out-of-range filter: delete-only runs aimed at unseen rows
-        sel = np.nonzero(plan.rows_in_range(self.cap_v))[0]
-        deg_old = self.degrees[plan.rows[sel]]
-        ins_count = plan.ins_count[sel]
-        act = (deg_old > 0) | (ins_count > 0)  # rows with any effect
-        sel, deg_old, ins_count = sel[act], deg_old[act], ins_count[act]
+        # shared dirty-row export: drops out-of-range rows and inert runs
+        sel, rows, deg_old, ins_count = plan.active_rows(
+            self.degrees, self.cap_v
+        )
         if sel.shape[0] == 0:
             return 0
-        rows = plan.rows[sel]
         old_caps = self.capacities[rows]
         old_starts = self.starts[rows]
 
@@ -382,9 +379,6 @@ class DiGraph:
         use_scatter = on_tpu or (
             self.cap_e > _REBUILD_MAX_CAP and touched * 10 < self.cap_e
         )
-        wclass = np.maximum(
-            updates.next_pow2_vec(new_caps), _su_ops.width_floor()
-        )
         net = 0
         has_moves = bool(grow.any())
         # per-buffer COW: dst/wgt are always written; the owner map only
@@ -396,22 +390,10 @@ class DiGraph:
         deferred: list = []  # (gsel, device counts) — synced once at the end
         patch_base = np.zeros(rows.shape[0], np.int64)
         base = 0
-        for wv in np.unique(wclass):
-            gsel = np.nonzero(wclass == wv)[0]
+        for wv, gsel, a_pad, pad1, bd, bw, bl in plan.width_groups(
+            sel, new_caps, _su_ops.width_floor()
+        ):
             n = gsel.shape[0]
-            # floors keep the (width, A, K) jit-shape lattice coarse, so a
-            # stream of varying batches stops compiling after a few rounds
-            a_pad = max(alloc.next_pow2(n), 16)
-
-            def pad1(a, fill, dtype=np.int32):
-                out = np.full(a_pad, fill, dtype)
-                out[:n] = a
-                return out
-
-            # the group's own run width: short runs shouldn't pay a hub
-            # row's padding (K floored at 4 for jit-shape coarseness)
-            k = max(alloc.next_pow2(int(plan.run_count[sel[gsel]].max())), 4)
-            bd, bw, bl = plan.run_tiles(sel[gsel], k, a_pad)
             if use_scatter:
                 self.dst, self.wgt, self.slot_rows, counts = _su_ops.slot_update(
                     self.dst,
@@ -607,6 +589,7 @@ class DiGraph:
             layout=self.layout.clone(),
             stats=dataclasses.replace(self.stats),
             _sealed={"dst", "wgt", "slot_rows"},
+            _image=None,  # the image aliases THIS handle's host metadata
         )
 
     def to_csr(self) -> csr_mod.CSR:
@@ -638,6 +621,27 @@ class DiGraph:
             m=total,
         )
 
+    def to_walk_image(self) -> walk_image.WalkImage:
+        """The canonical traversal image (DESIGN.md §11) — zero-cost here.
+
+        The arena *is* the image: the wrap shares the device payload and
+        host block metadata (``shared=True``), so building it moves no
+        data.  The rep's own update engine keeps the buffers current;
+        any mutation drops the cached wrap via ``_invalidate_derived``.
+        """
+        if self._image is None:
+            nv = self.n_max_vertex() + 1
+            self._image = walk_image.WalkImage.from_blocks(
+                self.dst, self.wgt, self.slot_rows,
+                self.starts, self.capacities, self.degrees,
+                nv, int(self.layout.bump), int(self.m), shared=True,
+            )
+        return self._image
+
+    def walk_occupancy(self) -> float:
+        """Live-edge fraction of the walk image's slot prefix."""
+        return self.to_walk_image().occupancy
+
     def reverse_walk(
         self,
         steps: int,
@@ -645,50 +649,20 @@ class DiGraph:
         backend: str = "auto",
         auto_compact: bool = True,
         interpret: bool = False,
+        visits0: Optional[jnp.ndarray] = None,
     ) -> jnp.ndarray:
-        """Paper Alg 13 via the fused slot_walk tile engine (DESIGN.md §6).
+        """Paper Alg 13 via the walk-image layer (DESIGN.md §6/§11).
 
-        Only the arena's bump prefix (pow-2 rounded) is walked, and when
+        Only the arena's bump prefix (quantized) is walked, and when
         dead slots dominate after heavy deletions the blocks are first
         compacted so traversal tiles stay dense (``auto_compact``).
+        ``visits0`` [B, V] batches B walks through one fused step loop.
         """
-        from . import traversal
-
         if auto_compact:
             self.maybe_compact()
-        # quantize the prefix bound so the jit cache stays bounded (<= 64
-        # shapes per buffer capacity) without pow-2's up-to-2x overshoot.
-        q = max(self.cap_e // 64, 128)
-        edges_hi = min(-(-max(int(self.layout.bump), 1) // q) * q, self.cap_e)
-        nv = self.n_max_vertex() + 1
-        # block intervals feed only the off-TPU scatter-free path
-        use_blocks = backend == "xla" or (
-            backend == "auto" and jax.default_backend() != "tpu"
+        return self.to_walk_image().walk(
+            steps, backend=backend, interpret=interpret, visits0=visits0
         )
-        block_lo, block_hi = self._walk_blocks(nv) if use_blocks else (None, None)
-        return traversal.reverse_walk_slotted(
-            self.dst,
-            self.slot_rows,
-            steps,
-            nv,
-            edges_hi=edges_hi,
-            backend=backend,
-            block_lo=block_lo,
-            block_hi=block_hi,
-            interpret=interpret,
-        )
-
-    def _walk_blocks(self, nv: int):
-        """Per-vertex [lo, hi) slot intervals, memoized until mutation."""
-        if self._blocks_cache is None or self._blocks_cache[0] != nv:
-            starts = self.starts[:nv]
-            has_block = starts >= 0
-            lo = np.where(has_block, starts, 0).astype(np.int32)
-            hi = np.where(has_block, starts + self.degrees[:nv], 0).astype(
-                np.int32
-            )
-            self._blocks_cache = (nv, jnp.asarray(lo), jnp.asarray(hi))
-        return self._blocks_cache[1], self._blocks_cache[2]
 
     def n_max_vertex(self) -> int:
         nz = np.nonzero(self.exists)[0]

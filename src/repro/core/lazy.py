@@ -16,12 +16,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import alloc, csr as csr_mod, edgebatch, traversal, updates, util
+from . import alloc, csr as csr_mod, edgebatch, updates, util, walk_image
 
 SENTINEL = util.SENTINEL
 
@@ -110,6 +111,11 @@ class LazyCSR:
     # only the masks, pending appends only the ring — the (large) base
     # arrays are never mutated in place and therefore never copied.
     _sealed: set = dataclasses.field(default_factory=set)
+    # cached walk image (DESIGN.md §11): patched per applied plan, so
+    # walks skip assemble() entirely — consolidation only serves to_csr.
+    _image: Optional[walk_image.WalkImage] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     #: every device buffer participating in snapshot sharing
     _PAYLOAD = (
@@ -181,6 +187,8 @@ class LazyCSR:
         if plan.n_ins:
             dm += g._append_pending(plan.insert_batch())
         g.dirty = True
+        if g._image is not None:
+            g._image.queue(plan)  # zombies + pending splice into the image
         return g, dm
 
     def _mark_deletes(self, s: np.ndarray, d: np.ndarray) -> int:
@@ -271,6 +279,7 @@ class LazyCSR:
             self,
             offsets=self.offsets.copy(),
             _sealed=set(),
+            _image=None,  # images are handle-private (patched in place)
             **dict(zip(self._PAYLOAD, copies)),
         )
 
@@ -282,7 +291,10 @@ class LazyCSR:
         """
         self._sealed = set(self._PAYLOAD)
         return dataclasses.replace(
-            self, offsets=self.offsets.copy(), _sealed=set(self._PAYLOAD)
+            self,
+            offsets=self.offsets.copy(),
+            _sealed=set(self._PAYLOAD),
+            _image=None,  # images are handle-private (patched in place)
         )
 
     def to_csr(self) -> csr_mod.CSR:
@@ -292,11 +304,29 @@ class LazyCSR:
         w = np.asarray(self.base_wgt)[: self.m]
         return csr_mod.from_coo(s, d, w, n=self.n, dedup=False)
 
-    def reverse_walk(self, steps: int) -> jnp.ndarray:
+    def to_walk_image(self) -> walk_image.WalkImage:
+        """Cached walk image: zombie masking and pending-run splicing ride
+        the generic patch engine, so a *dirty* LazyCSR walks without
+        paying assemble() — the GraphBLAS consolidation only remains on
+        the export path (``to_csr``).  The build itself consolidates
+        once so the base arrays are CSR-ordered.
+        """
+        img = self._image
+        if img is not None and img.flush():
+            return img
         self.assemble()
-        return traversal.reverse_walk_coo(
-            self.base_rows, self.base_dst, steps, self.n
+        self._image = img = walk_image.WalkImage.from_csr_arrays(
+            self.offsets, self.base_dst, self.base_wgt, self.n
         )
+        return img
+
+    def walk_occupancy(self) -> float:
+        return self.to_walk_image().occupancy
+
+    def reverse_walk(
+        self, steps: int, *, visits0: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        return self.to_walk_image().walk(steps, visits0=visits0)
 
     def to_edge_sets(self) -> list[set[int]]:
         return self.to_csr().to_edge_sets()

@@ -6,6 +6,11 @@ FULL slot-buffer capacity, re-masking every dead SENTINEL lane per step);
 ``reverse_walk_slotted`` is the optimized path through the fused
 ``kernels/slot_walk`` tile engine (DESIGN.md §6), which only walks the
 arena's live prefix and uses the MXU one-hot-rank reduction on TPU.
+``reverse_walk_image`` walks a canonical ``core.walk_image.WalkImage``
+(DESIGN.md §11) — the representation-independent entry every structure
+now lowers to; the per-representation ``reverse_walk_coo`` /
+``reverse_walk_csr`` slow paths are retired in its favour (the flat
+baseline is kept as the benchmarked seed reference).
 float32 counts: 42 steps on large graphs overflow int; the paper benchmarks
 wall-time, not values.
 """
@@ -92,51 +97,33 @@ def reverse_walk_slotted(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "num_vertices"))
-def reverse_walk_csr(
-    offsets: jnp.ndarray,
-    dst: jnp.ndarray,
+def reverse_walk_image(
+    image,
     steps: int,
-    num_vertices: int,
+    *,
+    backend: str = "auto",
     normalize: bool = False,
+    interpret: bool = False,
+    visits0: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """Reverse walk over a compact CSR."""
-    rows = util.expand_rows(offsets, dst.shape[0])
-    visits = jnp.ones((num_vertices,), jnp.float32)
+    """Reverse walk over a canonical walk image (DESIGN.md §11).
 
-    def body(visits, _):
-        vals = visits[dst]
-        nxt = jax.ops.segment_sum(vals, rows, num_segments=num_vertices)
-        if normalize:
-            nxt = nxt / jnp.maximum(jnp.max(nxt), 1.0)
-        return nxt, None
+    Every representation's ``reverse_walk`` lowers to this: the image
+    carries the packed buffers, quantized prefix bound and per-vertex
+    block intervals, so all five structures share one traversal engine
+    (and its warm jit shapes).  ``visits0`` [B, V] batches B walks
+    through the same fused step loop.
+    """
+    from ..kernels.slot_walk import ops as _slot_ops  # lazy: avoid import cycle
 
-    visits, _ = jax.lax.scan(body, visits, None, length=steps)
-    return visits
-
-
-@functools.partial(jax.jit, static_argnames=("steps", "num_vertices"))
-def reverse_walk_coo(
-    src: jnp.ndarray,
-    dst: jnp.ndarray,
-    steps: int,
-    num_vertices: int,
-) -> jnp.ndarray:
-    """Reverse walk over a (src,dst)-sorted COO with SENTINEL padding."""
-    valid = src != SENTINEL
-    rows = jnp.where(valid, src, num_vertices).astype(jnp.int32)
-    safe_dst = jnp.where(valid, dst, 0)
-    visits = jnp.ones((num_vertices,), jnp.float32)
-
-    def body(visits, _):
-        vals = jnp.where(valid, visits[safe_dst], 0.0)
-        nxt = jax.ops.segment_sum(vals, rows, num_segments=num_vertices + 1)[
-            :num_vertices
-        ]
-        return nxt, None
-
-    visits, _ = jax.lax.scan(body, visits, None, length=steps)
-    return visits
+    return _slot_ops.slot_walk_image(
+        image,
+        steps,
+        backend=backend,
+        normalize=normalize,
+        interpret=interpret,
+        visits0=visits0,
+    )
 
 
 def reverse_walk_dense_oracle(adj, steps: int):

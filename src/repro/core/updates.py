@@ -149,6 +149,57 @@ class UpdatePlan:
         return self._del_batch
 
     # -- shared row filtering (all representations) ----------------------
+    def active_rows(self, degrees: np.ndarray, cap_v: int):
+        """Dirty-row export: the plan rows that can affect a structure.
+
+        Given the consumer's per-vertex ``degrees`` (and ``cap_v`` vertex
+        slots), drops out-of-range rows and inert runs (delete-only runs
+        at empty rows), returning ``(sel, rows, deg_old, ins_count)``
+        aligned on the surviving rows.  ``sel`` indexes back into the
+        plan's run structure (``run_tiles(sel[...], ...)``).  This is the
+        shared head of every patch loop — the DiGraph arena update and
+        the walk-image maintenance engine both start here.
+        """
+        sel = np.nonzero(self.rows_in_range(cap_v))[0]
+        deg_old = degrees[self.rows[sel]]
+        ins_count = self.ins_count[sel]
+        act = (deg_old > 0) | (ins_count > 0)
+        sel = sel[act]
+        return sel, self.rows[sel], deg_old[act], ins_count[act]
+
+    def width_groups(self, sel: np.ndarray, new_caps: np.ndarray, floor: int):
+        """Iterate the plan rows ``sel`` by pow-2 width class.
+
+        The operand layout of one fused ``kernels/slot_update`` dispatch
+        per group, shared by every patch loop (DiGraph's arena update
+        and the walk-image maintenance engine) so the jit-shape lattice
+        — width class floored at the backend's, row-count pad ``a_pad``
+        (pow-2, floor 16), run width ``k`` (pow-2 of the group's longest
+        run, floor 4) — has a single definition.  Yields
+        ``(width, gsel, a_pad, pad1, b_dst, b_wgt, b_del)`` with
+        ``gsel`` indexing into ``sel``/``new_caps`` and ``pad1`` the
+        group's [A]-operand padder.
+        """
+        wclass = np.maximum(next_pow2_vec(new_caps), floor)
+        for wv in np.unique(wclass):
+            gsel = np.nonzero(wclass == wv)[0]
+            n = gsel.shape[0]
+            # floors keep the (width, A, K) jit-shape lattice coarse, so
+            # a stream of varying batches stops compiling after a few
+            # rounds
+            a_pad = max(alloc.next_pow2(n), 16)
+
+            def pad1(a, fill, dtype=np.int32, *, _n=n, _a=a_pad):
+                out = np.full(_a, fill, dtype)
+                out[:_n] = a
+                return out
+
+            # the group's own run width: short runs shouldn't pay a hub
+            # row's padding (K floored at 4 for jit-shape coarseness)
+            k = max(alloc.next_pow2(int(self.run_count[sel[gsel]].max())), 4)
+            bd, bw, bl = self.run_tiles(sel[gsel], k, a_pad)
+            yield int(wv), gsel, a_pad, pad1, bd, bw, bl
+
     def rows_in_range(self, cap_v: int) -> np.ndarray:
         """Mask of plan rows a graph with ``cap_v`` vertex slots can touch.
 

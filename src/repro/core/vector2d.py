@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from . import csr as csr_mod, edgebatch, traversal, updates
+from . import csr as csr_mod, edgebatch, updates, walk_image
 
 
 class Vector2D:
@@ -19,6 +19,9 @@ class Vector2D:
         self.wrows = wrows
         self.n = n
         self.m = m
+        # cached walk image (DESIGN.md §11): even the strawman's walks ride
+        # the shared engine — its *update* path stays allocation-heavy.
+        self._image: walk_image.WalkImage | None = None
 
     @classmethod
     def from_csr(cls, c: csr_mod.CSR) -> "Vector2D":
@@ -81,6 +84,8 @@ class Vector2D:
             dm += new.shape[0] - g.rows[u].shape[0]
             g.rows[u], g.wrows[u] = new, neww
         g.m += dm
+        if g._image is not None:
+            g._image.queue(plan)
         return g, dm
 
     def clone(self) -> "Vector2D":
@@ -104,11 +109,32 @@ class Vector2D:
         wgt = np.concatenate(self.wrows)
         return csr_mod.from_coo(src, dst, wgt, n=self.n, dedup=False)
 
-    def reverse_walk(self, steps: int):
-        # ragged host traversal: flatten once per call (the locality penalty
-        # of non-contiguous storage), then iterate with np.add.at.
-        c = self.to_csr()
-        return traversal.reverse_walk_csr(c.offsets, c.dst, steps, c.n)
+    def to_walk_image(self) -> walk_image.WalkImage:
+        """Cached walk image: one ragged host flatten at build time (the
+        locality penalty of per-vertex arrays), then incrementally
+        patched — repeat walks never re-flatten the rows."""
+        img = self._image
+        if img is not None and img.flush():
+            return img
+        if self.m == 0:
+            offsets = np.zeros(self.n + 1, np.int64)
+            dst = np.empty(0, np.int32)
+            wgt = np.empty(0, np.float32)
+        else:
+            offsets = np.zeros(self.n + 1, np.int64)
+            np.cumsum([r.shape[0] for r in self.rows], out=offsets[1:])
+            dst = np.concatenate(self.rows).astype(np.int32)
+            wgt = np.concatenate(self.wrows).astype(np.float32)
+        self._image = img = walk_image.WalkImage.from_csr_arrays(
+            offsets, dst, wgt, self.n
+        )
+        return img
+
+    def walk_occupancy(self) -> float:
+        return self.to_walk_image().occupancy
+
+    def reverse_walk(self, steps: int, *, visits0=None):
+        return self.to_walk_image().walk(steps, visits0=visits0)
 
     def to_edge_sets(self) -> list[set[int]]:
         return [set(np.asarray(r).tolist()) for r in self.rows]

@@ -1,0 +1,326 @@
+"""WalkImage — the universal traversal-image layer (DESIGN.md §11).
+
+Every representation lowers to ONE canonical device traversal image: a
+packed edge buffer (``dst``/``wgt``/``rows``, SENTINEL on dead slots)
+plus per-vertex ``[lo, hi)`` block intervals — exactly the operand set
+the fused ``kernels/slot_walk`` engine consumes (§6).  The image is
+**incrementally maintained** under update streams instead of being
+re-materialized per walk:
+
+  * representations *queue* each applied ``UpdatePlan`` on their cached
+    image (``queue``), and the next walk *flushes* the queue by patching
+    touched rows in place (``flush`` → ``_patch_one``) through the same
+    fused ``kernels/slot_update`` merge the DiGraph arena uses — so an
+    interleaved update/walk stream pays O(batch) per round, never a full
+    image rebuild, and walks keep hitting warm jit shapes;
+  * rows are laid out in CP2AA slack-padded blocks (``alloc.edge_
+    capacities``); a row that outgrows its slack relocates to a fresh
+    block at the image's bump pointer inside the same fused dispatch;
+  * the patch path falls back to a full rebuild (returning ``False`` so
+    the owner drops its cache) only when the bump slack is exhausted,
+    the vertex set grows, or the queue got too deep to be worth
+    replaying (``MAX_PENDING``).
+
+``DiGraph`` is the degenerate case: its arena *is* the image, so
+``shared=True`` wraps the live buffers zero-copy and the rep's own
+update engine keeps them current (shared images never patch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import alloc, util
+
+SENTINEL = util.SENTINEL
+
+#: Queue depth beyond which replaying patches is judged worse than one
+#: rebuild (each pending plan costs a fused dispatch per width group).
+MAX_PENDING = 32
+#: Fraction of the BUILD-TIME occupancy below which a flush demands a
+#: rebuild instead of further patching — the image-level analogue of
+#: DiGraph's traversal-time compaction (§7): dead slots from relocated /
+#: deleted rows otherwise accumulate in the walked prefix forever.  The
+#: trigger is relative to the layout's own slack (ChunkedGraph's PAGE
+#: quantization builds at ~0.3 occupancy; rebuilding can never beat
+#: that), so it fires only when a rebuild would actually densify.
+COMPACT_THRESHOLD = 0.5
+#: Don't bother occupancy-rebuilding images smaller than this.
+COMPACT_MIN_SLOTS = 4 * 128
+
+#: Module-level maintenance counters; tests and benchmarks read these to
+#: prove walks do zero host image work (builds) between updates.
+STATS = {"builds": 0, "patches": 0, "rebuilds": 0}
+
+
+def stats_snapshot() -> dict:
+    return dict(STATS)
+
+
+@dataclasses.dataclass
+class WalkImage:
+    """Packed traversal image + host block geometry (one per owner rep)."""
+
+    # device payload
+    dst: jnp.ndarray   # int32 [cap_e], SENTINEL on dead slots
+    wgt: jnp.ndarray   # f32   [cap_e] (carried for the patch merges)
+    rows: jnp.ndarray  # int32 [cap_e] slot owner (stale allowed on dead)
+    # host block geometry (CP2AA classes)
+    starts: np.ndarray  # int64 [>= nv], -1 = no block
+    caps: np.ndarray    # int64 [>= nv]
+    degs: np.ndarray    # int64 [>= nv]
+    nv: int             # vertices the walk covers (visits length)
+    bump: int           # first never-allocated slot
+    live: int           # live edges in the image
+    #: True when dst/wgt/rows alias the owner's own arena (DiGraph):
+    #: zero-cost wrap, kept current by the rep — never patched here.
+    shared: bool = False
+    #: occupancy as built — the densest this layout can be; the compact
+    #: trigger fires relative to it (see COMPACT_THRESHOLD).
+    base_occupancy: float = 1.0
+    # device [lo, hi) interval cache + queued plans
+    _blocks: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _pending: list = dataclasses.field(
+        default_factory=list, repr=False, compare=False
+    )
+    #: set once the queue overflowed MAX_PENDING: the image can only be
+    #: rebuilt, so further plans are dropped instead of pinned in memory
+    _stale: bool = dataclasses.field(default=False, repr=False, compare=False)
+
+    # ------------------------------------------------------------------
+    @property
+    def cap_e(self) -> int:
+        return int(self.dst.shape[0])
+
+    @property
+    def occupancy(self) -> float:
+        """Live-edge fraction of the image's allocated slot prefix."""
+        return self.live / max(int(self.bump), 1)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_csr_arrays(cls, offsets, dst, wgt, nv: int, *,
+                        engine: str = "auto") -> "WalkImage":
+        """Build a slack-padded image from CSR-ordered edge arrays.
+
+        Reuses the ingest engine's ``arena_image`` fill (DESIGN.md §10):
+        CP2AA block placement on host, one fused fill + transfer for the
+        device payload.  ``cap_e`` keeps >= 25% bump headroom so grown
+        rows can relocate without an immediate rebuild.
+        """
+        from ..kernels.csr_build import ops as _cb_ops
+
+        o = np.asarray(offsets, np.int64)
+        nv = int(nv)
+        deg = np.diff(o)
+        m = int(o[-1]) if o.shape[0] else 0
+        caps = np.where(deg > 0, alloc.edge_capacities(deg), 0)
+        csum = np.cumsum(caps)
+        starts = np.where(caps > 0, csum - caps, -1)
+        total = int(csum[-1]) if caps.shape[0] else 0
+        cap_e = alloc.pow2_with_headroom(total)
+        w = wgt if wgt is not None else np.ones(m, np.float32)
+        # slice padded source buffers to the live prefix: the device
+        # arena_image path derives its edge count (and jit-cache key)
+        # from dst.shape[0], so SENTINEL tail capacity would be scattered
+        # for nothing on TPU
+        dst_d, wgt_d, rows_d = _cb_ops.arena_image(
+            o, dst[:m], w[:m], starts, caps, cap_e, nv,
+            total=total, engine=engine,
+        )
+        STATS["builds"] += 1
+        return cls(
+            dst=dst_d, wgt=wgt_d, rows=rows_d,
+            starts=starts.astype(np.int64), caps=caps.astype(np.int64),
+            degs=deg.astype(np.int64), nv=nv, bump=total, live=m,
+            base_occupancy=m / max(total, 1),
+        )
+
+    @classmethod
+    def from_blocks(cls, dst, wgt, rows, starts, caps, degs, nv: int,
+                    bump: int, live: int, *, shared: bool = False) -> "WalkImage":
+        """Wrap pre-blocked device buffers (DiGraph arena, page gathers)."""
+        STATS["builds"] += 1
+        return cls(
+            dst=dst, wgt=wgt, rows=rows,
+            starts=np.asarray(starts, np.int64),
+            caps=np.asarray(caps, np.int64),
+            degs=np.asarray(degs, np.int64),
+            nv=int(nv), bump=int(bump), live=int(live), shared=shared,
+            base_occupancy=int(live) / max(int(bump), 1),
+        )
+
+    # ------------------------------------------------------------------
+    # incremental maintenance
+    # ------------------------------------------------------------------
+    def queue(self, plan) -> None:
+        """Record an applied UpdatePlan; the next walk flushes it.
+
+        Past MAX_PENDING the image is only ever rebuilt, so the queue is
+        dropped and the image marked stale — an update-only stream must
+        not pin every plan's batch arrays in memory until someone walks.
+        """
+        if self.shared or self._stale:  # shared: the arena IS the image
+            return
+        self._pending.append(plan)
+        if len(self._pending) > MAX_PENDING:
+            self._pending.clear()
+            self._stale = True
+
+    def flush(self) -> bool:
+        """Patch all queued plans in; False = owner must rebuild."""
+        if self._stale:
+            STATS["rebuilds"] += 1
+            return False
+        if not self._pending:
+            return True
+        while self._pending:
+            if not self._patch_one(self._pending[0]):
+                STATS["rebuilds"] += 1
+                return False
+            self._pending.pop(0)
+        # occupancy-triggered compaction (§7, image-level): once dead
+        # slots dominate the walked prefix — relative to how dense this
+        # layout was as built — one rebuild beats every subsequent walk
+        # dragging them through the step loop.
+        if (
+            self.bump >= COMPACT_MIN_SLOTS
+            and self.occupancy < COMPACT_THRESHOLD * self.base_occupancy
+        ):
+            STATS["rebuilds"] += 1
+            return False
+        return True
+
+    def _patch_one(self, plan) -> bool:
+        """Apply one plan's per-row runs to the image in place.
+
+        Mirrors ``DiGraph._apply_impl``'s group loop against the image's
+        own geometry: one fused ``slot_update`` dispatch per pow-2 width
+        class (gather touched blocks, merge the sorted runs, scatter
+        back, grown rows landing in fresh bump blocks).  Returns False
+        when only a rebuild can represent the result (new vertices, or
+        a grown row with no bump slack left).
+        """
+        from ..kernels.slot_update import ops as _su_ops
+
+        if plan.n_ops == 0:
+            return True
+        if plan.max_insert_vertex() >= self.nv:
+            return False  # vertex growth changes the visits shape: rebuild
+        sel, rows, deg_old, ins_count = plan.active_rows(self.degs, self.nv)
+        if sel.shape[0] == 0:
+            return True
+        old_caps = self.caps[rows]
+        old_starts = self.starts[rows]
+        ub = deg_old + ins_count
+        grow = ub > old_caps
+        new_caps = old_caps.copy()
+        new_starts = old_starts.copy()
+        if grow.any():
+            need = alloc.edge_capacities(ub[grow])
+            if self.bump + int(need.sum()) > self.cap_e:
+                return False  # slack exhausted: rebuild repacks densely
+            g_idx = np.nonzero(grow)[0]
+            new_caps[g_idx] = need
+            new_starts[g_idx] = self.bump + (np.cumsum(need) - need)
+            self.bump += int(need.sum())
+
+        on_tpu = jax.default_backend() == "tpu"
+        backend = (
+            "pallas" if on_tpu and self.nv < _su_ops.PALLAS_MAX_ID else "xla"
+        )
+        net = 0
+        deferred = []
+        for wv, gsel, _a_pad, pad1, bd, bw, bl in plan.width_groups(
+            sel, new_caps, _su_ops.width_floor()
+        ):
+            self.dst, self.wgt, self.rows, counts = _su_ops.slot_update(
+                self.dst,
+                self.wgt,
+                self.rows,
+                pad1(old_starts[gsel], -1),
+                pad1(old_caps[gsel], 0),
+                pad1(new_starts[gsel], -1),
+                pad1(new_caps[gsel], 0),
+                pad1(deg_old[gsel], 0),
+                pad1(rows[gsel], self.nv),
+                bd,
+                bw,
+                bl,
+                width=int(wv),
+                backend=backend,
+                donate=True,
+                has_moves=bool(grow[gsel].any()),
+            )
+            deferred.append((gsel, counts))
+        for gsel, counts in deferred:
+            counts = np.asarray(counts, dtype=np.int64)[: gsel.shape[0]]
+            self.degs[rows[gsel]] = counts
+            net += int(counts.sum() - deg_old[gsel].sum())
+        if grow.any():
+            self.starts[rows] = new_starts
+            self.caps[rows] = new_caps
+        self.live += net
+        self._blocks = None
+        STATS["patches"] += 1
+        return True
+
+    # ------------------------------------------------------------------
+    # walking
+    # ------------------------------------------------------------------
+    def edges_hi(self) -> int:
+        """Bump prefix bound, quantized so jit shapes stay coarse (§6).
+
+        cap_e/8 granularity (<= 8 shapes per capacity): under update
+        streams the bump pointer only grows, and every quantum crossing
+        recompiles the walk scan — a coarse lattice trades <= 12.5% dead
+        pad slots for rounds of warm-shape walks between crossings.
+        """
+        q = max(self.cap_e // 8, 128)
+        return min(-(-max(int(self.bump), 1) // q) * q, self.cap_e)
+
+    def device_blocks(self):
+        """Device [lo, hi) interval arrays, memoized until the next patch."""
+        if self._blocks is None:
+            starts = self.starts[: self.nv]
+            has_block = starts >= 0
+            lo = np.where(has_block, starts, 0).astype(np.int32)
+            hi = np.where(
+                has_block, starts + self.degs[: self.nv], 0
+            ).astype(np.int32)
+            self._blocks = (jnp.asarray(lo), jnp.asarray(hi))
+        return self._blocks
+
+    def walk(
+        self,
+        steps: int,
+        *,
+        backend: str = "auto",
+        normalize: bool = False,
+        interpret: bool = False,
+        visits0: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        """k-step reverse walk over the image via the slot_walk engine.
+
+        ``visits0`` may be a ``[B, num_vertices]`` stack of initial visit
+        vectors — all B walks then ride the same fused step programs
+        (one-hot matmul batching on the Pallas backend).
+        """
+        from ..kernels.slot_walk import ops as _sw_ops
+
+        return _sw_ops.slot_walk_image(
+            self,
+            steps,
+            backend=backend,
+            normalize=normalize,
+            interpret=interpret,
+            visits0=visits0,
+        )

@@ -127,14 +127,63 @@ def _twosum(a, b):
     return s, (a - (s - bp)) + (b - bp)
 
 
+def _comp_combine(l, r):
+    s, e = _twosum(l[0], r[0])
+    return s, l[1] + r[1] + e
+
+
 def _comp_scan(x):
     """Compensated inclusive scan: returns (hi, lo) with hi+lo ≈ exact."""
+    return jax.lax.associative_scan(_comp_combine, (x, jnp.zeros_like(x)))
 
-    def combine(l, r):
-        s, e = _twosum(l[0], r[0])
-        return s, l[1] + r[1] + e
 
-    return jax.lax.associative_scan(combine, (x, jnp.zeros_like(x)))
+def _make_blocked_step(gidx_p, block_lo, block_hi, num_vertices: int):
+    """Build the scatter-free interval walk step (shared single/multi).
+
+    Each vertex's slots are one contiguous interval [block_lo, block_hi)
+    (§2 invariant) and dead slots gather 0.0, so a step reduces to
+    ``P[hi] - P[lo]`` over the running prefix sum of the gathered values
+    — gather + cumsum + a few [V] gathers, no scatter unit needed.
+    Rows without a block pass lo == hi == 0.
+
+    A naive global f32 cumsum loses the row sum to cancellation once the
+    total dwarfs it (err ~ ulp(total)).  The prefix is therefore kept in
+    two levels: a plain cumsum *within* each 128-slot tile (row-local
+    magnitudes) plus a TwoSum-compensated scan over the T tile totals,
+    and the difference is assembled per part so the large bases are
+    never rounded into the result.  The residual envelope is the
+    *intra-tile* partial, ~ulp(sum of one tile): on skewed social graphs
+    a hub row sharing its tile with ~1e10-magnitude partials can see
+    ~2e-4 relative error at high step counts (measured; fully
+    compensating or f64-ing the intra level costs 2-10x the whole step
+    — not worth it for a wall-time benchmark whose 42-step counts
+    saturate f32 by design).
+    """
+    t = gidx_p.shape[0]
+    e_pad = t * EB
+    lo = jnp.clip(block_lo, 0, e_pad).astype(jnp.int32)
+    hi = jnp.clip(block_hi, 0, e_pad).astype(jnp.int32)
+    # split each prefix position into (tile, offset); position e_pad folds
+    # onto the last tile's tail so the gather stays in range.
+    q_lo = jnp.minimum(lo // EB, t - 1)
+    q_hi = jnp.minimum(hi // EB, t - 1)
+    r_lo = lo - q_lo * EB
+    r_hi = hi - q_hi * EB
+    zero = jnp.zeros((1,), jnp.float32)
+    zcol = jnp.zeros((t, 1), jnp.float32)
+
+    def step(visits):  # [num_vertices] -> [num_vertices]
+        vals = jnp.concatenate([visits, zero])[gidx_p]   # [t, EB]; sink -> 0.0
+        intra = jnp.concatenate([zcol, jnp.cumsum(vals, axis=1)], axis=1)
+        bh, bl = _comp_scan(intra[:, -1])                # inclusive tile bases
+        bh = jnp.concatenate([zero, bh[:-1]])            # -> exclusive
+        bl = jnp.concatenate([zero, bl[:-1]])
+        intra_f = intra.reshape(-1)
+        ih = intra_f[q_hi * (EB + 1) + r_hi]
+        il = intra_f[q_lo * (EB + 1) + r_lo]
+        return (bh[q_hi] - bh[q_lo]) + ((ih - il) + (bl[q_hi] - bl[q_lo]))
+
+    return step
 
 
 @functools.partial(
@@ -153,49 +202,151 @@ def slot_walk_blocked(
 ) -> jnp.ndarray:
     """Scatter-free walk step via block-interval prefix sums.
 
-    Each vertex's slots are one contiguous interval [block_lo, block_hi)
-    (§2 invariant) and dead slots gather 0.0, so a step reduces to
-    ``P[hi] - P[lo]`` over the running prefix sum of the gathered values
-    — gather + cumsum + a few [V] gathers, no scatter unit needed.
-    Rows without a block pass lo == hi == 0.
-
-    A naive global f32 cumsum loses the row sum to cancellation once the
-    total dwarfs it (err ~ ulp(total)).  The prefix is therefore kept in
-    two levels: a plain cumsum *within* each 128-slot tile (row-local
-    magnitudes) plus a TwoSum-compensated scan over the T tile totals,
-    and the difference is assembled per part so the large bases are
-    never rounded into the result.
+    See ``_make_blocked_step`` for the formulation and the two-level
+    TwoSum compensation that keeps skewed-magnitude rows exact.
     """
     _, gidx_p = _prep(dst, slot_rows, num_vertices, edges_hi)
-    t = gidx_p.shape[0]
-    e_pad = t * EB
-    lo = jnp.clip(block_lo, 0, e_pad).astype(jnp.int32)
-    hi = jnp.clip(block_hi, 0, e_pad).astype(jnp.int32)
-    # split each prefix position into (tile, offset); position e_pad folds
-    # onto the last tile's tail so the gather stays in range.
-    q_lo = jnp.minimum(lo // EB, t - 1)
-    q_hi = jnp.minimum(hi // EB, t - 1)
-    r_lo = lo - q_lo * EB
-    r_hi = hi - q_hi * EB
-    zero = jnp.zeros((1,), jnp.float32)
-    zcol = jnp.zeros((t, 1), jnp.float32)
+    step = _make_blocked_step(gidx_p, block_lo, block_hi, num_vertices)
     visits = jnp.ones((num_vertices,), jnp.float32)
 
     def body(visits, _):
-        vals = jnp.concatenate([visits, zero])[gidx_p]   # [t, EB]; sink -> 0.0
-        intra = jnp.concatenate([zcol, jnp.cumsum(vals, axis=1)], axis=1)
-        bh, bl = _comp_scan(intra[:, -1])                # inclusive tile bases
-        bh = jnp.concatenate([zero, bh[:-1]])            # -> exclusive
-        bl = jnp.concatenate([zero, bl[:-1]])
-        intra_f = intra.reshape(-1)
-        ih = intra_f[q_hi * (EB + 1) + r_hi]
-        il = intra_f[q_lo * (EB + 1) + r_lo]
-        nxt = (bh[q_hi] - bh[q_lo]) + ((ih - il) + (bl[q_hi] - bl[q_lo]))
+        nxt = step(visits)
         if normalize:
             nxt = nxt / jnp.maximum(jnp.max(nxt), 1.0)
         return nxt, None
 
     visits, _ = jax.lax.scan(body, visits, None, length=steps)
+    return visits
+
+
+# ---------------------------------------------------------------------------
+# multi-walk batching: B visit vectors through the same step programs
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("steps", "num_vertices", "edges_hi", "normalize")
+)
+def slot_walk_multi_xla(
+    dst: jnp.ndarray,
+    slot_rows: jnp.ndarray,
+    visits0: jnp.ndarray,
+    steps: int,
+    num_vertices: int,
+    *,
+    edges_hi: int,
+    normalize: bool = False,
+) -> jnp.ndarray:
+    """Batched walk: ``visits0`` [B, V] -> [B, V], one fused step loop.
+
+    The gather broadcasts over the batch axis and the per-step
+    segment-sum runs once on the transposed [E, B] values, so B walks
+    cost one scan instead of B dispatch loops.
+    """
+    sink = num_vertices
+    rows_p, gidx_p = _prep(dst, slot_rows, num_vertices, edges_hi)
+    rows_f = rows_p.reshape(-1)
+    gidx_f = gidx_p.reshape(-1)
+    zcol = jnp.zeros((visits0.shape[0], 1), jnp.float32)
+
+    def body(visits, _):
+        vals = jnp.concatenate([visits, zcol], axis=1)[:, gidx_f]  # [B, E]
+        nxt = jax.ops.segment_sum(vals.T, rows_f, num_segments=sink + 1)[
+            :num_vertices
+        ].T
+        if normalize:
+            nxt = nxt / jnp.maximum(
+                jnp.max(nxt, axis=1, keepdims=True), 1.0
+            )
+        return nxt, None
+
+    visits, _ = jax.lax.scan(body, visits0, None, length=steps)
+    return visits
+
+
+@functools.partial(
+    jax.jit, static_argnames=("steps", "num_vertices", "edges_hi", "normalize")
+)
+def slot_walk_multi_blocked(
+    dst: jnp.ndarray,
+    slot_rows: jnp.ndarray,
+    block_lo: jnp.ndarray,
+    block_hi: jnp.ndarray,
+    visits0: jnp.ndarray,
+    steps: int,
+    num_vertices: int,
+    *,
+    edges_hi: int,
+    normalize: bool = False,
+) -> jnp.ndarray:
+    """Batched scatter-free prefix-sum walk: visits0 [B, V] -> [B, V].
+
+    The single-walk step (``_make_blocked_step``) is vmapped over the
+    batch axis inside one jitted scan — the interval index arithmetic is
+    shared, only the gathered values and prefix sums carry a batch dim.
+    """
+    _, gidx_p = _prep(dst, slot_rows, num_vertices, edges_hi)
+    step = _make_blocked_step(gidx_p, block_lo, block_hi, num_vertices)
+
+    def body(visits, _):
+        nxt = jax.vmap(step)(visits)
+        if normalize:
+            nxt = nxt / jnp.maximum(
+                jnp.max(nxt, axis=1, keepdims=True), 1.0
+            )
+        return nxt, None
+
+    visits, _ = jax.lax.scan(body, visits0, None, length=steps)
+    return visits
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("steps", "num_vertices", "edges_hi", "normalize", "interpret"),
+)
+def slot_walk_multi_pallas(
+    dst: jnp.ndarray,
+    slot_rows: jnp.ndarray,
+    visits0: jnp.ndarray,
+    steps: int,
+    num_vertices: int,
+    *,
+    edges_hi: int,
+    normalize: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batched Pallas walk: stack the B walks' tiles into one kernel call.
+
+    ``rows`` are identical per walk, so tiling them B times turns the
+    batch into B*T independent tiles of the SAME one-hot-rank kernel —
+    one ``pallas_call`` per step regardless of B.  The seam fold then
+    segments with a per-walk offset (walk b's rows live in segment ids
+    ``[b*(sink+1), (b+1)*(sink+1))``).
+    """
+    sink = num_vertices
+    rows_p, gidx_p = _prep(dst, slot_rows, num_vertices, edges_hi)
+    t = rows_p.shape[0]
+    b = visits0.shape[0]
+    rows_t = jnp.tile(rows_p, (b, 1))  # [B*T, EB]
+    zcol = jnp.zeros((b, 1), jnp.float32)
+    offs = jnp.repeat(
+        jnp.arange(b, dtype=jnp.int32) * (sink + 1), t
+    )[:, None]  # [B*T, 1]
+
+    def body(visits, _):
+        vals = jnp.concatenate([visits, zcol], axis=1)[:, gidx_p]  # [B,T,EB]
+        part, rank = _kernel.slot_walk_partials(
+            rows_t, vals.reshape(b * t, EB), sink=sink, interpret=interpret
+        )
+        ids = jnp.minimum(rank, sink) + offs
+        nxt = jax.ops.segment_sum(
+            part.reshape(-1), ids.reshape(-1), num_segments=b * (sink + 1)
+        ).reshape(b, sink + 1)[:, :num_vertices]
+        if normalize:
+            nxt = nxt / jnp.maximum(
+                jnp.max(nxt, axis=1, keepdims=True), 1.0
+            )
+        return nxt, None
+
+    visits, _ = jax.lax.scan(body, visits0, None, length=steps)
     return visits
 
 
@@ -211,6 +362,7 @@ def slot_walk(
     block_hi: jnp.ndarray | None = None,
     normalize: bool = False,
     interpret: bool = False,
+    visits0: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """k-step reverse walk over the slotted arena's live prefix.
 
@@ -220,13 +372,38 @@ def slot_walk(
     caller can supply per-vertex block intervals (``block_lo`` /
     ``block_hi``, int32 [num_vertices], lo == hi == 0 for blockless
     rows), the xla backend upgrades to the scatter-free prefix-sum
-    formulation.
+    formulation.  ``visits0`` switches to multi-walk batching: a
+    [B, num_vertices] f32 stack of initial visit vectors walks together
+    through one fused step loop, returning [B, num_vertices].
     """
     if edges_hi is None:
         edges_hi = dst.shape[0]
     edges_hi = min(int(edges_hi), dst.shape[0])
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if visits0 is not None:
+        if visits0.ndim != 2 or visits0.shape[1] != num_vertices:
+            raise ValueError(
+                "visits0 must be [num_walks, num_vertices], got "
+                f"{visits0.shape}"
+            )
+        visits0 = jnp.asarray(visits0, jnp.float32)
+        if backend == "pallas":
+            return slot_walk_multi_pallas(
+                dst, slot_rows, visits0, steps, num_vertices,
+                edges_hi=edges_hi, normalize=normalize, interpret=interpret,
+            )
+        if backend == "xla":
+            if block_lo is not None and block_hi is not None:
+                return slot_walk_multi_blocked(
+                    dst, slot_rows, block_lo, block_hi, visits0, steps,
+                    num_vertices, edges_hi=edges_hi, normalize=normalize,
+                )
+            return slot_walk_multi_xla(
+                dst, slot_rows, visits0, steps, num_vertices,
+                edges_hi=edges_hi, normalize=normalize,
+            )
+        raise ValueError(f"unknown slot_walk backend: {backend!r}")
     if backend == "pallas":
         return slot_walk_pallas(
             dst,
@@ -258,3 +435,39 @@ def slot_walk(
             normalize=normalize,
         )
     raise ValueError(f"unknown slot_walk backend: {backend!r}")
+
+
+def slot_walk_image(
+    image,
+    steps: int,
+    *,
+    backend: str = "auto",
+    normalize: bool = False,
+    interpret: bool = False,
+    visits0: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Image-input entry point: walk a ``core.walk_image.WalkImage``.
+
+    The image supplies the full operand set — packed buffers, quantized
+    prefix bound, per-vertex block intervals — so every representation's
+    walk lands on the same engine with the same jit-shape policy.  The
+    interval arrays only feed the off-TPU scatter-free path; the Pallas
+    backend reads just the packed buffers.
+    """
+    use_blocks = backend == "xla" or (
+        backend == "auto" and jax.default_backend() != "tpu"
+    )
+    block_lo, block_hi = image.device_blocks() if use_blocks else (None, None)
+    return slot_walk(
+        image.dst,
+        image.rows,
+        steps,
+        image.nv,
+        edges_hi=image.edges_hi(),
+        backend=backend,
+        block_lo=block_lo,
+        block_hi=block_hi,
+        normalize=normalize,
+        interpret=interpret,
+        visits0=visits0,
+    )

@@ -1,0 +1,330 @@
+"""Walk-image layer tests (DESIGN.md §11).
+
+Every representation lowers to one canonical traversal image; these
+tests pin the maintenance contract: back-to-back walks do ZERO host
+image work, applied plans patch the cached image in place (bit-parity
+with the dense oracle), and the patch path falls back to a rebuild
+exactly when it must (vertex growth, row outgrowing its slack with no
+bump headroom, queue overflow).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (
+    REPRESENTATIONS,
+    edgebatch,
+    from_coo,
+    traversal,
+    updates,
+    walk_image,
+)
+from repro.io import synthetic
+
+STEPS = 4
+REPS = list(REPRESENTATIONS.items())
+
+
+def _make_csr(n=200, m=1600, seed=7):
+    rng = np.random.default_rng(seed)
+    src, dst = synthetic.uniform_edges(rng, n, m)
+    return from_coo(src, dst, n=n), rng
+
+
+def _oracle(g, steps=STEPS):
+    return traversal.reverse_walk_dense_oracle(g.to_csr().to_dense(), steps)
+
+
+def _assert_walk(g, steps=STEPS):
+    exp = _oracle(g, steps)
+    got = np.asarray(g.reverse_walk(steps))
+    np.testing.assert_allclose(got[: exp.shape[0]], exp, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# back-to-back walks: the image is cached, the second walk is host-free
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,cls", REPS)
+def test_back_to_back_walk_zero_host_image_work(name, cls):
+    c, _ = _make_csr()
+    g = cls.from_csr(c)
+    g.reverse_walk(STEPS)  # builds + caches the image
+    img = g.to_walk_image()
+    before = walk_image.stats_snapshot()
+    v = np.asarray(g.reverse_walk(STEPS))
+    after = walk_image.stats_snapshot()
+    assert g.to_walk_image() is img, name
+    assert after["builds"] == before["builds"], name
+    assert after["patches"] == before["patches"], name
+    np.testing.assert_allclose(v, _oracle(g), rtol=1e-4)
+
+
+@pytest.mark.parametrize("name,cls", REPS)
+def test_update_patches_cached_image_in_place(name, cls):
+    c, rng = _make_csr()
+    g = cls.from_csr(c)
+    g.reverse_walk(STEPS)
+    img = g.to_walk_image()
+    plan = updates.plan_update(
+        inserts=edgebatch.random_insertions(rng, c.n, 60),
+        deletes=edgebatch.random_deletions(rng, c, 60),
+    )
+    g, _ = g.apply(plan)
+    before = walk_image.stats_snapshot()
+    _assert_walk(g)
+    after = walk_image.stats_snapshot()
+    if name == "digraph":
+        # the arena IS the image: the rep's own update engine keeps it
+        # current, and re-wrapping the live buffers is zero-cost
+        assert g.to_walk_image().shared
+        assert after["patches"] == before["patches"]
+    else:
+        assert g.to_walk_image() is img, name
+        assert after["patches"] == before["patches"] + 1, name
+        assert after["builds"] == before["builds"], name
+
+
+@pytest.mark.parametrize("name,cls", REPS)
+def test_walk_occupancy_reported_from_image(name, cls):
+    c, rng = _make_csr()
+    g = cls.from_csr(c)
+    occ0 = g.walk_occupancy()
+    assert 0.0 < occ0 <= 1.0
+    g, dm = g.remove_edges(edgebatch.random_deletions(rng, c, c.m // 2))
+    assert dm < 0 or dm > 0  # something happened
+    occ1 = g.walk_occupancy()
+    assert 0.0 <= occ1 <= 1.0
+    if name != "digraph":  # digraph may auto-compact back to dense
+        assert occ1 < occ0
+
+
+# ---------------------------------------------------------------------------
+# patch-vs-rebuild decision
+# ---------------------------------------------------------------------------
+def test_row_outgrows_slack_falls_back_to_rebuild():
+    c, rng = _make_csr(n=64, m=256)
+    g = REPRESENTATIONS["coo"].from_csr(c)
+    g.reverse_walk(STEPS)
+    img = g.to_walk_image()
+    # densify to the complete graph: every row outgrows its slack and the
+    # summed relocation demand necessarily exceeds the bump headroom
+    uu, vv = np.meshgrid(np.arange(64), np.arange(64))
+    ins = edgebatch.from_arrays(uu.reshape(-1), vv.reshape(-1))
+    before = walk_image.stats_snapshot()
+    g, _ = g.apply(updates.plan_update(inserts=ins))
+    _assert_walk(g)
+    after = walk_image.stats_snapshot()
+    assert after["rebuilds"] == before["rebuilds"] + 1
+    assert after["builds"] == before["builds"] + 1
+    assert g.to_walk_image() is not img
+
+
+def test_small_growth_patches_without_rebuild():
+    c, rng = _make_csr()
+    g = REPRESENTATIONS["lazy"].from_csr(c)
+    g.reverse_walk(STEPS)
+    img = g.to_walk_image()
+    # grow one existing row past its CP2AA class but well inside the
+    # image's bump headroom: must relocate the block, not rebuild
+    u = int(np.argmax(np.diff(np.asarray(c.offsets))))
+    deg = int(np.diff(np.asarray(c.offsets))[u])
+    ins = edgebatch.from_arrays(
+        np.full(2 * deg + 4, u, np.int64),
+        np.arange(2 * deg + 4, dtype=np.int64) % c.n,
+    )
+    before = walk_image.stats_snapshot()
+    g, _ = g.apply(updates.plan_update(inserts=ins))
+    _assert_walk(g)
+    after = walk_image.stats_snapshot()
+    assert after["rebuilds"] == before["rebuilds"]
+    assert after["patches"] == before["patches"] + 1
+    assert g.to_walk_image() is img
+
+
+def test_vertex_growth_rebuilds_image():
+    c, _ = _make_csr(n=50, m=300)
+    g = REPRESENTATIONS["chunked"].from_csr(c)
+    g.reverse_walk(STEPS)
+    ins = edgebatch.from_arrays(
+        np.array([3, 70], np.int64), np.array([70, 3], np.int64)
+    )
+    before = walk_image.stats_snapshot()
+    g, _ = g.apply(updates.plan_update(inserts=ins))
+    _assert_walk(g)
+    after = walk_image.stats_snapshot()
+    assert after["rebuilds"] == before["rebuilds"] + 1
+    assert g.to_walk_image().nv >= 71
+
+
+def test_queue_overflow_rebuilds_instead_of_replaying():
+    c, rng = _make_csr(n=64, m=256)
+    g = REPRESENTATIONS["vector2d"].from_csr(c)
+    g.reverse_walk(STEPS)
+    for _ in range(walk_image.MAX_PENDING + 1):
+        ins = edgebatch.random_insertions(rng, 64, 2)
+        g, _ = g.apply(updates.plan_update(inserts=ins))
+    before = walk_image.stats_snapshot()
+    _assert_walk(g)
+    after = walk_image.stats_snapshot()
+    assert after["rebuilds"] == before["rebuilds"] + 1
+    assert after["patches"] == before["patches"]
+
+
+def test_snapshot_gets_private_image():
+    c, rng = _make_csr()
+    for name, cls in REPS:
+        g = cls.from_csr(c)
+        g.reverse_walk(STEPS)
+        s = g.snapshot()
+        plan = updates.plan_update(
+            inserts=edgebatch.random_insertions(rng, c.n, 40)
+        )
+        g, _ = g.apply(plan)
+        # the snapshot must keep walking the PRE-update graph
+        np.testing.assert_allclose(
+            np.asarray(s.reverse_walk(STEPS)),
+            _oracle(s),
+            rtol=1e-4,
+            err_msg=name,
+        )
+        _assert_walk(g)
+
+
+# ---------------------------------------------------------------------------
+# multi-walk batching
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "backend,kw",
+    [("xla", {}), ("pallas", {"interpret": True}), ("auto", {})],
+)
+def test_multi_walk_matches_stacked_singles(backend, kw):
+    c, rng = _make_csr(n=96, m=700)
+    g = REPRESENTATIONS["digraph"].from_csr(c)
+    img = g.to_walk_image()
+    v0 = np.abs(rng.normal(size=(3, img.nv))).astype(np.float32)
+    a = (c.to_dense() != 0).astype(np.float64)[: img.nv, : img.nv]
+    exp = np.stack([np.linalg.matrix_power(a, STEPS) @ v for v in v0])
+    got = np.asarray(
+        img.walk(STEPS, backend=backend, visits0=jnp.asarray(v0), **kw)
+    )
+    np.testing.assert_allclose(got, exp, rtol=1e-4)
+
+
+def test_multi_walk_via_representation_entry():
+    c, rng = _make_csr(n=64, m=400)
+    for name, cls in REPS:
+        g = cls.from_csr(c)
+        nv = g.to_walk_image().nv
+        v0 = np.ones((2, nv), np.float32)
+        got = np.asarray(g.reverse_walk(STEPS, visits0=jnp.asarray(v0)))
+        single = np.asarray(g.reverse_walk(STEPS))
+        np.testing.assert_allclose(got[0], single, rtol=1e-4, err_msg=name)
+        np.testing.assert_allclose(got[1], single, rtol=1e-4, err_msg=name)
+
+
+def test_multi_walk_rejects_bad_shape():
+    c, _ = _make_csr(n=32, m=100)
+    img = REPRESENTATIONS["digraph"].from_csr(c).to_walk_image()
+    with pytest.raises(ValueError):
+        img.walk(STEPS, visits0=jnp.ones((img.nv,), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# interleaved update/walk property sweep (hypothesis)
+# ---------------------------------------------------------------------------
+def test_interleaved_streams_match_dense_oracle_all_reps():
+    pytest.importorskip(
+        "hypothesis", reason="optional dev dependency — pip install repro[dev]"
+    )
+    from hypothesis import given, settings, strategies as st
+
+    op = st.tuples(
+        st.integers(0, 2),  # 0 = mixed update, 1 = walk, 2 = hub insert
+        st.integers(0, 1 << 30),
+    )
+
+    @settings(deadline=None, max_examples=12)
+    @given(st.lists(op, min_size=2, max_size=6), st.integers(0, 1 << 30))
+    def prop(ops, seed):
+        rng = np.random.default_rng(seed)
+        src, dst = synthetic.uniform_edges(rng, 24, 96)
+        c = from_coo(src, dst, n=24)
+        graphs = {name: cls.from_csr(c) for name, cls in REPS}
+        for g in graphs.values():
+            g.reverse_walk(2)  # everyone starts with a cached image
+        for kind, opseed in ops:
+            oprng = np.random.default_rng(opseed)
+            if kind == 1:
+                ref = None
+                for name, g in graphs.items():
+                    got = np.asarray(g.reverse_walk(3))
+                    exp = _oracle(g, 3)
+                    np.testing.assert_allclose(
+                        got[: exp.shape[0]], exp, rtol=1e-4, err_msg=name
+                    )
+                    if ref is None:
+                        ref = got
+                continue
+            if kind == 2:
+                u = int(oprng.integers(0, 24))
+                k = int(oprng.integers(8, 40))  # may outgrow the row's slack
+                ins = edgebatch.from_arrays(
+                    np.full(k, u, np.int64),
+                    oprng.integers(0, 24, size=k).astype(np.int64),
+                )
+                plan = updates.plan_update(inserts=ins)
+            else:
+                half = int(oprng.integers(1, 8))
+                any_csr = graphs["digraph"].to_csr()
+                plan = updates.plan_update(
+                    inserts=edgebatch.random_insertions(oprng, 24, half),
+                    deletes=edgebatch.random_deletions(oprng, any_csr, half)
+                    if any_csr.m
+                    else None,
+                )
+            for name in graphs:
+                graphs[name], _ = graphs[name].apply(plan)
+        # final sweep: every rep, walk + edge content agree
+        exp_sets = graphs["digraph"].to_edge_sets()
+        for name, g in graphs.items():
+            got = np.asarray(g.reverse_walk(3))
+            exp = _oracle(g, 3)
+            np.testing.assert_allclose(
+                got[: exp.shape[0]], exp, rtol=1e-4, err_msg=name
+            )
+            sets = g.to_edge_sets()
+            n_min = min(len(sets), len(exp_sets))
+            assert [set(x) for x in sets[:n_min]] == [
+                set(x) for x in exp_sets[:n_min]
+            ], name
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# benchmark --compare gate (pure row-diff logic)
+# ---------------------------------------------------------------------------
+def test_compare_results_gates_digraph_only():
+    from benchmarks.run import compare_results
+
+    base = {
+        "traversal": [
+            {"name": "walk/x/digraph", "us_per_call": 100.0},
+            {"name": "walk/x/digraph_flat", "us_per_call": 100.0},
+            {"name": "walk/x/coo", "us_per_call": 100.0},
+        ]
+    }
+    fast = {
+        "traversal": [
+            {"name": "walk/x/digraph", "us_per_call": 120.0},
+            {"name": "walk/x/digraph_flat", "us_per_call": 900.0},
+            {"name": "walk/x/coo", "us_per_call": 900.0},
+        ]
+    }
+    assert compare_results(fast, base) == []
+    slow = {"traversal": [{"name": "walk/x/digraph", "us_per_call": 131.0}]}
+    fails = compare_results(slow, base)
+    assert len(fails) == 1 and "walk/x/digraph" in fails[0]
+    # unknown rows and missing columns are ignored, not errors
+    odd = {"s": [{"name": "new/row", "us_per_call": 5.0}, {"name": "walk/x/digraph"}]}
+    assert compare_results(odd, base) == []
