@@ -19,7 +19,11 @@ patches the cached image in O(batch) instead of re-materializing a flat
 view per walk; the ``img_*`` derived fields prove it: ``img_builds``
 counts full image (re)builds across the measured rounds and ``walk2_us``
 times a back-to-back second walk whose host image work is zero
-(``img_builds2 = img_patches2 = 0``).
+(``img_builds2 = img_patches2 = 0``).  Since the fused flush→walk
+dispatch (§12) the row additionally records ``round_dispatches`` — the
+image-engine device dispatches the walk half of a steady-state round
+issues, which must be exactly 1 (the queued plan's patch groups and the
+step scan run in the SAME jitted program; smoke.sh gates on it).
 """
 from __future__ import annotations
 
@@ -91,12 +95,29 @@ def run(graph: str = "web_small", frac: float = 1e-2):
         jax.block_until_ready(g.reverse_walk(WALK_STEPS))
         walk2 = time.perf_counter() - t0
         stats2b = walk_image.stats_snapshot()
+        # fused flush→walk proof (DESIGN.md §12): replay two more rounds
+        # and count the image-engine device dispatches the walk half of a
+        # steady-state round issues — the fused flush→walk path must
+        # lower apply-then-walk to ONE dispatch.  min of two rounds, so a
+        # scheduled occupancy rebuild landing on a proof round (legal,
+        # occasional) doesn't flap the smoke gate.
+        dispatches = []
+        for ins, dele in batches[:2]:
+            plan = updates.plan_update(inserts=ins, deletes=dele)
+            g, _ = g.apply(plan)
+            g.block_on()
+            d0 = walk_image.stats_snapshot()["dispatches"]
+            jax.block_until_ready(g.reverse_walk(WALK_STEPS))
+            dispatches.append(walk_image.stats_snapshot()["dispatches"] - d0)
         n_meas = ROUNDS
         per_round = (t_upd + t_walk) / n_meas
         rows.append(
             {
                 "name": f"stream/{graph}/f{frac:g}/{rep_name}",
                 "us_per_round": round(per_round * 1e6, 1),
+                "round_dispatches": min(dispatches),
+                "img_builds2": stats2b["builds"] - stats2a["builds"],
+                "img_patches2": stats2b["patches"] - stats2a["patches"],
                 "derived": f"update_us={t_upd/n_meas*1e6:.1f} "
                 f"walk_us={t_walk/n_meas*1e6:.1f} "
                 f"walk2_us={walk2*1e6:.1f} "
@@ -108,7 +129,9 @@ def run(graph: str = "web_small", frac: float = 1e-2):
                 f"rounds={n_meas}",
             }
         )
-    return common.emit(rows, ["name", "us_per_round", "derived"])
+    return common.emit(
+        rows, ["name", "us_per_round", "round_dispatches", "derived"]
+    )
 
 
 if __name__ == "__main__":

@@ -20,10 +20,17 @@ import json
 import sys
 import time
 
-#: A digraph row slower than baseline by more than this fails --compare.
+#: A gated row slower than baseline by more than this fails --compare.
 REGRESSION_FACTOR = 1.3
 #: Row columns holding the comparable per-row timing (first match wins).
 _TIME_KEYS = ("us_per_call", "us_per_round", "ms_per_call")
+#: Representation rows that gate the traversal/stream suites.  Elsewhere
+#: only the paper's headline ``digraph`` rows gate — the other reps'
+#: update/load costs are the measured result, not an invariant, but on
+#: the walk suites every representation rides the same image engine, so
+#: a regression in any of them is an engine regression.
+GATED_REPS = ("digraph", "coo", "lazy", "chunked", "vector2d")
+FULLY_GATED_SUITES = ("traversal", "stream")
 
 
 def _row_time(row: dict):
@@ -42,11 +49,13 @@ def compare_results(
     """Diff per-row timings vs a baseline; return regression messages.
 
     Rows are matched by their ``name`` field across all suites present
-    in BOTH runs.  Only rows whose representation component (the last
-    ``/``-separated token) is exactly ``digraph`` gate the run — the
-    comparison ratios of the *other* representations are the measured
-    result, not an invariant, and ``digraph_flat`` is the seed baseline
-    row kept for reference.
+    in BOTH runs.  On the traversal and stream suites every one of the
+    five representations' rows gates the run (all five ride the shared
+    walk-image engine); on the other suites only the rows whose
+    representation component (the last ``/``-separated token) is exactly
+    ``digraph`` gate — the comparison ratios of the other
+    representations there are the measured result, not an invariant.
+    ``digraph_flat`` is the seed baseline row, never gated.
     """
     base_rows = {
         r["name"]: r
@@ -66,7 +75,10 @@ def compare_results(
             if t_new is None or t_old is None or t_old <= 0:
                 continue
             ratio = t_new / t_old
-            gate = name.rsplit("/", 1)[-1] == "digraph"
+            rep = name.rsplit("/", 1)[-1]
+            gate = rep == "digraph" or (
+                suite in FULLY_GATED_SUITES and rep in GATED_REPS
+            )
             tag = "FAIL" if gate and ratio > factor else "ok"
             print(
                 f"# compare {tag}: {name} {t_old:.1f} -> {t_new:.1f} "

@@ -35,4 +35,24 @@ echo "== stream benchmark (web_small, interleaved mixed batches) =="
 python -m benchmarks.run --only stream \
   --compare BENCH_stream.json --json BENCH_stream.json
 
+echo "== stream proof fields (fused flush→walk, DESIGN.md §12) =="
+# steady-state invariants recorded into BENCH_stream.json: the walk half
+# of a stream round must be ONE device dispatch (flush fused into the
+# walk program), and a back-to-back second walk must do zero host image
+# work (no builds, no patches).
+python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_stream.json"))["stream"]
+bad = [
+    r["name"]
+    for r in rows
+    if r.get("img_builds2", 0) != 0
+    or r.get("img_patches2", 0) != 0
+    or r.get("round_dispatches", 1) != 1
+]
+if bad:
+    sys.exit(f"flush→walk proof regressed (dispatches != 1 or walk2 host work): {bad}")
+print("# stream proof ok: 1-dispatch flush→walk, host-free second walk")
+EOF
+
 echo "== BENCH_{load,clone,traversal,update,stream}.json written =="

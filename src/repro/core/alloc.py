@@ -32,15 +32,20 @@ def next_pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
-def pow2_with_headroom(total: int) -> int:
-    """Pow-2 capacity >= ``total`` with at least 25% bump headroom.
+def pow2_with_headroom(total: int, min_frac: float = 0.25) -> int:
+    """Pow-2 capacity >= ``total`` with at least ``min_frac`` bump headroom.
 
     The walk-image build paths size their buffers with this so grown
     rows can relocate to bump blocks a while before a rebuild; keeping
     the policy here means every image layout shares one rebuild cadence.
+    Dense (slack-free) images pass ``min_frac=1.0``: with zero in-block
+    slack EVERY insert-touched row relocates, so they need a deeper bump
+    reserve — walks only process the (quantized) bump prefix, so the
+    extra capacity costs memory, not step bytes.
     """
-    cap = next_pow2(max(int(total), 2))
-    if cap * 4 < total * 5:  # < 25% headroom: take the next class
+    total = int(total)
+    cap = next_pow2(max(total, 2))
+    while cap < total * (1 + min_frac):
         cap *= 2
     return cap
 

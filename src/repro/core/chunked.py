@@ -86,6 +86,20 @@ def _jit_write_pages(npages: int, donate: bool = False):
     return jax.jit(fn, donate_argnums=(0, 1, 2) if donate else ())
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_dense_gather():
+    """One device gather strips PAGE tails: pool -> packed live edges."""
+
+    def fn(pages_d, pages_w, gidx):
+        ok = gidx >= 0
+        safe = jnp.clip(gidx, 0, pages_d.size - 1)
+        d = jnp.where(ok, pages_d.reshape(-1)[safe], SENTINEL)
+        w = jnp.where(ok, pages_w.reshape(-1)[safe], 0.0)
+        return d, w
+
+    return jax.jit(fn)
+
+
 def _pad2(a: np.ndarray, rows: int, fill) -> np.ndarray:
     out = np.full((rows,) + a.shape[1:], fill, a.dtype)
     out[: a.shape[0]] = a
@@ -370,6 +384,14 @@ class ChunkedGraph:
                 np.zeros(max(self.n, 1), np.int64),
                 self.n, 0, 0,
             )
+        degs = self.degrees[: self.n]
+        m = int(degs.sum())
+        # dense image compaction (DESIGN.md §12): the PAGE-quantized
+        # gather builds at ~0.3 occupancy on typical degree mixes, and a
+        # 42-step walk re-reads every dead lane per step — when the
+        # slack dominates, strip it and walk live edges only.
+        if m and m < walk_image.DENSE_THRESHOLD * total_pages * PAGE:
+            return self._build_dense_image(lens, degs, m)
         live = np.concatenate(
             [ids for ids in self.page_table[: self.n] if ids.shape[0]]
         )
@@ -404,13 +426,46 @@ class ChunkedGraph:
             self.n, bump, int(self.m),
         )
 
+    def _build_dense_image(self, lens, degs, m: int) -> walk_image.WalkImage:
+        """Dense walk image: PAGE tails stripped, blocks = exact degrees.
+
+        Host builds one per-live-edge gather index into the flat page
+        pool (edge j of row u lives at ``page_ids[j // PAGE] * PAGE +
+        j % PAGE``); one device gather packs the pool into a CSR-ordered
+        buffer with occupancy 1.0 — the patch engine then maintains it
+        incrementally, relocating grown rows into the 100% bump reserve
+        dense layouts take (every insert-touched row relocates).
+        """
+        live = np.concatenate(
+            [ids for ids in self.page_table[: self.n] if ids.shape[0]]
+        )
+        dcs = np.cumsum(degs)
+        e_local = np.arange(m, dtype=np.int64) - np.repeat(dcs - degs, degs)
+        page_rank = np.repeat(np.cumsum(lens) - lens, degs) + e_local // PAGE
+        gidx = live[page_rank] * PAGE + e_local % PAGE
+        cap_e = alloc.pow2_with_headroom(m, 1.0)  # dense: deep bump reserve
+        gidx_p = np.full(cap_e, -1, np.int64)
+        gidx_p[:m] = gidx
+        rows = np.full(cap_e, self.n, np.int32)
+        rows[:m] = np.repeat(np.arange(self.n, dtype=np.int32), degs)
+        dst_d, wgt_d = _jit_dense_gather()(
+            self.pages_dst, self.pages_wgt, gidx_p
+        )
+        starts = np.where(degs > 0, dcs - degs, -1)
+        return walk_image.WalkImage.from_blocks(
+            dst_d, wgt_d, jnp.asarray(rows),
+            starts, degs.copy(), degs.copy(),
+            self.n, m, m,
+        )
+
     def walk_occupancy(self) -> float:
         return self.to_walk_image().occupancy
 
     def reverse_walk(
         self, steps: int, *, visits0: Optional[jnp.ndarray] = None
     ) -> jnp.ndarray:
-        return self.to_walk_image().walk(steps, visits0=visits0)
+        # fused flush→walk: one dispatch per stream round (§12)
+        return walk_image.reverse_walk_via_image(self, steps, visits0=visits0)
 
     def to_edge_sets(self) -> list[set[int]]:
         return self.to_csr().to_edge_sets()

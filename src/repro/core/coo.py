@@ -24,39 +24,74 @@ SENTINEL = util.SENTINEL
 
 @functools.lru_cache(maxsize=None)
 def _jit_apply(out_cap: int):
-    """Mixed delete+insert rebuild: mark deletes, sort-merge inserts.
+    """Mixed delete+insert rebuild as a GALLOPING merge (DESIGN.md §12).
 
-    Graph entries found in the (sorted) delete set blank to SENTINEL;
-    insert entries concatenate *ahead* of the graph so the stable
-    dedup-keep-first pass implements weight upsert.  The plan guarantees
-    one op per key, so deletes and inserts never fight.
+    The base is (src, dst)-lexsorted with a SENTINEL tail and both batch
+    halves arrive sorted from the UpdatePlan, so the merged order is
+    fully determined by binary-search ranks plus prefix counts — no
+    O((M+B) log(M+B)) re-sort of the whole edge list per update:
+
+      * deletes:  one windowed binary search marks dead base slots,
+      * upserts:  inserts whose key exists overwrite the weight in place,
+      * placement: output slot ``o`` holds the r-th surviving base entry
+        (r = o − #new-inserts-before-o) or the matching new insert —
+        both resolved with searchsorted over prefix-count arrays, then
+        materialized by ONE gather per output array.  Only the [B]-sized
+        batch is ever sorted (by output slot).
+
+    The plan guarantees one op per key, so deletes and inserts never
+    fight and all new-insert keys are distinct.
     """
 
     def fn(gs, gd, gw, ds, dd, is_, id_, iw):
-        _, found = util.searchsorted_2d(ds, dd, gs, gd)
-        gs = jnp.where(found, SENTINEL, gs)
-        gd = jnp.where(found, SENTINEL, gd)
-        s = jnp.concatenate([is_, gs])
-        d = jnp.concatenate([id_, gd])
-        w = jnp.concatenate([iw, gw])
-        order = util.lexsort2(s, d)
-        s, d, w = s[order], d[order], w[order]
-        dup = jnp.concatenate(
-            [jnp.array([False]), (s[1:] == s[:-1]) & (d[1:] == d[:-1])]
+        cap = gs.shape[0]
+        glive = gs != SENTINEL
+        # -- deletes: which base slots die (SENTINEL pads only ever
+        #    match SENTINEL base slots, excluded by glive)
+        _, hit = util.searchsorted_2d(ds, dd, gs, gd)
+        keep = glive & ~hit
+        # -- inserts: upserts (key present) vs genuinely new keys
+        ilive = is_ != SENTINEL
+        pos_i, found_i = util.searchsorted_2d(gs, gd, is_, id_)
+        is_new = ilive & ~found_i
+        up_idx = jnp.where(ilive & found_i, pos_i, cap)
+        gw = gw.at[up_idx].set(iw, mode="drop")  # weight upsert in place
+        # -- merge ranks
+        kcum = jnp.cumsum(keep.astype(jnp.int32))          # inclusive keeps
+        n_keep = kcum[-1]
+        kcum0 = jnp.concatenate([jnp.zeros((1,), jnp.int32), kcum])
+        ins_rank = jnp.cumsum(is_new.astype(jnp.int32)) - is_new.astype(
+            jnp.int32
         )
-        s = jnp.where(dup, SENTINEL, s)
-        d = jnp.where(dup, SENTINEL, d)
-        order = util.lexsort2(s, d)
-        s, d, w = s[order], d[order], w[order]
-        m = jnp.sum(s != SENTINEL).astype(jnp.int32)
-        pad = out_cap - s.shape[0]
-        if pad > 0:
-            s = jnp.concatenate([s, jnp.full((pad,), SENTINEL, s.dtype)])
-            d = jnp.concatenate([d, jnp.full((pad,), SENTINEL, d.dtype)])
-            w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
-        else:
-            s, d, w = s[:out_cap], d[:out_cap], w[:out_cap]
-        return s, d, w, m
+        # output slot of each new insert: surviving base entries before
+        # its key + new inserts before it in the (sorted) batch
+        o_i = jnp.where(is_new, kcum0[pos_i] + ins_rank, out_cap)
+        order = jnp.argsort(o_i)                           # [B] tiny sort
+        srt = o_i[order]
+        s_srt, d_srt, w_srt = is_[order], id_[order], iw[order]
+        # -- materialize: one gather per output array
+        o = jnp.arange(out_cap, dtype=jnp.int32)
+        idx = jnp.searchsorted(srt, o, side="left").astype(jnp.int32)
+        safe_i = jnp.clip(idx, 0, srt.shape[0] - 1)
+        from_ins = srt[safe_i] == o
+        r = o - idx                                        # surviving-base rank
+        j = jnp.searchsorted(kcum, r + 1, side="left").astype(jnp.int32)
+        safe_j = jnp.clip(j, 0, cap - 1)
+        g_ok = r < n_keep
+        out_s = jnp.where(
+            from_ins, s_srt[safe_i],
+            jnp.where(g_ok, gs[safe_j], SENTINEL),
+        )
+        out_d = jnp.where(
+            from_ins, d_srt[safe_i],
+            jnp.where(g_ok, gd[safe_j], SENTINEL),
+        )
+        out_w = jnp.where(
+            from_ins, w_srt[safe_i],
+            jnp.where(g_ok, gw[safe_j], 0.0),
+        )
+        m = n_keep + jnp.sum(is_new).astype(jnp.int32)
+        return out_s, out_d, out_w, m
 
     return jax.jit(fn)
 
@@ -162,7 +197,8 @@ class SortedCOO:
     def reverse_walk(
         self, steps: int, *, visits0: Optional[jnp.ndarray] = None
     ) -> jnp.ndarray:
-        return self.to_walk_image().walk(steps, visits0=visits0)
+        # fused flush→walk: one dispatch per stream round (§12)
+        return walk_image.reverse_walk_via_image(self, steps, visits0=visits0)
 
     def to_edge_sets(self) -> list[set[int]]:
         return self.to_csr().to_edge_sets()

@@ -40,11 +40,6 @@ SENTINEL = util.SENTINEL
 COMPACT_THRESHOLD = 0.5
 #: Don't bother compacting arenas smaller than this many slots.
 COMPACT_MIN_SLOTS = 4 * 128
-#: Off-TPU write-back dispatch: arenas up to this many slots always use
-#: the full-buffer gather rebuild (its dense passes beat CPU XLA scatter
-#: overhead there); beyond it, batches touching < 1/10 of the arena
-#: switch to per-group scatters so small updates stay O(batch).
-_REBUILD_MAX_CAP = 1 << 21
 
 
 # ---------------------------------------------------------------------------
@@ -267,6 +262,31 @@ class DiGraph:
         self._csr_cache = None
         self._image = None
 
+    def _refresh_image(self, blocks=None) -> None:
+        """Keep the cached shared walk image current across an update.
+
+        The arena IS the image (``shared=True``), so after an in-place
+        update only the buffer references, bump and live count change —
+        re-pointing them beats rebuilding the wrap (and its device
+        interval cache) every stream round.  ``blocks`` is the
+        in-program-updated [lo, hi) pair from the fused dispatch (None
+        drops the interval cache instead).  Vertex-set changes already
+        dropped the wrap before this runs (``add_vertices`` →
+        ``_invalidate_derived``; there is no vertex-removal path), so
+        the only staleness left to guard is a replaced metadata array —
+        an O(V) nv recount here would tax every steady-state round.
+        """
+        img = self._image
+        if img is None:
+            return
+        if img.starts is not self.starts:
+            self._image = None
+            return
+        img.dst, img.wgt, img.rows = self.dst, self.wgt, self.slot_rows
+        img.bump = int(self.layout.bump)
+        img.live = int(self.m)
+        img._blocks = tuple(blocks) if blocks is not None else None
+
     # ------------------------------------------------------------------
     # the paper's core ops
     # ------------------------------------------------------------------
@@ -358,117 +378,70 @@ class DiGraph:
         else:
             self.stats.record_inplace()
 
-        # gather + merge per pow-2 width group (exact capacity classes
-        # off-TPU, 128-slot tiles on TPU — the floor is the backend's,
-        # see kernels/slot_update/ops.py).  Write-back picks the cheaper
-        # of two formulations.  TPU always scatters per group.  Off-TPU
-        # the full-buffer gather rebuild pays a ~cap_e-proportional
-        # constant (~5ns/slot/array + the host slot map) while scatters
-        # pay ~100ns per touched slot plus heavier per-group dispatches;
-        # measured on this container the rebuild wins up to ~2M-slot
-        # arenas even for single-edge batches, so only a big arena with
-        # a proportionally tiny batch takes the scatter path (keeping
-        # small updates O(batch), not O(|E|)).  The Pallas merge is only
-        # exact for ids < 2**24 (f32 one-hot matmuls), so huge-vertex
-        # graphs fall back to the XLA merge.
+        # ONE fused dispatch applies every pow-2 width group of the plan
+        # (DESIGN.md §12): gather + merge per group (exact capacity
+        # classes off-TPU, 128-slot tiles on TPU), then one write-back —
+        # the jit launch and the host counts sync are paid once per
+        # BATCH instead of once per width class.  Write-back picks the
+        # cheaper of two formulations (``choose_scatter``): TPU always
+        # scatters; off-TPU the full-buffer gather rebuild pays a
+        # ~cap_e-proportional constant (~5ns/slot/array + the host slot
+        # map) while scatters pay ~100ns per touched slot, so only a big
+        # arena with a proportionally tiny batch takes the scatter path
+        # (keeping small updates O(batch), not O(|E|)).  The Pallas
+        # merge is only exact for ids < 2**24 (f32 one-hot matmuls), so
+        # huge-vertex graphs fall back to the XLA merge.
         on_tpu = jax.default_backend() == "tpu"
         merge_backend = (
             "pallas" if on_tpu and self.cap_v < _su_ops.PALLAS_MAX_ID else "xla"
         )
         touched = int(new_caps.sum() + old_caps[grow].sum())
-        use_scatter = on_tpu or (
-            self.cap_e > _REBUILD_MAX_CAP and touched * 10 < self.cap_e
-        )
-        net = 0
+        use_scatter = _su_ops.choose_scatter(self.cap_e, touched)
         has_moves = bool(grow.any())
         # per-buffer COW: dst/wgt are always written; the owner map only
         # when a block moves — a sealed slot_rows stays snapshot-shared
         # through every non-moving update.
         self._detach("dst", "wgt", *(("slot_rows",) if has_moves else ()))
-        d_patches: list = []
-        w_patches: list = []
-        deferred: list = []  # (gsel, device counts) — synced once at the end
-        patch_base = np.zeros(rows.shape[0], np.int64)
-        base = 0
-        for wv, gsel, a_pad, pad1, bd, bw, bl in plan.width_groups(
-            sel, new_caps, _su_ops.width_floor()
-        ):
-            n = gsel.shape[0]
-            if use_scatter:
-                self.dst, self.wgt, self.slot_rows, counts = _su_ops.slot_update(
-                    self.dst,
-                    self.wgt,
-                    self.slot_rows,
-                    pad1(old_starts[gsel], -1),
-                    pad1(old_caps[gsel], 0),
-                    pad1(new_starts[gsel], -1),
-                    pad1(new_caps[gsel], 0),
-                    pad1(deg_old[gsel], 0),
-                    pad1(rows[gsel], self.cap_v),
-                    bd,
-                    bw,
-                    bl,
-                    width=int(wv),
-                    backend=merge_backend,
-                    donate=donate,
-                    has_moves=bool(grow[gsel].any()),
-                )
-            else:
-                d_rows, w_rows, counts = _su_ops.merge_group(
-                    self.dst,
-                    self.wgt,
-                    pad1(old_starts[gsel], -1),
-                    pad1(deg_old[gsel], 0),
-                    bd,
-                    bw,
-                    bl,
-                    width=int(wv),
-                    backend=merge_backend,
-                )
-                d_patches.append(d_rows)
-                w_patches.append(w_rows)
-                patch_base[gsel] = base + np.arange(n, dtype=np.int64) * int(wv)
-                base += a_pad * int(wv)
-            deferred.append((gsel, counts))
-
-        for gsel, counts in deferred:
+        groups, layout = plan.fused_groups(
+            sel, rows, deg_old, grow,
+            old_starts, old_caps, new_starts, new_caps,
+            _su_ops.width_floor(), self.cap_v,
+        )
+        slot_map = owner_patch = None
+        rebuild_hi = 0
+        if not use_scatter:
+            rebuild_hi = _su_ops.quantized_prefix(
+                self.cap_e, int(self.layout.bump)
+            )
+            slot_map, owner_patch = _su_ops.host_patch_layout(
+                layout, rows, old_starts, old_caps, new_starts, new_caps,
+                grow, rebuild_hi, self.cap_v, has_moves,
+            )
+        # interval-cache refresh rides the same dispatch: when the shared
+        # walk image has warm [lo, hi) blocks, the program updates them
+        # from the merge counts and hands them back — the next walk
+        # skips the host geometry rebuild entirely.
+        img = self._image
+        blk = (
+            img._blocks
+            if img is not None and img.starts is self.starts
+            else None
+        )
+        self.dst, self.wgt, self.slot_rows, counts_list, extra = (
+            _su_ops.fused_apply(
+                self.dst, self.wgt, self.slot_rows, groups,
+                scatter=use_scatter, backend=merge_backend, donate=donate,
+                slot_map=slot_map, owner_patch=owner_patch,
+                rebuild_hi=rebuild_hi,
+                lo=blk[0] if blk is not None else None,
+                hi=blk[1] if blk is not None else None,
+            )
+        )
+        net = 0
+        for (_wv, gsel, _a), counts in zip(layout, counts_list):
             counts = np.asarray(counts, dtype=np.int64)[: gsel.shape[0]]
             self.degrees[rows[gsel]] = counts
             net += int(counts.sum() - deg_old[gsel].sum())
-
-        if not use_scatter:
-            # host-built slot map: every touched arena slot's patch source
-            slot_map = np.full(self.cap_e, -1, np.int32)
-            if has_moves:  # vacated blocks clear via the trailing slot
-                mv = np.nonzero(grow & (old_starts >= 0) & (old_caps > 0))[0]
-                oc = old_caps[mv]
-                intra = np.arange(int(oc.sum()), dtype=np.int64) - np.repeat(
-                    np.cumsum(oc) - oc, oc
-                )
-                slot_map[np.repeat(old_starts[mv], oc) + intra] = base
-            intra = np.arange(int(new_caps.sum()), dtype=np.int64) - np.repeat(
-                np.cumsum(new_caps) - new_caps, new_caps
-            )
-            arena_idx = np.repeat(new_starts, new_caps) + intra
-            slot_map[arena_idx] = np.repeat(patch_base, new_caps) + intra
-            if has_moves:
-                owner_patch = np.full(base + 1, self.cap_v, np.int32)
-                owner_patch[np.repeat(patch_base, new_caps) + intra] = np.repeat(
-                    rows, new_caps
-                )
-            else:
-                owner_patch = np.zeros(1, np.int32)
-            self.dst, self.wgt, self.slot_rows = _su_ops.rebuild_arena(
-                self.dst,
-                self.wgt,
-                self.slot_rows,
-                slot_map,
-                owner_patch,
-                tuple(d_patches),
-                tuple(w_patches),
-                has_moves=has_moves,
-                donate=donate,
-            )
 
         # free vacated blocks, install the new geometry
         if has_moves:
@@ -478,7 +451,9 @@ class DiGraph:
             self.starts[rows] = new_starts
             self.capacities[rows] = new_caps
         self.m += net
-        self._invalidate_derived()
+        self._csr_cache = None
+        # the shared walk image tracks the arena in place
+        self._refresh_image(extra if blk is not None else None)
         self._refresh_occupancy()
         return net
 

@@ -326,7 +326,8 @@ class LazyCSR:
     def reverse_walk(
         self, steps: int, *, visits0: Optional[jnp.ndarray] = None
     ) -> jnp.ndarray:
-        return self.to_walk_image().walk(steps, visits0=visits0)
+        # fused flush→walk: one dispatch per stream round (§12)
+        return walk_image.reverse_walk_via_image(self, steps, visits0=visits0)
 
     def to_edge_sets(self) -> list[set[int]]:
         return self.to_csr().to_edge_sets()

@@ -186,8 +186,10 @@ class UpdatePlan:
             n = gsel.shape[0]
             # floors keep the (width, A, K) jit-shape lattice coarse, so
             # a stream of varying batches stops compiling after a few
-            # rounds
-            a_pad = max(alloc.next_pow2(n), 16)
+            # rounds; wide classes floor lower — 15 pad rows of a
+            # 1024-slot class are 15k dead merge lanes, and hub classes
+            # rarely hold more than a handful of rows per batch
+            a_pad = max(alloc.next_pow2(n), 4 if int(wv) >= 256 else 16)
 
             def pad1(a, fill, dtype=np.int32, *, _n=n, _a=a_pad):
                 out = np.full(_a, fill, dtype)
@@ -199,6 +201,47 @@ class UpdatePlan:
             k = max(alloc.next_pow2(int(self.run_count[sel[gsel]].max())), 4)
             bd, bw, bl = self.run_tiles(sel[gsel], k, a_pad)
             yield int(wv), gsel, a_pad, pad1, bd, bw, bl
+
+    def fused_groups(self, sel, rows, deg_old, grow,
+                     old_starts, old_caps, new_starts, new_caps,
+                     floor: int, row_pad: int):
+        """Packed per-group operands of one ``fused_apply`` dispatch (§12).
+
+        The single definition of the fused engine's group contract —
+        ``(width, a_pad, k, d_k, moves, (row_ops [6, A], b_dstdel
+        [2, A, K], b_wgt [A, K]))`` — shared by ``DiGraph._apply_impl``
+        and ``WalkImage._plan_patch`` so the operand packing and the
+        jit-key fields can never drift between the two patch engines.
+        ``row_pad`` fills pad rows' ids (the consumer's drop bound);
+        ``d_k`` is the group's pow-2 delete-run ceiling (the merge's
+        hole-compaction window).  Returns ``(groups, layout)`` with
+        ``layout = [(width, gsel, a_pad), ...]`` for the counts commit
+        and the host slot map.
+        """
+        groups, layout = [], []
+        for wv, gsel, a_pad, pad1, bd, bw, bl in self.width_groups(
+            sel, new_caps, floor
+        ):
+            ops3 = (
+                np.stack([
+                    pad1(old_starts[gsel], -1),
+                    pad1(old_caps[gsel], 0),
+                    pad1(new_starts[gsel], -1),
+                    pad1(new_caps[gsel], 0),
+                    pad1(deg_old[gsel], 0),
+                    pad1(rows[gsel], row_pad),
+                ]),
+                np.stack([bd, bl]),
+                bw,
+            )
+            dmax = int(self.del_count[sel[gsel]].max(initial=0))
+            d_k = alloc.next_pow2(dmax) if dmax else 0
+            groups.append(
+                (int(wv), a_pad, bd.shape[1], d_k,
+                 bool(grow[gsel].any()), ops3)
+            )
+            layout.append((int(wv), gsel, a_pad))
+        return groups, layout
 
     def rows_in_range(self, cap_v: int) -> np.ndarray:
         """Mask of plan rows a graph with ``cap_v`` vertex slots can touch.

@@ -134,7 +134,8 @@ class Vector2D:
         return self.to_walk_image().occupancy
 
     def reverse_walk(self, steps: int, *, visits0=None):
-        return self.to_walk_image().walk(steps, visits0=visits0)
+        # fused flush→walk: one dispatch per stream round (§12)
+        return walk_image.reverse_walk_via_image(self, steps, visits0=visits0)
 
     def to_edge_sets(self) -> list[set[int]]:
         return [set(np.asarray(r).tolist()) for r in self.rows]

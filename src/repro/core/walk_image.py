@@ -1,4 +1,4 @@
-"""WalkImage — the universal traversal-image layer (DESIGN.md §11).
+"""WalkImage — the universal traversal-image layer (DESIGN.md §11/§12).
 
 Every representation lowers to ONE canonical device traversal image: a
 packed edge buffer (``dst``/``wgt``/``rows``, SENTINEL on dead slots)
@@ -9,13 +9,19 @@ re-materialized per walk:
 
   * representations *queue* each applied ``UpdatePlan`` on their cached
     image (``queue``), and the next walk *flushes* the queue by patching
-    touched rows in place (``flush`` → ``_patch_one``) through the same
-    fused ``kernels/slot_update`` merge the DiGraph arena uses — so an
-    interleaved update/walk stream pays O(batch) per round, never a full
-    image rebuild, and walks keep hitting warm jit shapes;
+    touched rows in place through the fused ``kernels/slot_update``
+    engine — ALL pow-2 width groups of a plan in ONE dispatch
+    (``fused_apply``), and, on the walk path, the k-step walk scan fused
+    into the SAME program (``walk_flush``): a steady-state update/walk
+    stream round is one device dispatch, zero intermediate
+    materialization (§12);
   * rows are laid out in CP2AA slack-padded blocks (``alloc.edge_
-    capacities``); a row that outgrows its slack relocates to a fresh
-    block at the image's bump pointer inside the same fused dispatch;
+    capacities``) — or DENSELY when the source layout's slack would
+    dominate the walked prefix (``DENSE_THRESHOLD``, §12): ChunkedGraph
+    PAGE tails and low-occupancy arenas compact to live edges only, so
+    walks never drag dead lanes through the step loop;
+  * a row that outgrows its slack relocates to a fresh block at the
+    image's bump pointer inside the same fused dispatch;
   * the patch path falls back to a full rebuild (returning ``False`` so
     the owner drops its cache) only when the bump slack is exhausted,
     the vertex set grows, or the queue got too deep to be worth
@@ -39,26 +45,48 @@ from . import alloc, util
 SENTINEL = util.SENTINEL
 
 #: Queue depth beyond which replaying patches is judged worse than one
-#: rebuild (each pending plan costs a fused dispatch per width group).
+#: rebuild (each pending plan costs a fused dispatch).
 MAX_PENDING = 32
 #: Fraction of the BUILD-TIME occupancy below which a flush demands a
 #: rebuild instead of further patching — the image-level analogue of
 #: DiGraph's traversal-time compaction (§7): dead slots from relocated /
 #: deleted rows otherwise accumulate in the walked prefix forever.  The
-#: trigger is relative to the layout's own slack (ChunkedGraph's PAGE
-#: quantization builds at ~0.3 occupancy; rebuilding can never beat
-#: that), so it fires only when a rebuild would actually densify.
+#: trigger is relative to the layout's own slack, so it fires only when
+#: a rebuild would actually densify.
 COMPACT_THRESHOLD = 0.5
 #: Don't bother occupancy-rebuilding images smaller than this.
 COMPACT_MIN_SLOTS = 4 * 128
+#: Build-time live fraction below which an image build strips the source
+#: layout's slack entirely (caps == degrees, occupancy 1.0) instead of
+#: inheriting it — dense image compaction (§12).  CP2AA arenas build at
+#: ~0.65-0.7 and keep their slack (in-place patches stay cheap);
+#: ChunkedGraph's PAGE quantization builds at ~0.3 and compacts, since
+#: 3x dead lanes per step cost far more than relocating grown rows.
+DENSE_THRESHOLD = 0.55
 
 #: Module-level maintenance counters; tests and benchmarks read these to
-#: prove walks do zero host image work (builds) between updates.
-STATS = {"builds": 0, "patches": 0, "rebuilds": 0}
+#: prove walks do zero host image work (builds) between updates, and
+#: that a steady-state flush→walk round is ONE device dispatch.
+STATS = {"builds": 0, "patches": 0, "rebuilds": 0, "dispatches": 0}
 
 
 def stats_snapshot() -> dict:
     return dict(STATS)
+
+
+def reverse_walk_via_image(rep, steps: int, *, visits0=None):
+    """The shared reverse_walk body of every image-queueing representation.
+
+    Try the fused flush→walk dispatch on the cached image (§12); fall
+    back to the eager flush-or-rebuild path (``to_walk_image``) when the
+    image is absent or can only be rebuilt.
+    """
+    img = rep._image
+    if img is not None:
+        out = img.walk_flush(steps, visits0=visits0)
+        if out is not None:
+            return out
+    return rep.to_walk_image().walk(steps, visits0=visits0)
 
 
 @dataclasses.dataclass
@@ -69,7 +97,7 @@ class WalkImage:
     dst: jnp.ndarray   # int32 [cap_e], SENTINEL on dead slots
     wgt: jnp.ndarray   # f32   [cap_e] (carried for the patch merges)
     rows: jnp.ndarray  # int32 [cap_e] slot owner (stale allowed on dead)
-    # host block geometry (CP2AA classes)
+    # host block geometry (CP2AA classes, or exact degrees when dense)
     starts: np.ndarray  # int64 [>= nv], -1 = no block
     caps: np.ndarray    # int64 [>= nv]
     degs: np.ndarray    # int64 [>= nv]
@@ -89,8 +117,9 @@ class WalkImage:
     _pending: list = dataclasses.field(
         default_factory=list, repr=False, compare=False
     )
-    #: set once the queue overflowed MAX_PENDING: the image can only be
-    #: rebuilt, so further plans are dropped instead of pinned in memory
+    #: set once the queue overflowed MAX_PENDING (or a fused walk left
+    #: the occupancy below the compaction trigger): the image can only
+    #: be rebuilt, so further plans are dropped instead of pinned.
     _stale: bool = dataclasses.field(default=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------
@@ -108,13 +137,18 @@ class WalkImage:
     # ------------------------------------------------------------------
     @classmethod
     def from_csr_arrays(cls, offsets, dst, wgt, nv: int, *,
-                        engine: str = "auto") -> "WalkImage":
-        """Build a slack-padded image from CSR-ordered edge arrays.
+                        engine: str = "auto",
+                        dense: Optional[bool] = None) -> "WalkImage":
+        """Build a slack-padded OR dense image from CSR-ordered arrays.
 
         Reuses the ingest engine's ``arena_image`` fill (DESIGN.md §10):
         CP2AA block placement on host, one fused fill + transfer for the
-        device payload.  ``cap_e`` keeps >= 25% bump headroom so grown
-        rows can relocate without an immediate rebuild.
+        device payload.  ``dense=None`` applies the §12 compaction
+        policy: when the CP2AA layout's live fraction would fall below
+        ``DENSE_THRESHOLD``, blocks take their exact degree (occupancy
+        1.0) so the walk processes live edges only.  ``cap_e`` keeps
+        >= 25% bump headroom either way so grown rows can relocate
+        without an immediate rebuild.
         """
         from ..kernels.csr_build import ops as _cb_ops
 
@@ -123,10 +157,15 @@ class WalkImage:
         deg = np.diff(o)
         m = int(o[-1]) if o.shape[0] else 0
         caps = np.where(deg > 0, alloc.edge_capacities(deg), 0)
+        total = int(caps.sum())
+        if dense is None:
+            dense = m > 0 and m < DENSE_THRESHOLD * total
+        if dense:
+            caps = deg.copy()
+            total = m
         csum = np.cumsum(caps)
         starts = np.where(caps > 0, csum - caps, -1)
-        total = int(csum[-1]) if caps.shape[0] else 0
-        cap_e = alloc.pow2_with_headroom(total)
+        cap_e = alloc.pow2_with_headroom(total, 1.0 if dense else 0.25)
         w = wgt if wgt is not None else np.ones(m, np.float32)
         # slice padded source buffers to the live prefix: the device
         # arena_image path derives its edge count (and jit-cache key)
@@ -175,6 +214,12 @@ class WalkImage:
             self._pending.clear()
             self._stale = True
 
+    def _needs_compact(self) -> bool:
+        return (
+            self.bump >= COMPACT_MIN_SLOTS
+            and self.occupancy < COMPACT_THRESHOLD * self.base_occupancy
+        )
+
     def flush(self) -> bool:
         """Patch all queued plans in; False = owner must rebuild."""
         if self._stale:
@@ -191,33 +236,33 @@ class WalkImage:
         # slots dominate the walked prefix — relative to how dense this
         # layout was as built — one rebuild beats every subsequent walk
         # dragging them through the step loop.
-        if (
-            self.bump >= COMPACT_MIN_SLOTS
-            and self.occupancy < COMPACT_THRESHOLD * self.base_occupancy
-        ):
+        if self._needs_compact():
             STATS["rebuilds"] += 1
             return False
         return True
 
-    def _patch_one(self, plan) -> bool:
-        """Apply one plan's per-row runs to the image in place.
+    # -- patch pipeline: host planning, fused dispatch, host commit ------
+    def _plan_patch(self, plan):
+        """Host half of one plan's patch: geometry + dispatch operands.
 
-        Mirrors ``DiGraph._apply_impl``'s group loop against the image's
-        own geometry: one fused ``slot_update`` dispatch per pow-2 width
-        class (gather touched blocks, merge the sorted runs, scatter
-        back, grown rows landing in fresh bump blocks).  Returns False
-        when only a rebuild can represent the result (new vertices, or
-        a grown row with no bump slack left).
+        Mirrors ``DiGraph._apply_impl``'s planning against the image's
+        own geometry, producing the operand set of ONE fused
+        ``slot_update.fused_apply`` dispatch (every pow-2 width class of
+        the plan merges in the same program; grown rows land in fresh
+        bump blocks).  Returns None when only a rebuild can represent
+        the result (new vertices, or a grown row with no bump slack
+        left) — all failure checks precede any state mutation, so a
+        failed planning pass is side-effect free.
         """
         from ..kernels.slot_update import ops as _su_ops
 
         if plan.n_ops == 0:
-            return True
+            return ()
         if plan.max_insert_vertex() >= self.nv:
-            return False  # vertex growth changes the visits shape: rebuild
+            return None  # vertex growth changes the visits shape: rebuild
         sel, rows, deg_old, ins_count = plan.active_rows(self.degs, self.nv)
         if sel.shape[0] == 0:
-            return True
+            return ()
         old_caps = self.caps[rows]
         old_starts = self.starts[rows]
         ub = deg_old + ins_count
@@ -227,7 +272,7 @@ class WalkImage:
         if grow.any():
             need = alloc.edge_capacities(ub[grow])
             if self.bump + int(need.sum()) > self.cap_e:
-                return False  # slack exhausted: rebuild repacks densely
+                return None  # slack exhausted: rebuild repacks densely
             g_idx = np.nonzero(grow)[0]
             new_caps[g_idx] = need
             new_starts[g_idx] = self.bump + (np.cumsum(need) - need)
@@ -237,40 +282,62 @@ class WalkImage:
         backend = (
             "pallas" if on_tpu and self.nv < _su_ops.PALLAS_MAX_ID else "xla"
         )
-        net = 0
-        deferred = []
-        for wv, gsel, _a_pad, pad1, bd, bw, bl in plan.width_groups(
-            sel, new_caps, _su_ops.width_floor()
-        ):
-            self.dst, self.wgt, self.rows, counts = _su_ops.slot_update(
-                self.dst,
-                self.wgt,
-                self.rows,
-                pad1(old_starts[gsel], -1),
-                pad1(old_caps[gsel], 0),
-                pad1(new_starts[gsel], -1),
-                pad1(new_caps[gsel], 0),
-                pad1(deg_old[gsel], 0),
-                pad1(rows[gsel], self.nv),
-                bd,
-                bw,
-                bl,
-                width=int(wv),
-                backend=backend,
-                donate=True,
-                has_moves=bool(grow[gsel].any()),
+        has_moves = bool(grow.any())
+        touched = int(new_caps.sum() + old_caps[grow].sum())
+        scatter = _su_ops.choose_scatter(self.cap_e, touched)
+        groups, layout = plan.fused_groups(
+            sel, rows, deg_old, grow,
+            old_starts, old_caps, new_starts, new_caps,
+            _su_ops.width_floor(), self.nv,
+        )
+        slot_map = owner_patch = None
+        rebuild_hi = 0
+        if not scatter:
+            rebuild_hi = self.edges_hi()  # post-growth bump, same lattice
+            slot_map, owner_patch = _su_ops.host_patch_layout(
+                layout, rows, old_starts, old_caps, new_starts, new_caps,
+                grow, rebuild_hi, self.nv, has_moves,
             )
-            deferred.append((gsel, counts))
-        for gsel, counts in deferred:
+        return dict(
+            rows=rows, deg_old=deg_old, grow=grow,
+            new_caps=new_caps, new_starts=new_starts,
+            groups=groups, layout=layout, backend=backend,
+            scatter=scatter, slot_map=slot_map, owner_patch=owner_patch,
+            rebuild_hi=rebuild_hi,
+        )
+
+    def _commit_patch(self, prep, counts_list) -> None:
+        """Install the post-dispatch geometry (degrees, moved blocks)."""
+        rows, deg_old = prep["rows"], prep["deg_old"]
+        net = 0
+        for (_wv, gsel, _a), counts in zip(prep["layout"], counts_list):
             counts = np.asarray(counts, dtype=np.int64)[: gsel.shape[0]]
             self.degs[rows[gsel]] = counts
             net += int(counts.sum() - deg_old[gsel].sum())
-        if grow.any():
-            self.starts[rows] = new_starts
-            self.caps[rows] = new_caps
+        if prep["grow"].any():
+            self.starts[rows] = prep["new_starts"]
+            self.caps[rows] = prep["new_caps"]
         self.live += net
         self._blocks = None
         STATS["patches"] += 1
+
+    def _patch_one(self, plan) -> bool:
+        """Apply one plan to the image: ONE fused dispatch, all groups."""
+        from ..kernels.slot_update import ops as _su_ops
+
+        prep = self._plan_patch(plan)
+        if prep is None:
+            return False
+        if prep == ():
+            return True
+        self.dst, self.wgt, self.rows, counts, _ = _su_ops.fused_apply(
+            self.dst, self.wgt, self.rows, prep["groups"],
+            scatter=prep["scatter"], backend=prep["backend"], donate=True,
+            slot_map=prep["slot_map"], owner_patch=prep["owner_patch"],
+            rebuild_hi=prep["rebuild_hi"],
+        )
+        STATS["dispatches"] += 1
+        self._commit_patch(prep, counts)
         return True
 
     # ------------------------------------------------------------------
@@ -311,11 +378,13 @@ class WalkImage:
         """k-step reverse walk over the image via the slot_walk engine.
 
         ``visits0`` may be a ``[B, num_vertices]`` stack of initial visit
-        vectors — all B walks then ride the same fused step programs
-        (one-hot matmul batching on the Pallas backend).
+        vectors — all B walks then ride the same fused step programs.
+        Assumes the image is flushed (owners call ``walk_flush`` or
+        ``to_walk_image()`` first).
         """
         from ..kernels.slot_walk import ops as _sw_ops
 
+        STATS["dispatches"] += 1
         return _sw_ops.slot_walk_image(
             self,
             steps,
@@ -324,3 +393,77 @@ class WalkImage:
             interpret=interpret,
             visits0=visits0,
         )
+
+    def walk_flush(
+        self,
+        steps: int,
+        *,
+        backend: str = "auto",
+        normalize: bool = False,
+        interpret: bool = False,
+        visits0: Optional[jnp.ndarray] = None,
+    ) -> Optional[jnp.ndarray]:
+        """Flush queued plans AND walk — fused into ONE dispatch (§12).
+
+        The steady-state stream round (one queued plan, then a walk)
+        lowers to a single jitted program: the plan's merge groups run
+        as a prologue, the [lo, hi) geometry updates in-program from the
+        merge counts, and the step scan consumes the patched buffers
+        directly — no intermediate flush dispatch, no host round-trip
+        before the walk.  Deeper queues flush all but the last plan
+        first (one fused dispatch each).  Returns None when the image
+        can only be rebuilt — the owner falls back to
+        ``to_walk_image().walk(...)`` (rebuild accounting happens there,
+        in ``flush``; a failed planning pass here is side-effect free).
+        """
+        from ..kernels.slot_update import ops as _su_ops
+
+        if self.shared or self._stale:
+            return None if self._stale else self.walk(
+                steps, backend=backend, normalize=normalize,
+                interpret=interpret, visits0=visits0,
+            )
+        while len(self._pending) > 1:
+            if not self._patch_one(self._pending[0]):
+                return None
+            self._pending.pop(0)
+        if not self._pending:
+            return self.walk(
+                steps, backend=backend, normalize=normalize,
+                interpret=interpret, visits0=visits0,
+            )
+        prep = self._plan_patch(self._pending[0])
+        if prep is None:
+            return None
+        if prep == ():
+            self._pending.pop(0)
+            return self.walk(
+                steps, backend=backend, normalize=normalize,
+                interpret=interpret, visits0=visits0,
+            )
+        if backend == "auto":
+            backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+        nwalks = 0 if visits0 is None else int(visits0.shape[0])
+        if nwalks:
+            visits0 = jnp.asarray(visits0, jnp.float32)
+        lo, hi = self.device_blocks()
+        self.dst, self.wgt, self.rows, counts, walk_out = _su_ops.fused_apply(
+            self.dst, self.wgt, self.rows, prep["groups"],
+            scatter=prep["scatter"], backend=prep["backend"], donate=True,
+            slot_map=prep["slot_map"], owner_patch=prep["owner_patch"],
+            rebuild_hi=prep["rebuild_hi"],
+            walk=(steps, self.nv, self.edges_hi(), nwalks,
+                  bool(normalize), backend),
+            lo=lo, hi=hi, visits0=visits0,
+            interpret=interpret,
+        )
+        STATS["dispatches"] += 1
+        self._pending.pop(0)
+        self._commit_patch(prep, counts)
+        visits, lo2, hi2 = walk_out
+        self._blocks = (lo2, hi2)  # in-program-updated geometry, reusable
+        if self._needs_compact():
+            # this walk already ran on the sparse image; make the NEXT
+            # access rebuild densely instead of patching further.
+            self._stale = True
+        return visits

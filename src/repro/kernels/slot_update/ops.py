@@ -1,20 +1,25 @@
-"""jit'd wrappers: one fused dispatch applies a mixed update plan group.
+"""jit'd wrappers: one fused dispatch applies a whole mixed UpdatePlan.
 
-``slot_update`` replaces the retired ``_jit_insert_chain`` /
-``_jit_delete_chain`` / per-class ``_sort_dirty_rows`` / ``_jit_move_blocks``
-micro-dispatch pipeline in ``core/digraph.py`` with a single program per
-width group:
+``fused_apply`` lowers EVERY pow-2 width group of a plan into one
+program (DESIGN.md §9/§12) — the per-group ``slot_update`` /
+``merge_group`` / ``rebuild_arena`` micro-dispatch pipeline is retired:
 
-  gather   touched rows' live prefixes into [A, W] tiles (W = the group's
-           pow-2 width class, >= every member's capacity; EB=128 floor so
-           all small classes share one compiled shape),
+  gather   touched rows' live prefixes into [A, W] tiles per group
+           (W = the group's pow-2 width class, >= every member's
+           capacity; EB=128 floor on TPU so all small classes share one
+           compiled shape),
   merge    the sorted batch runs [A, K] into the sorted rows — deletes,
            weight upserts and ranked inserts in one pass (two backends:
-           the Pallas one-hot-rank kernel in kernel.py, or a plain XLA
-           searchsorted + argsort formulation),
-  scatter  merged rows back — grown rows land directly in their NEW block
-           while their old block is SENTINEL-filled, so CP2AA block moves
-           ride the same dispatch instead of paying their own.
+           the Pallas one-hot-rank kernel in kernel.py, or the XLA
+           bisect + rank-arithmetic formulation in ``_merge_rows_xla``),
+  write    all merged groups back in one pass — either per-group
+           scatters (grown rows land directly in their NEW block while
+           their old block is SENTINEL-filled, so CP2AA block moves ride
+           the same dispatch) or a host-mapped gather rebuild of the
+           quantized bump prefix (``choose_scatter`` picks),
+  walk     optionally, the k-step interval walk scan fused right behind
+           the write-back (``WalkImage.walk_flush``): one dispatch per
+           steady-state stream round.
 
 Buffer donation keeps the arena update in place; every operand shape is
 pow-2 bucketed so steady-state streams never recompile.  The Pallas
@@ -27,11 +32,17 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...core import util
 from . import kernel as _kernel
 
 SENTINEL = util.SENTINEL
+#: Off-TPU write-back dispatch: arenas up to this many slots always use
+#: the full-buffer gather rebuild (its dense passes beat CPU XLA scatter
+#: overhead there); beyond it, batches touching < 1/10 of the arena
+#: switch to per-group scatters so small updates stay O(batch).
+REBUILD_MAX_CAP = 1 << 21
 #: TPU row-group width floor: merges run in whole 128-slot MXU tiles.  The
 #: XLA fallback instead groups rows by their exact pow-2 capacity class
 #: (floor XLA_FLOOR) — CPU sort/scatter cost is linear in slots touched,
@@ -56,250 +67,488 @@ def width_floor(backend: str = "auto") -> int:
 # ---------------------------------------------------------------------------
 # merge core, XLA formulation (shape-identical to the Pallas kernel)
 # ---------------------------------------------------------------------------
-def _merge_rows_xla(d_rows, w_rows, degs, b_dst, b_wgt, b_del):
-    """Scatter-free row merge: two windowed binary searches + one sort.
+#: Runs wider than this take the sort-based merge; narrower runs (the
+#: steady-state stream regime, K floored at 4) use the window-compaction
+#: merge — no lax.sort, which costs ~4x the rest of the merge on CPU.
+MERGE_WINDOW_MAX_K = 32
 
-    CPU XLA scatters cost ~100ns per index, so nothing here scatters:
-    op→slot membership flags the *new* inserts, slot→op membership flags
-    deletions and gathers upserted weights, and the new inserts ride a
-    concatenated [A, W+K] unstable key-value sort back into position
-    (keys are unique per row — one op per key — so stability is not
-    needed; SENTINEL ties only ever carry weights that get zeroed).
+
+def _merge_rows_xla(d_rows, w_rows, degs, b_dst, b_wgt, b_del,
+                    max_holes: int | None = None):
+    """Scatter-free (and for narrow runs sort- and eq-tensor-free) merge.
+
+    Rows arrive sorted (live ascending prefix, SENTINEL pad = int32
+    max), and so do each row's batch ops, so op membership is a batched
+    BRANCHLESS BISECT — log2(W) statically-unrolled take_along_axis
+    steps over the [A, K] query set — instead of an [A, K, W] equality
+    tensor, and all op effects land as [A, K]-sized scatters (~a few
+    thousand indices) on the row planes:
+
+      * deletes mark their hit lane in a ``killed`` plane,
+      * upserts overwrite their hit lane's weight in place,
+      * new inserts scatter value/weight/flag planes at their merged
+        position (``#surviving-entries-below-key + insert-rank``).
+
+    Final positioning is rank arithmetic (DESIGN.md §12): a delete
+    punches at most ``max_holes`` holes into the sorted row (callers
+    pass the group's pow-2 delete-run ceiling; the steady-state stream
+    regime is 1-2), so a (holes+1)-wide select window compacts the row
+    and one take_along_axis gather interleaves the inserts.  ``lax.sort``
+    — which costs ~4x the rest of the merge on CPU — remains only for
+    wide runs (K > MERGE_WINDOW_MAX_K, bulk hub loads), where the
+    classic eq-tensor + [A, W+K] sort formulation wins.
     """
-    w = d_rows.shape[1]
+    a, w = d_rows.shape
+    k = b_dst.shape[1]
     bdel = b_del != 0
-
-    # one [A, K, W] equality matrix answers membership both ways — a
-    # fused compare+reduce beats binary search here, whose lax.scan
-    # steps cost ~0.5ms of fixed overhead per dispatch on CPU.  K is the
-    # group's run width (small), so the matrix stays a few hundred KB.
     live = jnp.arange(w, dtype=jnp.int32)[None, :] < degs[:, None]
-    eq = (b_dst[:, :, None] == d_rows[:, None, :]) & live[:, None, :]
-    found = jnp.any(eq, axis=2) & (b_dst != SENTINEL)
-    new_ins = (~found) & (~bdel) & (b_dst != SENTINEL)
-    killed = jnp.any(eq & bdel[:, :, None], axis=1)
-    upsel = eq & (~bdel)[:, :, None]
-    w_up = jnp.sum(jnp.where(upsel, b_wgt[:, :, None], 0.0), axis=1)
-    d_keep = jnp.where(live & ~killed, d_rows, SENTINEL)
-    w_keep = jnp.where(jnp.any(upsel, axis=1), w_up, w_rows)
 
-    keys = jnp.concatenate(
-        [d_keep, jnp.where(new_ins, b_dst, SENTINEL)], axis=1
+    if k > MERGE_WINDOW_MAX_K:
+        # eq-tensor head + full sort (the wide-run path)
+        eq = (b_dst[:, :, None] == d_rows[:, None, :]) & live[:, None, :]
+        eqf = eq.astype(jnp.float32)
+        not_del = (~bdel).astype(jnp.float32)
+        lhs = jnp.stack(
+            [bdel.astype(jnp.float32), b_wgt * not_del, not_del], axis=1
+        )  # [A, 3, K]
+        red = jax.lax.batch_matmul(lhs, eqf)  # [A, 3, W]
+        found = (
+            jax.lax.batch_matmul(
+                eqf, jnp.ones((a, w, 1), jnp.float32)
+            )[:, :, 0]
+            > 0.0
+        ) & (b_dst != SENTINEL)
+        new_ins = (~found) & (~bdel) & (b_dst != SENTINEL)
+        killed = red[:, 0, :] > 0.0
+        d_keep = jnp.where(live & ~killed, d_rows, SENTINEL)
+        w_keep = jnp.where(red[:, 2, :] > 0.0, red[:, 1, :], w_rows)
+        keys = jnp.concatenate(
+            [d_keep, jnp.where(new_ins, b_dst, SENTINEL)], axis=1
+        )
+        vals = jnp.concatenate([w_keep, b_wgt], axis=1)
+        keys, vals = jax.lax.sort(
+            (keys, vals), dimension=1, num_keys=1, is_stable=False
+        )
+        d_out = keys[:, :w]
+        w_out = jnp.where(d_out != SENTINEL, vals[:, :w], 0.0)
+        counts = jnp.sum(d_out != SENTINEL, axis=1).astype(jnp.int32)
+        return d_out, w_out, counts
+
+    holes = k if max_holes is None else min(int(max_holes), k)
+    # --- batched branchless bisect: pos = #row entries with key < q ---
+    pos = jnp.zeros((a, k), jnp.int32)
+    h = w // 2
+    while h >= 1:
+        cand = pos + h
+        at = jnp.take_along_axis(d_rows, cand - 1, axis=1)
+        pos = jnp.where(at < b_dst, cand, pos)
+        h //= 2
+    at = jnp.take_along_axis(d_rows, jnp.minimum(pos, w - 1), axis=1)
+    ilive = b_dst != SENTINEL
+    found = (at == b_dst) & ilive & (pos < w)
+    rowi = jnp.broadcast_to(jnp.arange(a, dtype=jnp.int32)[:, None], (a, k))
+
+    # deletes: mark hit lanes (tiny scatter; misses dump past the plane)
+    kill_idx = jnp.where(found & bdel, rowi * w + pos, a * w)
+    killed = (
+        jnp.zeros((a * w + 1,), bool)
+        .at[kill_idx.reshape(-1)]
+        .set(True)[: a * w]
+        .reshape(a, w)
     )
-    vals = jnp.concatenate([w_keep, b_wgt], axis=1)
-    keys, vals = jax.lax.sort(
-        (keys, vals), dimension=1, num_keys=1, is_stable=False
+    # upserts: weight lands in place
+    up_idx = jnp.where(found & ~bdel, rowi * w + pos, a * w)
+    w_keep = (
+        jnp.concatenate([w_rows.reshape(-1), jnp.zeros((1,), jnp.float32)])
+        .at[up_idx.reshape(-1)]
+        .set(b_wgt.reshape(-1))[: a * w]
+        .reshape(a, w)
     )
-    d_out = keys[:, :w]
-    w_out = jnp.where(d_out != SENTINEL, vals[:, :w], 0.0)
-    counts = jnp.sum(d_out != SENTINEL, axis=1).astype(jnp.int32)
+
+    keep = live & ~killed
+    kept_cum = jnp.cumsum(keep.astype(jnp.int32), axis=1)
+    n_kept = kept_cum[:, -1]
+    kex = kept_cum - keep.astype(jnp.int32)  # kept strictly before lane i
+    d_keep = jnp.where(keep, d_rows, SENTINEL)
+
+    # new-insert placement: surviving entries below the key + run rank
+    kill_cum = jnp.cumsum(killed.astype(jnp.int32), axis=1)
+    kill_excl = jnp.concatenate(
+        [kill_cum - killed.astype(jnp.int32), kill_cum[:, -1:]], axis=1
+    )
+    new_ins = ilive & ~found & ~bdel
+    lt_kept = pos - jnp.take_along_axis(kill_excl, pos, axis=1)
+    ins_rank = jnp.cumsum(new_ins.astype(jnp.int32), axis=1) - new_ins
+    pos_ins = lt_kept + ins_rank
+    ins_idx = jnp.where(
+        new_ins, rowi * (w + 1) + jnp.minimum(pos_ins, w), a * (w + 1)
+    ).reshape(-1)
+    is_ins = (
+        jnp.zeros((a * (w + 1) + 1,), bool)
+        .at[ins_idx].set(True)[: a * (w + 1)].reshape(a, w + 1)[:, :w]
+    )
+    ins_d = (
+        jnp.zeros((a * (w + 1) + 1,), jnp.int32)
+        .at[ins_idx].set(b_dst.reshape(-1))[: a * (w + 1)]
+        .reshape(a, w + 1)[:, :w]
+    )
+    ins_w = (
+        jnp.zeros((a * (w + 1) + 1,), jnp.float32)
+        .at[ins_idx].set(b_wgt.reshape(-1))[: a * (w + 1)]
+        .reshape(a, w + 1)[:, :w]
+    )
+    ins_lt = jnp.cumsum(is_ins.astype(jnp.int32), axis=1) - is_ins
+
+    # hole compaction: kept lane i lands at kex[i], a left shift bounded
+    # by the group delete-run ceiling — (holes+1)-wide select window
+    j_row = jnp.arange(w, dtype=jnp.int32)[None, :]
+    if holes:
+        pad_d = jnp.concatenate(
+            [d_keep, jnp.full((a, holes), SENTINEL, jnp.int32)], 1
+        )
+        pad_w = jnp.concatenate(
+            [w_keep, jnp.zeros((a, holes), jnp.float32)], 1
+        )
+        pad_keep = jnp.concatenate([keep, jnp.zeros((a, holes), bool)], 1)
+        pad_kex = jnp.concatenate(
+            [kex, jnp.full((a, holes), w + k, jnp.int32)], 1
+        )
+    else:
+        pad_d, pad_w, pad_keep, pad_kex = d_keep, w_keep, keep, kex
+    comp_d = jnp.full((a, w), SENTINEL, jnp.int32)
+    comp_w = jnp.zeros((a, w), jnp.float32)
+    for o in range(holes + 1):
+        sel = pad_keep[:, o:o + w] & (pad_kex[:, o:o + w] == j_row)
+        comp_d = jnp.where(sel, pad_d[:, o:o + w], comp_d)
+        comp_w = jnp.where(sel, pad_w[:, o:o + w], comp_w)
+
+    r = jnp.clip(j_row - ins_lt, 0, w - 1)
+    g_d = jnp.take_along_axis(comp_d, r, axis=1)
+    g_w = jnp.take_along_axis(comp_w, r, axis=1)
+    counts = (n_kept + jnp.sum(new_ins.astype(jnp.int32), axis=1)).astype(
+        jnp.int32
+    )
+    valid = j_row < counts[:, None]
+    d_out = jnp.where(valid, jnp.where(is_ins, ins_d, g_d), SENTINEL)
+    w_out = jnp.where(valid, jnp.where(is_ins, ins_w, g_w), 0.0)
     return d_out, w_out, counts
 
 
 def merge_rows(
-    d_rows, w_rows, degs, b_dst, b_wgt, b_del, *, backend="xla", interpret=False
+    d_rows, w_rows, degs, b_dst, b_wgt, b_del, *, backend="xla",
+    interpret=False, max_holes=None,
 ):
-    """Backend-dispatched row merge (parity-test entry point)."""
+    """Backend-dispatched row merge (parity-test entry point).
+
+    ``max_holes`` (static) bounds the delete-hole compaction window of
+    the XLA formulation; None means the full run width.
+    """
     if backend == "pallas":
         return _kernel.merge_rows_pallas(
             d_rows, w_rows, degs, b_dst, b_wgt, b_del, interpret=interpret
         )
     if backend == "xla":
-        return _merge_rows_xla(d_rows, w_rows, degs, b_dst, b_wgt, b_del)
+        return _merge_rows_xla(
+            d_rows, w_rows, degs, b_dst, b_wgt, b_del, max_holes=max_holes
+        )
     raise ValueError(f"unknown slot_update backend: {backend!r}")
 
 
 # ---------------------------------------------------------------------------
-# rebuild write-back: gather-only full-buffer pass (the off-TPU fast path)
+# fused multi-group apply (+ optional fused walk epilogue) — DESIGN.md §12
 # ---------------------------------------------------------------------------
-@functools.lru_cache(maxsize=None)
-def _jit_merge_group(width: int, backend: str, interpret: bool):
-    """Read-only gather + merge for one width group (no write-back)."""
-
-    def fn(dst, wgt, old_starts, degs, b_dst, b_wgt, b_del):
-        d_rows = util.rows_to_padded(dst, old_starts, degs, width, SENTINEL)
-        w_rows = util.rows_to_padded(wgt, old_starts, degs, width, 0.0)
-        return merge_rows(
-            d_rows, w_rows, degs, b_dst, b_wgt, b_del,
-            backend=backend, interpret=interpret,
-        )
-
-    return jax.jit(fn)
+def choose_scatter(cap_e: int, touched: int) -> bool:
+    """Write-back dispatch: scatter per group (TPU / huge-arena small
+    batch) vs one full-buffer gather rebuild (the off-TPU default)."""
+    on_tpu = jax.default_backend() == "tpu"
+    return on_tpu or (cap_e > REBUILD_MAX_CAP and touched * 10 < cap_e)
 
 
-def merge_group(
-    dst, wgt, old_starts, degs, b_dst, b_wgt, b_del,
-    *, width: int, backend: str = "auto", interpret: bool = False,
-):
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
-    return _jit_merge_group(int(width), backend, interpret)(
-        dst, wgt, old_starts, degs, b_dst, b_wgt, b_del
-    )
+def quantized_prefix(cap_e: int, bump: int) -> int:
+    """Bump prefix bound on the cap_e/8 lattice (the walk's edges_hi
+    policy): coarse enough that streaming bump growth rarely changes the
+    static rebuild shape, tight enough to skip the SENTINEL tail."""
+    q = max(cap_e // 8, 128)
+    return min(-(-max(int(bump), 1) // q) * q, cap_e)
 
 
-@functools.lru_cache(maxsize=None)
-def _jit_rebuild(n_patches: int, has_moves: bool, donate: bool):
-    """One gather pass rewrites every touched arena slot.
+def host_patch_layout(layout, rows, old_starts, old_caps, new_starts,
+                      new_caps, grow, map_hi: int, cap_v: int,
+                      has_moves: bool):
+    """Host-built rebuild operands for the gather write-back.
 
-    ``slot_map[CAP]`` (host-built) holds -1 for untouched slots, a patch
-    index for slots of a touched row's (possibly new) block, and ``P``
-    (one past the concatenated patches) for vacated old blocks, which a
-    trailing SENTINEL/0 patch slot then clears.  XLA scatters on CPU cost
-    ~100ns per slot written; this formulation replaces them with three
-    dense gather+select passes over the buffer (~10ns/slot), which wins
-    whenever a batch touches more than ~a few percent of the arena —
-    scatter mode (``_jit_apply``) remains the TPU path.
+    ``layout`` is [(width, gsel, a_pad), ...] in group-iteration order —
+    merged group g's rows occupy consecutive [a_pad, width] regions of
+    the concatenated patch stream.  ``slot_map[map_hi]`` (``map_hi`` =
+    the quantized bump prefix; every touched slot sits below it) holds
+    -1 for untouched slots, a patch index for slots of a touched row's
+    (possibly new) block, and the trailing SENTINEL slot for vacated old
+    blocks.  Shared by the DiGraph arena update and the walk-image patch
+    engine (both feed it to ``fused_apply(scatter=False)``).
     """
-
-    def fn(dst, wgt, slot_rows, slot_map, owner_patch, *patches):
-        pd = jnp.concatenate(
-            [p.reshape(-1) for p in patches[:n_patches]]
-            + [jnp.full((1,), SENTINEL, jnp.int32)]
+    patch_base = np.zeros(rows.shape[0], np.int64)
+    base = 0
+    for wv, gsel, a_pad in layout:
+        patch_base[gsel] = base + np.arange(gsel.shape[0], dtype=np.int64) * int(wv)
+        base += int(a_pad) * int(wv)
+    slot_map = np.full(map_hi, -1, np.int32)
+    if has_moves:  # vacated blocks clear via the trailing patch slot
+        mv = np.nonzero(grow & (old_starts >= 0) & (old_caps > 0))[0]
+        oc = old_caps[mv]
+        intra = np.arange(int(oc.sum()), dtype=np.int64) - np.repeat(
+            np.cumsum(oc) - oc, oc
         )
-        pw = jnp.concatenate(
-            [p.reshape(-1) for p in patches[n_patches:]]
-            + [jnp.zeros((1,), jnp.float32)]
-        )
-        safe = jnp.clip(slot_map, 0, pd.shape[0] - 1)
-        touched = slot_map >= 0
-        dst = jnp.where(touched, pd[safe], dst)
-        wgt = jnp.where(touched, pw[safe], wgt)
-        if has_moves:
-            slot_rows = jnp.where(touched, owner_patch[safe], slot_rows)
-            return dst, wgt, slot_rows
-        # owner map untouched: neither donated nor returned (per-buffer COW)
-        return dst, wgt
-
-    if not donate:
-        return jax.jit(fn)
-    return jax.jit(fn, donate_argnums=(0, 1, 2) if has_moves else (0, 1))
-
-
-def rebuild_arena(
-    dst, wgt, slot_rows, slot_map, owner_patch, d_patches, w_patches,
-    *, has_moves: bool, donate: bool = True,
-):
-    """Write all merged groups back in one gather pass (see _jit_rebuild)."""
-    out = _jit_rebuild(len(d_patches), bool(has_moves), donate)(
-        dst, wgt, slot_rows, slot_map, owner_patch, *d_patches, *w_patches
+        slot_map[np.repeat(old_starts[mv], oc) + intra] = base
+    intra = np.arange(int(new_caps.sum()), dtype=np.int64) - np.repeat(
+        np.cumsum(new_caps) - new_caps, new_caps
     )
+    arena_idx = np.repeat(new_starts, new_caps) + intra
+    slot_map[arena_idx] = np.repeat(patch_base, new_caps) + intra
     if has_moves:
-        return out
-    return out[0], out[1], slot_rows
+        owner_patch = np.full(base + 1, cap_v, np.int32)
+        owner_patch[np.repeat(patch_base, new_caps) + intra] = np.repeat(
+            rows, new_caps
+        )
+    else:
+        owner_patch = np.zeros(1, np.int32)
+    return slot_map, owner_patch
 
 
-# ---------------------------------------------------------------------------
-# fused apply: gather + merge + scatter (+ block move) in one program
-# ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _jit_apply(width: int, backend: str, interpret: bool, donate: bool,
-               has_moves: bool):
-    """Without moves, ``slot_rows`` is read-only: it is neither donated
-    nor returned, so a snapshot-shared owner map stays shared (per-buffer
-    COW — the graph handle keeps its existing array object)."""
+def _jit_fused(groups: tuple, scatter: bool, rebuild_hi: int, any_moves: bool,
+               donate: bool, backend: str, interpret: bool, blocks: bool,
+               walk: tuple):
+    """ONE program for a whole UpdatePlan — and, optionally, the walk.
 
-    def fn(
-        dst, wgt, slot_rows,
-        old_starts, old_caps, new_starts, new_caps, degs, row_ids,
-        b_dst, b_wgt, b_del,
-    ):
-        a = old_starts.shape[0]
+    ``groups`` is ``((width, a_pad, k, d_k, moves), ...)``: every pow-2
+    width class of the plan merges inside the same dispatch (the groups
+    touch disjoint rows, so their gathers all read the pre-update buffer
+    and their writes never collide).  Compared to one dispatch per group
+    this pays a single XLA launch + a single host counts sync per
+    *batch* instead of per class.  ``d_k`` bounds each group's
+    delete-hole compaction window (see ``_merge_rows_xla``).
+
+    ``blocks`` updates the [lo, hi) interval geometry in-program from
+    the merge counts and returns it (the shared-image arena keeps its
+    walk operands warm across updates without a host rebuild).  ``walk``
+    is ``()`` or ``(steps, nv, edges_hi, nwalks, normalize, engine)``:
+    the patched buffers additionally feed the scatter-free interval step
+    scan directly, so a steady-state stream round (flush + k-step walk)
+    is ONE dispatch with zero intermediate materialization (§12).
+    """
+    n_g = len(groups)
+
+    def fn(dst, wgt, slot_rows, slot_map, owner_patch, lo, hi, visits0, *ops):
         cap_e = dst.shape[0]
-        lane = jnp.arange(width, dtype=jnp.int32)[None, :]
-
-        d_rows = util.rows_to_padded(dst, old_starts, degs, width, SENTINEL)
-        w_rows = util.rows_to_padded(wgt, old_starts, degs, width, 0.0)
-        d_rows, w_rows, counts = merge_rows(
-            d_rows, w_rows, degs, b_dst, b_wgt, b_del,
-            backend=backend, interpret=interpret,
-        )
-
-        if has_moves:
-            # grown rows: SENTINEL-fill the vacated block (freed blocks
-            # must read empty; slot_rows may go stale there — consumers
-            # mask on dst != SENTINEL)
-            moved = (new_starts != old_starts) & (old_starts >= 0)
-            old_idx = jnp.where(
-                moved[:, None] & (lane < old_caps[:, None]),
-                old_starts[:, None] + lane,
-                cap_e,
+        dst0, wgt0 = dst, wgt
+        counts_all = []
+        d_patches, w_patches = [], []
+        for gi in range(n_g):
+            width, a_pad, k, d_k, moves = groups[gi]
+            # each group ships 3 packed operands, not 9 loose ones — the
+            # per-array jit argument transfer overhead dominates the
+            # bytes at these sizes
+            row_ops, bdl, bw = ops[gi * 3:(gi + 1) * 3]
+            (old_starts, old_caps, new_starts, new_caps, degs,
+             row_ids) = (row_ops[i] for i in range(6))
+            bd, bl = bdl[0], bdl[1]
+            d_rows = util.rows_to_padded(dst0, old_starts, degs, width, SENTINEL)
+            w_rows = util.rows_to_padded(wgt0, old_starts, degs, width, 0.0)
+            d_rows, w_rows, counts = merge_rows(
+                d_rows, w_rows, degs, bd, bw, bl,
+                backend=backend, interpret=interpret, max_holes=d_k,
             )
-            dst = dst.at[old_idx.reshape(-1)].set(
-                SENTINEL, mode="drop", unique_indices=True
+            counts_all.append(counts)
+            if blocks or walk:
+                # padded rows carry row_ids >= nv and drop out
+                lo = lo.at[row_ids].set(new_starts, mode="drop")
+                hi = hi.at[row_ids].set(new_starts + counts, mode="drop")
+            if scatter:
+                lane = jnp.arange(width, dtype=jnp.int32)[None, :]
+                if moves:
+                    moved = (new_starts != old_starts) & (old_starts >= 0)
+                    old_idx = jnp.where(
+                        moved[:, None] & (lane < old_caps[:, None]),
+                        old_starts[:, None] + lane,
+                        cap_e,
+                    )
+                    dst = dst.at[old_idx.reshape(-1)].set(
+                        SENTINEL, mode="drop", unique_indices=True
+                    )
+                ok = new_starts >= 0
+                new_idx = jnp.where(
+                    ok[:, None] & (lane < new_caps[:, None]),
+                    new_starts[:, None] + lane,
+                    cap_e,
+                ).reshape(-1)
+                dst = dst.at[new_idx].set(
+                    d_rows.reshape(-1), mode="drop", unique_indices=True
+                )
+                wgt = wgt.at[new_idx].set(
+                    w_rows.reshape(-1), mode="drop", unique_indices=True
+                )
+                if moves:
+                    slot_rows = slot_rows.at[new_idx].set(
+                        jnp.broadcast_to(
+                            row_ids[:, None], (a_pad, width)
+                        ).reshape(-1),
+                        mode="drop",
+                        unique_indices=True,
+                    )
+            else:
+                d_patches.append(d_rows)
+                w_patches.append(w_rows)
+        if not scatter and n_g:
+            pd = jnp.concatenate(
+                [p.reshape(-1) for p in d_patches]
+                + [jnp.full((1,), SENTINEL, jnp.int32)]
+            )
+            pw = jnp.concatenate(
+                [p.reshape(-1) for p in w_patches]
+                + [jnp.zeros((1,), jnp.float32)]
+            )
+            safe = jnp.clip(slot_map, 0, pd.shape[0] - 1)
+            touched = slot_map >= 0
+            if 0 < rebuild_hi < cap_e:
+                # every touched slot sits below the bump pointer: run the
+                # gather-select over the (quantized) bump prefix only and
+                # splice it back — the SENTINEL tail is never re-read.
+                # ``slot_map`` arrives [rebuild_hi]-sized from the host.
+                pre_d = jnp.where(
+                    touched, pd[safe],
+                    jax.lax.dynamic_slice(dst, (0,), (rebuild_hi,)),
+                )
+                pre_w = jnp.where(
+                    touched, pw[safe],
+                    jax.lax.dynamic_slice(wgt, (0,), (rebuild_hi,)),
+                )
+                dst = jax.lax.dynamic_update_slice(dst, pre_d, (0,))
+                wgt = jax.lax.dynamic_update_slice(wgt, pre_w, (0,))
+                if any_moves:
+                    pre_r = jnp.where(
+                        touched, owner_patch[safe],
+                        jax.lax.dynamic_slice(slot_rows, (0,), (rebuild_hi,)),
+                    )
+                    slot_rows = jax.lax.dynamic_update_slice(
+                        slot_rows, pre_r, (0,)
+                    )
+            else:
+                dst = jnp.where(touched, pd[safe], dst)
+                wgt = jnp.where(touched, pw[safe], wgt)
+                if any_moves:
+                    slot_rows = jnp.where(touched, owner_patch[safe], slot_rows)
+
+        outs = [dst, wgt]
+        if any_moves:
+            outs.append(slot_rows)
+        outs.append(
+            jnp.concatenate(counts_all)
+            if len(counts_all) > 1
+            else counts_all[0]
+        )
+        if walk:
+            from ..slot_walk import ops as _sw  # lazy: avoid import cycle
+
+            steps, nv, edges_hi, nwalks, normalize, engine = walk
+            gidx_p = _sw._prep_gidx(dst, nv, edges_hi)
+            step = _sw.make_blocked_step(
+                gidx_p, lo, hi, nv, engine=engine, interpret=interpret
+            )
+            v = (
+                jnp.asarray(visits0, jnp.float32)
+                if nwalks
+                else jnp.ones((1, nv), jnp.float32)
             )
 
-        # write each merged row over its (possibly new) full block
-        ok = new_starts >= 0
-        new_idx = jnp.where(
-            ok[:, None] & (lane < new_caps[:, None]),
-            new_starts[:, None] + lane,
-            cap_e,
-        ).reshape(-1)
-        dst = dst.at[new_idx].set(
-            d_rows.reshape(-1), mode="drop", unique_indices=True
-        )
-        wgt = wgt.at[new_idx].set(
-            w_rows.reshape(-1), mode="drop", unique_indices=True
-        )
-        if has_moves:
-            # only moved rows need fresh slot owners
-            slot_rows = slot_rows.at[new_idx].set(
-                jnp.broadcast_to(row_ids[:, None], (a, width)).reshape(-1),
-                mode="drop",
-                unique_indices=True,
-            )
-        if has_moves:
-            return dst, wgt, slot_rows, counts
-        return dst, wgt, counts
+            def body(vis, _):
+                nxt = step(vis)
+                if normalize:
+                    nxt = nxt / jnp.maximum(
+                        jnp.max(nxt, axis=1, keepdims=True), 1.0
+                    )
+                return nxt, None
+
+            v, _ = jax.lax.scan(body, v, None, length=steps)
+            outs.append(v if nwalks else v[0])
+        if blocks or walk:
+            outs.extend([lo, hi])
+        return tuple(outs)
 
     if not donate:
         return jax.jit(fn)
-    return jax.jit(fn, donate_argnums=(0, 1, 2) if has_moves else (0, 1))
+    return jax.jit(fn, donate_argnums=(0, 1, 2) if any_moves else (0, 1))
 
 
-def slot_update(
-    dst: jnp.ndarray,
-    wgt: jnp.ndarray,
-    slot_rows: jnp.ndarray,
-    old_starts: jnp.ndarray,
-    old_caps: jnp.ndarray,
-    new_starts: jnp.ndarray,
-    new_caps: jnp.ndarray,
-    degs: jnp.ndarray,
-    row_ids: jnp.ndarray,
-    b_dst: jnp.ndarray,
-    b_wgt: jnp.ndarray,
-    b_del: jnp.ndarray,
-    width: int,
-    backend: str = "auto",
-    interpret: bool = False,
-    donate: bool = True,
-    has_moves: bool = True,
+def fused_apply(
+    dst, wgt, slot_rows, groups,
+    *, scatter: bool, backend: str = "auto", interpret: bool = False,
+    donate: bool = True, slot_map=None, owner_patch=None, rebuild_hi: int = 0,
+    walk=None, lo=None, hi=None, visits0=None,
 ):
-    """Apply one width group of a mixed UpdatePlan to the slotted arena.
+    """Apply EVERY width group of a plan in one dispatch (DESIGN.md §12).
 
-    ``width`` is the group's static pow-2 row class (>= every member's
-    ``new_caps``; callers floor it at ``width_floor(backend)``).  All row
-    operands are [A] (A pow-2; pad rows carry ``old_starts == new_starts
-    == -1`` and drop out), run operands are [A, K]; numpy operands are
-    fine — jit's argument path transfers them cheaper than explicit
-    ``device_put`` calls.  ``has_moves=False`` elides the block-move
-    writes (old-block SENTINEL fill + slot-owner refresh) for groups
-    where no row changed class — then ``slot_rows`` is read-only and
-    passes through untouched (never donated, never copied: the caller's
-    array object survives, which is what makes per-buffer COW free for
-    non-moving updates).  Returns ``(dst, wgt, slot_rows, counts)`` with
-    ``counts`` the merged live length per row.
+    ``groups`` is ``[(width, a_pad, k, d_k, moves, operands), ...]``
+    with ``operands`` the packed 3-tuple ``(row_ops [6, A] int32 =
+    old_starts/old_caps/new_starts/new_caps/degs/row_ids, b_dstdel
+    [2, A, K] int32, b_wgt [A, K] f32)`` (numpy fine — jit's argument
+    path transfers them; packing matters because per-array transfer
+    overhead dominates at these sizes) and ``d_k`` the group's (pow-2)
+    delete-run ceiling, bounding the merge's hole-compaction window.
+    ``scatter=False`` takes the host-mapped gather rebuild
+    (``host_patch_layout`` supplies ``slot_map``/``owner_patch``);
+    ``rebuild_hi`` (static, quantized to the caller's bump lattice)
+    bounds that pass to the allocated prefix so the SENTINEL tail is
+    never re-read.  ``walk=(steps, nv, edges_hi, nwalks, normalize,
+    engine)`` fuses the k-step interval walk into the same program, fed
+    by the in-program-updated [lo, hi) geometry; passing ``lo``/``hi``
+    WITHOUT ``walk`` still updates and returns them (interval-cache
+    refresh for the shared arena image).
+
+    Returns ``(dst, wgt, slot_rows, counts_list, extra)`` where
+    ``extra`` is ``None``, ``(lo2, hi2)`` (blocks-only), or
+    ``(visits, lo2, hi2)`` (fused walk).
     """
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
-    out = _jit_apply(int(width), backend, interpret, donate, bool(has_moves))(
-        dst, wgt, slot_rows,
-        old_starts, old_caps, new_starts, new_caps, degs, row_ids,
-        b_dst, b_wgt, b_del,
+    gkey = tuple(
+        (int(w), int(a), int(k), int(dk), bool(mv))
+        for w, a, k, dk, mv, _ in groups
     )
-    if has_moves:
-        return out
-    d, w, counts = out
-    return d, w, slot_rows, counts
+    any_moves = any(g[4] for g in gkey)
+    blocks = walk is None and lo is not None and hi is not None
+    wkey = () if walk is None else tuple(walk)
+    fn = _jit_fused(
+        gkey, bool(scatter), int(rebuild_hi), any_moves, donate, backend,
+        interpret, blocks, wkey,
+    )
+    ops_flat = [o for *_hdr, ops9 in groups for o in ops9]
+    dummy = np.zeros(1, np.int32)
+    out = fn(
+        dst, wgt, slot_rows,
+        dummy if slot_map is None else slot_map,
+        dummy if owner_patch is None else owner_patch,
+        dummy if lo is None else lo,
+        dummy if hi is None else hi,
+        np.zeros((1, 1), np.float32) if visits0 is None else visits0,
+        *ops_flat,
+    )
+    i = 2
+    if any_moves:
+        new_rows = out[i]
+        i += 1
+    else:
+        new_rows = slot_rows
+    # one concatenated counts sync, split back per group on host
+    counts_cat = np.asarray(out[i])
+    i += 1
+    counts, at = [], 0
+    for _w, a_pad, *_r in gkey:
+        counts.append(counts_cat[at:at + a_pad])
+        at += a_pad
+    if walk is not None:
+        extra = tuple(out[i:i + 3])
+    elif blocks:
+        extra = tuple(out[i:i + 2])
+    else:
+        extra = None
+    return out[0], out[1], new_rows, counts, extra

@@ -28,6 +28,39 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _cumsum_kernel(vals_ref, out_ref):
+    v = vals_ref[...]                       # [1, EB]
+    eb = v.shape[-1]
+    # inclusive prefix within the tile as ONE MXU matmul against the
+    # upper-triangular ones matrix: out[j] = Σ_{k<=j} v[k]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (eb, eb), 0)
+        <= jax.lax.broadcasted_iota(jnp.int32, (eb, eb), 1)
+    ).astype(jnp.float32)
+    out_ref[...] = jnp.dot(v, tri, preferred_element_type=jnp.float32)
+
+
+def tile_cumsum(vals: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """Per-tile inclusive cumsum: vals [T, EB] -> [T, EB] (MXU matmul).
+
+    The intra-tile level of the hierarchical walk prefix (DESIGN.md §12):
+    each 128-slot tile's running sum is one [1,128]@[128,128] triangular
+    matmul, so the scatter-free interval walk needs no per-slot owner
+    operand on the Pallas backend either — the inter-tile base scan and
+    the [lo, hi) differencing stay in the XLA glue (ops.py).  Plain
+    function (not jitted) so callers can inline it into fused programs.
+    """
+    t, eb = vals.shape
+    return pl.pallas_call(
+        _cumsum_kernel,
+        grid=(t,),
+        in_specs=[pl.BlockSpec((1, eb), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, eb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, eb), jnp.float32),
+        interpret=interpret,
+    )(vals)
+
+
 def _kernel(rows_ref, vals_ref, part_ref, rank_ref, *, sink: int):
     rows = rows_ref[0]                      # [EB]
     vals = vals_ref[...]                    # [1, EB]

@@ -2,10 +2,18 @@
 
 Two jitted backends behind one dispatcher:
 
-  * ``pallas``  — the MXU tile kernel (kernel.py); ``interpret=True`` runs
-    the same program on CPU for parity tests.
-  * ``xla``     — identical prefix/tile semantics via a plain segment-sum
-    (the fast path off-TPU, and the shape the Pallas kernel must match).
+  * ``pallas``  — the MXU tile kernels (kernel.py); ``interpret=True`` runs
+    the same programs on CPU for parity tests.
+  * ``xla``     — identical prefix/tile semantics via plain jnp ops
+    (the fast path off-TPU, and the shape the Pallas kernels must match).
+
+When the caller supplies per-vertex [lo, hi) block intervals (every
+``WalkImage`` does), BOTH backends use the scatter-free hierarchical
+prefix formulation (``make_blocked_step``): the per-slot ``slot_rows``
+operand is folded into the interval geometry and each step moves only
+the gather plane plus O(V) interval reads — roughly half the bytes of
+the segment-sum formulation.  The legacy rows-carrying paths remain for
+interval-less callers (raw arenas, the seed baseline).
 
 Both only process ``edges_hi`` slots (the arena's bump prefix, rounded up
 to a power of two by the caller so the jit cache stays O(log CAP_E))
@@ -132,32 +140,62 @@ def _comp_combine(l, r):
     return s, l[1] + r[1] + e
 
 
-def _comp_scan(x):
+def _comp_scan(x, axis=0):
     """Compensated inclusive scan: returns (hi, lo) with hi+lo ≈ exact."""
-    return jax.lax.associative_scan(_comp_combine, (x, jnp.zeros_like(x)))
+    return jax.lax.associative_scan(
+        _comp_combine, (x, jnp.zeros_like(x)), axis=axis
+    )
 
 
-def _make_blocked_step(gidx_p, block_lo, block_hi, num_vertices: int):
-    """Build the scatter-free interval walk step (shared single/multi).
+def _prep_gidx(dst, num_vertices: int, edges_hi: int):
+    """Tile-padded gather indices, masked from ``dst`` ALONE.
+
+    Dead slots carry ``dst == SENTINEL`` (arena/image invariant), so the
+    interval walk needs no per-slot owner operand at all — ``slot_rows``
+    is folded into the [lo, hi) block geometry and the step loop's only
+    per-slot operand is this one int32 index plane (DESIGN.md §12).
+    """
+    e = min(int(edges_hi), dst.shape[0])
+    t = max(-(-e // EB), 1)
+    e_pad = t * EB
+    d = dst[:e]
+    gidx = jnp.where(
+        d == SENTINEL, num_vertices, jnp.clip(d, 0, num_vertices - 1)
+    ).astype(jnp.int32)
+    return (
+        jnp.full((e_pad,), num_vertices, jnp.int32)
+        .at[:e]
+        .set(gidx)
+        .reshape(t, EB)
+    )
+
+
+def make_blocked_step(gidx_p, block_lo, block_hi, num_vertices: int, *,
+                      engine: str = "xla", interpret: bool = False):
+    """Build the scatter-free interval walk step (batched: [B, V] -> [B, V]).
 
     Each vertex's slots are one contiguous interval [block_lo, block_hi)
     (§2 invariant) and dead slots gather 0.0, so a step reduces to
     ``P[hi] - P[lo]`` over the running prefix sum of the gathered values
-    — gather + cumsum + a few [V] gathers, no scatter unit needed.
+    — gather + prefix + a few [V] gathers, no scatter unit needed.
     Rows without a block pass lo == hi == 0.
 
+    The prefix is *hierarchical* (DESIGN.md §12): an inclusive cumsum
+    within each 128-slot tile plus a TwoSum-compensated scan over the T
+    tile totals, with the difference assembled per part so the large
+    bases are never rounded into the result.  ``engine`` picks the
+    intra-tile level: ``xla`` (jnp.cumsum) or ``pallas`` (one triangular
+    MXU matmul per tile, ``kernel.tile_cumsum``) — either way the step's
+    per-slot operand set is just the gather plane, no slot_rows.
+
     A naive global f32 cumsum loses the row sum to cancellation once the
-    total dwarfs it (err ~ ulp(total)).  The prefix is therefore kept in
-    two levels: a plain cumsum *within* each 128-slot tile (row-local
-    magnitudes) plus a TwoSum-compensated scan over the T tile totals,
-    and the difference is assembled per part so the large bases are
-    never rounded into the result.  The residual envelope is the
-    *intra-tile* partial, ~ulp(sum of one tile): on skewed social graphs
-    a hub row sharing its tile with ~1e10-magnitude partials can see
-    ~2e-4 relative error at high step counts (measured; fully
-    compensating or f64-ing the intra level costs 2-10x the whole step
-    — not worth it for a wall-time benchmark whose 42-step counts
-    saturate f32 by design).
+    total dwarfs it (err ~ ulp(total)).  The residual envelope here is
+    the *intra-tile* partial, ~ulp(sum of one tile): on skewed social
+    graphs a hub row sharing its tile with ~1e10-magnitude partials can
+    see ~2e-4 relative error at high step counts (measured; fully
+    compensating or f64-ing the intra level costs 2-10x the whole step —
+    not worth it for a wall-time benchmark whose 42-step counts saturate
+    f32 by design).
     """
     t = gidx_p.shape[0]
     e_pad = t * EB
@@ -169,29 +207,46 @@ def _make_blocked_step(gidx_p, block_lo, block_hi, num_vertices: int):
     q_hi = jnp.minimum(hi // EB, t - 1)
     r_lo = lo - q_lo * EB
     r_hi = hi - q_hi * EB
-    zero = jnp.zeros((1,), jnp.float32)
-    zcol = jnp.zeros((t, 1), jnp.float32)
+    # prefix position (q, r) reads the tile's INCLUSIVE cumsum at lane
+    # r-1, or 0.0 at a tile start — no [t, EB+1] exclusive-prefix copy
+    # is ever materialized in the loop
+    z_lo = r_lo == 0
+    z_hi = r_hi == 0
+    i_lo = q_lo * EB + jnp.maximum(r_lo - 1, 0)
+    i_hi = q_hi * EB + jnp.maximum(r_hi - 1, 0)
 
-    def step(visits):  # [num_vertices] -> [num_vertices]
-        vals = jnp.concatenate([visits, zero])[gidx_p]   # [t, EB]; sink -> 0.0
-        intra = jnp.concatenate([zcol, jnp.cumsum(vals, axis=1)], axis=1)
-        bh, bl = _comp_scan(intra[:, -1])                # inclusive tile bases
-        bh = jnp.concatenate([zero, bh[:-1]])            # -> exclusive
-        bl = jnp.concatenate([zero, bl[:-1]])
-        intra_f = intra.reshape(-1)
-        ih = intra_f[q_hi * (EB + 1) + r_hi]
-        il = intra_f[q_lo * (EB + 1) + r_lo]
-        return (bh[q_hi] - bh[q_lo]) + ((ih - il) + (bl[q_hi] - bl[q_lo]))
+    def step(visits):  # [B, num_vertices] -> [B, num_vertices]
+        b = visits.shape[0]
+        zrow = jnp.zeros((b, 1), jnp.float32)
+        vals = jnp.concatenate([visits, zrow], axis=1)[:, gidx_p]  # [B,t,EB]
+        if engine == "pallas":
+            incl = _kernel.tile_cumsum(
+                vals.reshape(b * t, EB), interpret=interpret
+            ).reshape(b, t, EB)
+        else:
+            incl = jnp.cumsum(vals, axis=2)
+        bh, bl = _comp_scan(incl[:, :, -1], axis=1)  # inclusive tile bases
+        bh = jnp.concatenate([zrow, bh[:, :-1]], axis=1)  # -> exclusive
+        bl = jnp.concatenate([zrow, bl[:, :-1]], axis=1)
+        incl_f = incl.reshape(b, -1)
+        ih = jnp.where(z_hi, 0.0, jnp.take(incl_f, i_hi, axis=1))
+        il = jnp.where(z_lo, 0.0, jnp.take(incl_f, i_lo, axis=1))
+        return (jnp.take(bh, q_hi, axis=1) - jnp.take(bh, q_lo, axis=1)) + (
+            (ih - il)
+            + (jnp.take(bl, q_hi, axis=1) - jnp.take(bl, q_lo, axis=1))
+        )
 
     return step
 
 
 @functools.partial(
-    jax.jit, static_argnames=("steps", "num_vertices", "edges_hi", "normalize")
+    jax.jit,
+    static_argnames=(
+        "steps", "num_vertices", "edges_hi", "normalize", "engine", "interpret"
+    ),
 )
 def slot_walk_blocked(
     dst: jnp.ndarray,
-    slot_rows: jnp.ndarray,
     block_lo: jnp.ndarray,
     block_hi: jnp.ndarray,
     steps: int,
@@ -199,24 +254,32 @@ def slot_walk_blocked(
     *,
     edges_hi: int,
     normalize: bool = False,
+    engine: str = "xla",
+    interpret: bool = False,
 ) -> jnp.ndarray:
     """Scatter-free walk step via block-interval prefix sums.
 
-    See ``_make_blocked_step`` for the formulation and the two-level
-    TwoSum compensation that keeps skewed-magnitude rows exact.
+    See ``make_blocked_step`` for the hierarchical two-level prefix and
+    the TwoSum compensation that keeps skewed-magnitude rows exact.  No
+    ``slot_rows`` operand: dead slots are masked from ``dst`` alone.
     """
-    _, gidx_p = _prep(dst, slot_rows, num_vertices, edges_hi)
-    step = _make_blocked_step(gidx_p, block_lo, block_hi, num_vertices)
-    visits = jnp.ones((num_vertices,), jnp.float32)
+    gidx_p = _prep_gidx(dst, num_vertices, edges_hi)
+    step = make_blocked_step(
+        gidx_p, block_lo, block_hi, num_vertices,
+        engine=engine, interpret=interpret,
+    )
+    visits = jnp.ones((1, num_vertices), jnp.float32)
 
     def body(visits, _):
         nxt = step(visits)
         if normalize:
-            nxt = nxt / jnp.maximum(jnp.max(nxt), 1.0)
+            nxt = nxt / jnp.maximum(
+                jnp.max(nxt, axis=1, keepdims=True), 1.0
+            )
         return nxt, None
 
     visits, _ = jax.lax.scan(body, visits, None, length=steps)
-    return visits
+    return visits[0]
 
 
 # ---------------------------------------------------------------------------
@@ -263,11 +326,13 @@ def slot_walk_multi_xla(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("steps", "num_vertices", "edges_hi", "normalize")
+    jax.jit,
+    static_argnames=(
+        "steps", "num_vertices", "edges_hi", "normalize", "engine", "interpret"
+    ),
 )
 def slot_walk_multi_blocked(
     dst: jnp.ndarray,
-    slot_rows: jnp.ndarray,
     block_lo: jnp.ndarray,
     block_hi: jnp.ndarray,
     visits0: jnp.ndarray,
@@ -276,18 +341,24 @@ def slot_walk_multi_blocked(
     *,
     edges_hi: int,
     normalize: bool = False,
+    engine: str = "xla",
+    interpret: bool = False,
 ) -> jnp.ndarray:
     """Batched scatter-free prefix-sum walk: visits0 [B, V] -> [B, V].
 
-    The single-walk step (``_make_blocked_step``) is vmapped over the
-    batch axis inside one jitted scan — the interval index arithmetic is
-    shared, only the gathered values and prefix sums carry a batch dim.
+    The blocked step is natively batched — the interval index arithmetic
+    is shared, only the gathered values and prefix sums carry a batch
+    dim (the Pallas intra-tile cumsum sees B*T independent tiles of the
+    same kernel).
     """
-    _, gidx_p = _prep(dst, slot_rows, num_vertices, edges_hi)
-    step = _make_blocked_step(gidx_p, block_lo, block_hi, num_vertices)
+    gidx_p = _prep_gidx(dst, num_vertices, edges_hi)
+    step = make_blocked_step(
+        gidx_p, block_lo, block_hi, num_vertices,
+        engine=engine, interpret=interpret,
+    )
 
     def body(visits, _):
-        nxt = jax.vmap(step)(visits)
+        nxt = step(visits)
         if normalize:
             nxt = nxt / jnp.maximum(
                 jnp.max(nxt, axis=1, keepdims=True), 1.0
@@ -388,22 +459,39 @@ def slot_walk(
                 f"{visits0.shape}"
             )
         visits0 = jnp.asarray(visits0, jnp.float32)
+        if block_lo is not None and block_hi is not None:
+            if backend not in ("pallas", "xla"):
+                raise ValueError(f"unknown slot_walk backend: {backend!r}")
+            return slot_walk_multi_blocked(
+                dst, block_lo, block_hi, visits0, steps,
+                num_vertices, edges_hi=edges_hi, normalize=normalize,
+                engine=backend, interpret=interpret,
+            )
         if backend == "pallas":
             return slot_walk_multi_pallas(
                 dst, slot_rows, visits0, steps, num_vertices,
                 edges_hi=edges_hi, normalize=normalize, interpret=interpret,
             )
         if backend == "xla":
-            if block_lo is not None and block_hi is not None:
-                return slot_walk_multi_blocked(
-                    dst, slot_rows, block_lo, block_hi, visits0, steps,
-                    num_vertices, edges_hi=edges_hi, normalize=normalize,
-                )
             return slot_walk_multi_xla(
                 dst, slot_rows, visits0, steps, num_vertices,
                 edges_hi=edges_hi, normalize=normalize,
             )
         raise ValueError(f"unknown slot_walk backend: {backend!r}")
+    if block_lo is not None and block_hi is not None:
+        if backend not in ("pallas", "xla"):
+            raise ValueError(f"unknown slot_walk backend: {backend!r}")
+        return slot_walk_blocked(
+            dst,
+            block_lo,
+            block_hi,
+            steps,
+            num_vertices,
+            edges_hi=edges_hi,
+            normalize=normalize,
+            engine=backend,
+            interpret=interpret,
+        )
     if backend == "pallas":
         return slot_walk_pallas(
             dst,
@@ -415,17 +503,6 @@ def slot_walk(
             interpret=interpret,
         )
     if backend == "xla":
-        if block_lo is not None and block_hi is not None:
-            return slot_walk_blocked(
-                dst,
-                slot_rows,
-                block_lo,
-                block_hi,
-                steps,
-                num_vertices,
-                edges_hi=edges_hi,
-                normalize=normalize,
-            )
         return slot_walk_xla(
             dst,
             slot_rows,
@@ -450,14 +527,13 @@ def slot_walk_image(
 
     The image supplies the full operand set — packed buffers, quantized
     prefix bound, per-vertex block intervals — so every representation's
-    walk lands on the same engine with the same jit-shape policy.  The
-    interval arrays only feed the off-TPU scatter-free path; the Pallas
-    backend reads just the packed buffers.
+    walk lands on the same engine with the same jit-shape policy.  All
+    backends now take the scatter-free interval formulation (DESIGN.md
+    §12): ``slot_rows`` is folded into the [lo, hi) geometry, so the
+    step loop's per-slot operand set is the gather plane alone — Pallas
+    runs the intra-tile prefix level on the MXU, XLA on the vector unit.
     """
-    use_blocks = backend == "xla" or (
-        backend == "auto" and jax.default_backend() != "tpu"
-    )
-    block_lo, block_hi = image.device_blocks() if use_blocks else (None, None)
+    block_lo, block_hi = image.device_blocks()
     return slot_walk(
         image.dst,
         image.rows,

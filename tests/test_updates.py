@@ -266,9 +266,7 @@ def test_edgebatch_rejects_wgt_length_mismatch():
 
 def test_digraph_scatter_writeback_path(monkeypatch):
     """Force the per-group scatter write-back (the TPU/big-arena path)."""
-    import repro.core.digraph as dg
-
-    monkeypatch.setattr(dg, "_REBUILD_MAX_CAP", 0)
+    monkeypatch.setattr(su_ops, "REBUILD_MAX_CAP", 0)
     rng = np.random.default_rng(41)
     n = 48
     src, dst = synthetic.uniform_edges(rng, n, 300)
@@ -313,3 +311,47 @@ def test_digraph_apply_net_dm_sign():
     g, dm = g.apply(plan)
     assert dm == -1  # +1 insert, -2 deletes
     assert g.m == 2
+
+
+def test_coo_galloping_merge_mixed_oracle():
+    """The sort-free SortedCOO rebuild (DESIGN.md §12): deletes, weight
+    upserts and interleaved new keys land exactly where the old
+    full-re-sort put them, across several churn rounds."""
+    rng = np.random.default_rng(77)
+    n = 40
+    src, dst = synthetic.uniform_edges(rng, n, 220)
+    c = from_coo(src, dst, n=n)
+    g = REPRESENTATIONS["coo"].from_csr(c)
+    sets = [set(x) for x in c.to_edge_sets()]
+    for _ in range(4):
+        ins = edgebatch.random_insertions(rng, n, 25)
+        dele = edgebatch.random_deletions(rng, g.to_csr(), 25)
+        plan = updates.plan_update(inserts=ins, deletes=dele)
+        g, _ = g.apply(plan)
+        sets = _apply_oracle(sets, plan)
+        got = g.to_edge_sets()
+        while len(got) < len(sets):
+            got.append(set())
+        assert got[: len(sets)] == sets
+        # the rebuilt buffer stays (src, dst)-lexsorted with SENTINEL tail
+        s = np.asarray(g.src)
+        d = np.asarray(g.dst)
+        keys = (s[: g.m].astype(np.int64) << 32) | d[: g.m].astype(np.int64)
+        assert (np.diff(keys) > 0).all()
+        assert (s[g.m :] == SENT).all()
+
+
+def test_coo_merge_weight_upsert_in_place():
+    """Re-inserting an existing edge replaces its weight, no duplicate."""
+    g = REPRESENTATIONS["coo"].from_csr(
+        from_coo([0, 0, 1], [1, 2, 0], [1.0, 2.0, 3.0], n=3)
+    )
+    g, dm = g.apply(
+        updates.plan_update(
+            inserts=edgebatch.from_arrays([0], [2], [9.5])
+        )
+    )
+    assert dm == 0 and g.m == 3
+    s, d, w = np.asarray(g.src), np.asarray(g.dst), np.asarray(g.wgt)
+    i = int(np.nonzero((s == 0) & (d == 2))[0][0])
+    assert w[i] == np.float32(9.5)
