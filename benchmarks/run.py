@@ -110,6 +110,7 @@ def main() -> None:
         bench_alloc,
         bench_clone,
         bench_load,
+        bench_recovery,
         bench_stream,
         bench_traversal,
         bench_update,
@@ -122,6 +123,7 @@ def main() -> None:
         "traversal": bench_traversal.run,  # paper Figs. 9-10
         "stream": bench_stream.run,      # paper Figs. 9-10, interleaved
         "alloc": bench_alloc.run,        # paper Fig. 11
+        "recovery": bench_recovery.run,  # durability pipeline (§13)
     }
     if args.only and args.only not in suites:
         ap.error(f"unknown suite {args.only!r}; choose from {sorted(suites)}")

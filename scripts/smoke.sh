@@ -5,6 +5,7 @@
 #  * traversal (slot_walk vs the seed digraph_flat path) -> BENCH_traversal.json
 #  * update    (batch insert/delete, fixed pre-cloned timing) -> BENCH_update.json
 #  * stream    (interleaved mixed-batch apply + walk rounds) -> BENCH_stream.json
+#  * recovery  (WAL/checkpoint/replay + fallback chain, §13) -> BENCH_recovery.json
 # so perf regressions on every paper task (load, clone, updates,
 # traversal) show up in every PR's diff.
 set -euo pipefail
@@ -55,4 +56,32 @@ if bad:
 print("# stream proof ok: 1-dispatch flush→walk, host-free second walk")
 EOF
 
-echo "== BENCH_{load,clone,traversal,update,stream}.json written =="
+echo "== recovery benchmark (durability pipeline, DESIGN.md §13) =="
+python -m benchmarks.run --only recovery --json BENCH_recovery.json
+
+echo "== recovery proof fields (WAL overhead + dispatch invariance) =="
+# journaling must stay off the critical path: the WAL-first stream round
+# pays <15% over the journal-free stream, and with no fault armed the
+# fused flush→walk round under the durability wrapper is still exactly
+# ONE device dispatch (the fallback chain must not change steady-state
+# dispatch behaviour).
+python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_recovery.json"))["recovery"]
+ov = [r for r in rows if r["name"].endswith("/wal_overhead")]
+if not ov:
+    sys.exit("recovery suite missing the wal_overhead row")
+bad = [
+    f"{r['name']}: overhead_pct={r.get('overhead_pct')} "
+    f"round_dispatches={r.get('round_dispatches')}"
+    for r in ov
+    if float(r.get("overhead_pct", 0.0)) >= 15.0
+    or int(r.get("round_dispatches", 1)) != 1
+]
+if bad:
+    sys.exit("recovery proof regressed (WAL overhead >= 15% or steady-state "
+             "dispatches != 1): " + "; ".join(bad))
+print("# recovery proof ok: WAL overhead < 15%, 1-dispatch durable rounds")
+EOF
+
+echo "== BENCH_{load,clone,traversal,update,stream,recovery}.json written =="

@@ -39,11 +39,35 @@ def save(
     shard_id: int = 0,
 ) -> str:
     """Write checkpoint for ``step``; atomic rename; rotate old ones."""
+    arrays, _ = _flatten_with_paths(tree)
+    return save_arrays(ckpt_dir, step, arrays, keep=keep, shard_id=shard_id)
+
+
+def save_arrays(
+    ckpt_dir: str,
+    step: int,
+    arrays: dict,
+    *,
+    keep: int = 3,
+    shard_id: int = 0,
+) -> str:
+    """Write a flat ``{key: ndarray}`` checkpoint (the graph-state path).
+
+    Same atomic-rename protocol as :func:`save`, without requiring the
+    state to be a pytree — representations hand over their
+    ``state_tree()`` dicts directly.  The ``checkpoint.pre_rename``
+    injection point simulates a crash between the tmp-dir write and the
+    commit rename; like a real crash it leaves the ``.tmp_ckpt_*``
+    debris in place (recovery sweeps it via :func:`clean_stale`), which
+    is why only the SimulatedCrash branch skips cleanup below.
+    """
+    from ..runtime import faultinject  # lazy: checkpoint stays import-light
+
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=ckpt_dir)
     try:
-        arrays, _ = _flatten_with_paths(tree)
+        arrays = {k: np.asarray(v) for k, v in arrays.items()}
         np.savez(os.path.join(tmp, f"shard_{shard_id}.npz"), **arrays)
         manifest = {
             "step": step,
@@ -54,14 +78,64 @@ def save(
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        faultinject.fire("checkpoint.pre_rename")
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomicity: rename is the commit point
+    except faultinject.SimulatedCrash:
+        raise  # crashed writers don't clean up after themselves
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
     _rotate(ckpt_dir, keep)
     return final
+
+
+def restore_arrays(ckpt_dir: str, *, step: Optional[int] = None) -> tuple[dict, int]:
+    """Manifest-driven flat restore — no ``like`` template required.
+
+    The recovery path has no live object to mirror (the process that
+    owned the shapes is gone), so the manifest is the source of truth:
+    every key must load with exactly its recorded shape and dtype.
+    Returns ``({key: ndarray}, step)``.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "shard_0.npz"), allow_pickle=False)
+    if set(data.files) != set(manifest["keys"]):
+        raise ValueError(
+            f"checkpoint {d}: npz keys disagree with manifest"
+        )
+    out = {}
+    for k in manifest["keys"]:
+        v = data[k]
+        if list(v.shape) != manifest["shapes"][k] or str(v.dtype) != manifest["dtypes"][k]:
+            raise ValueError(
+                f"checkpoint {d}: {k} is {v.shape}/{v.dtype}, manifest says "
+                f"{manifest['shapes'][k]}/{manifest['dtypes'][k]}"
+            )
+        out[k] = v
+    return out, int(step)
+
+
+def clean_stale(ckpt_dir: str) -> list[str]:
+    """Sweep ``.tmp_ckpt_*`` debris left by writers that died pre-commit.
+
+    Recovery calls this first: an interrupted checkpoint never renamed
+    into place, so its tmp dir is garbage by construction.
+    """
+    removed = []
+    if os.path.isdir(ckpt_dir):
+        for name in os.listdir(ckpt_dir):
+            if name.startswith(".tmp_ckpt_"):
+                shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+                removed.append(name)
+    return removed
 
 
 def _rotate(ckpt_dir: str, keep: int) -> None:

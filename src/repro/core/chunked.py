@@ -214,6 +214,7 @@ class ChunkedGraph:
     def _apply_plan(self, plan: updates.UpdatePlan) -> int:
         if plan.n_ops == 0:
             return 0
+        plan.validate()  # corrupt plans (WAL replay) fail loudly (§13)
         if plan.n_ins:
             self._reserve_vertices(plan.max_insert_vertex() + 1)
         # shared out-of-range filter (delete-only runs at unseen rows)
@@ -320,6 +321,43 @@ class ChunkedGraph:
             _sealed=set(),
             _image=None,
             **dict(zip(self._PAYLOAD, copies)),
+        )
+
+    # -- durable state (checkpoint/restore, DESIGN.md §13) ---------------
+    def state_tree(self) -> dict:
+        lens = np.array([ids.shape[0] for ids in self.page_table], np.int64)
+        flat = (
+            np.concatenate(self.page_table)
+            if self.page_table
+            else np.empty(0, np.int64)
+        ).astype(np.int64)
+        return {
+            "pages_dst": np.asarray(self.pages_dst),
+            "pages_wgt": np.asarray(self.pages_wgt),
+            "page_owner": np.asarray(self.page_owner),
+            "table_lens": lens,
+            "table_flat": flat,
+            "degrees": self.degrees.copy(),
+            "n": np.int64(self.n),
+            "m": np.int64(self.m),
+            "next_page": np.int64(self.next_page),
+        }
+
+    @classmethod
+    def from_state_tree(cls, t: dict) -> "ChunkedGraph":
+        lens = np.asarray(t["table_lens"], np.int64)
+        flat = np.asarray(t["table_flat"], np.int64)
+        bounds = np.cumsum(lens)[:-1]
+        table = [a.copy() for a in np.split(flat, bounds)] if lens.shape[0] else []
+        return cls(
+            pages_dst=jnp.asarray(t["pages_dst"]),
+            pages_wgt=jnp.asarray(t["pages_wgt"]),
+            page_owner=jnp.asarray(t["page_owner"]),
+            page_table=table,
+            degrees=np.asarray(t["degrees"], np.int64).copy(),
+            n=int(t["n"]),
+            m=int(t["m"]),
+            next_page=int(t["next_page"]),
         )
 
     def vacuum(self) -> None:

@@ -139,6 +139,7 @@ class SortedCOO:
         del inplace  # rebuild-only representation
         if plan.n_ops == 0:
             return self, 0
+        plan.validate()  # corrupt plans (WAL replay) fail loudly (§13)
         ins = plan.insert_batch()
         dele = plan.delete_batch()
         n = max(self.n, plan.max_insert_vertex() + 1)
@@ -167,6 +168,26 @@ class SortedCOO:
 
     def snapshot(self) -> "SortedCOO":
         return dataclasses.replace(self, _image=None)
+
+    # -- durable state (checkpoint/restore, DESIGN.md §13) ---------------
+    def state_tree(self) -> dict:
+        return {
+            "src": np.asarray(self.src),
+            "dst": np.asarray(self.dst),
+            "wgt": np.asarray(self.wgt),
+            "n": np.int64(self.n),
+            "m": np.int64(self.m),
+        }
+
+    @classmethod
+    def from_state_tree(cls, t: dict) -> "SortedCOO":
+        return cls(
+            jnp.asarray(t["src"]),
+            jnp.asarray(t["dst"]),
+            jnp.asarray(t["wgt"]),
+            int(t["n"]),
+            int(t["m"]),
+        )
 
     def to_csr(self) -> csr_mod.CSR:
         s = np.asarray(self.src)[: self.m]

@@ -323,6 +323,7 @@ class DiGraph:
         per-buffer and happens inside ``_apply_impl`` once it knows which
         buffers the batch actually writes.
         """
+        plan.validate()  # corrupt plans (WAL replay) fail loudly (§13)
         g = self if inplace else self.clone()
         dm = g._apply_impl(plan, donate=True)
         return g, dm
@@ -566,6 +567,66 @@ class DiGraph:
             _sealed={"dst", "wgt", "slot_rows"},
             _image=None,  # the image aliases THIS handle's host metadata
         )
+
+    # -- durable state (checkpoint/restore, DESIGN.md §13) ---------------
+    def state_tree(self) -> dict:
+        """Flat array dict of the FULL canonical state — bit-exact restore.
+
+        Includes the arena geometry (bump pointer and the free lists in
+        their stack order): a restored graph must hand out the same
+        blocks the original would have, or replayed updates diverge from
+        the uncrashed twin at the first grow.
+        """
+        lay = self.layout
+        sizes = sorted(k for k, v in lay.freed.items() if v)
+        return {
+            "degrees": self.degrees.copy(),
+            "capacities": self.capacities.copy(),
+            "starts": self.starts.copy(),
+            "exists": self.exists.copy(),
+            "dst": np.asarray(self.dst),
+            "wgt": np.asarray(self.wgt),
+            "slot_rows": np.asarray(self.slot_rows),
+            "n": np.int64(self.n),
+            "m": np.int64(self.m),
+            "arena/capacity": np.int64(lay.capacity),
+            "arena/bump": np.int64(lay.bump),
+            "arena/freed_sizes": np.asarray(sizes, np.int64),
+            "arena/freed_counts": np.asarray(
+                [len(lay.freed[s]) for s in sizes], np.int64
+            ),
+            "arena/freed_starts": np.asarray(
+                [st for s in sizes for st in lay.freed[s]], np.int64
+            ),
+        }
+
+    @classmethod
+    def from_state_tree(cls, t: dict) -> "DiGraph":
+        lay = arena.ArenaLayout(
+            capacity=int(t["arena/capacity"]), bump=int(t["arena/bump"])
+        )
+        at = 0
+        starts_f = np.asarray(t["arena/freed_starts"], np.int64)
+        for s, c in zip(
+            np.asarray(t["arena/freed_sizes"], np.int64).tolist(),
+            np.asarray(t["arena/freed_counts"], np.int64).tolist(),
+        ):
+            lay.freed[int(s)] = [int(x) for x in starts_f[at:at + c]]
+            at += c
+        g = cls(
+            degrees=np.asarray(t["degrees"], np.int64).copy(),
+            capacities=np.asarray(t["capacities"], np.int64).copy(),
+            starts=np.asarray(t["starts"], np.int64).copy(),
+            exists=np.asarray(t["exists"], bool).copy(),
+            layout=lay,
+            n=int(t["n"]),
+            m=int(t["m"]),
+            dst=jnp.asarray(t["dst"]),
+            wgt=jnp.asarray(t["wgt"]),
+            slot_rows=jnp.asarray(t["slot_rows"]),
+        )
+        g._refresh_occupancy()
+        return g
 
     def to_csr(self) -> csr_mod.CSR:
         """Compact CSR export, memoized until the next mutation."""

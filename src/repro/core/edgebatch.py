@@ -126,6 +126,10 @@ def from_arrays(
         raise ValueError(
             f"wgt length mismatch: {wgt.shape[0]} vs {src.shape[0]} edges"
         )
+    if wgt.shape[0] and not bool(np.isfinite(wgt).all()):
+        # NaN/inf weights would survive every merge unnoticed (no kernel
+        # compares them) and poison walk sums far from the call site
+        raise ValueError("wgt: non-finite edge weight")
     if symmetric:
         src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
         wgt = np.concatenate([wgt, wgt])

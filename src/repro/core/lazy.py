@@ -180,6 +180,7 @@ class LazyCSR:
         """
         if plan.n_ops == 0:
             return self, 0
+        plan.validate()  # corrupt plans (WAL replay) fail loudly (§13)
         g = self if inplace else self.clone()
         dm = 0
         if plan.n_del:
@@ -295,6 +296,44 @@ class LazyCSR:
             offsets=self.offsets.copy(),
             _sealed=set(self._PAYLOAD),
             _image=None,  # images are handle-private (patched in place)
+        )
+
+    # -- durable state (checkpoint/restore, DESIGN.md §13) ---------------
+    def state_tree(self) -> dict:
+        return {
+            "base_rows": np.asarray(self.base_rows),
+            "base_dst": np.asarray(self.base_dst),
+            "base_wgt": np.asarray(self.base_wgt),
+            "offsets": self.offsets.copy(),
+            "dead": np.asarray(self.dead),
+            "p_src": np.asarray(self.p_src),
+            "p_dst": np.asarray(self.p_dst),
+            "p_wgt": np.asarray(self.p_wgt),
+            "p_dead": np.asarray(self.p_dead),
+            "p_n": np.int64(self.p_n),
+            "n": np.int64(self.n),
+            "m": np.int64(self.m),
+            "n_zombies": np.int64(self.n_zombies),
+            "dirty": np.int64(int(self.dirty)),
+        }
+
+    @classmethod
+    def from_state_tree(cls, t: dict) -> "LazyCSR":
+        return cls(
+            base_rows=jnp.asarray(t["base_rows"]),
+            base_dst=jnp.asarray(t["base_dst"]),
+            base_wgt=jnp.asarray(t["base_wgt"]),
+            offsets=np.asarray(t["offsets"], np.int64),
+            dead=jnp.asarray(t["dead"]),
+            p_src=jnp.asarray(t["p_src"]),
+            p_dst=jnp.asarray(t["p_dst"]),
+            p_wgt=jnp.asarray(t["p_wgt"]),
+            p_dead=jnp.asarray(t["p_dead"]),
+            p_n=int(t["p_n"]),
+            n=int(t["n"]),
+            m=int(t["m"]),
+            n_zombies=int(t["n_zombies"]),
+            dirty=bool(int(t["dirty"])),
         )
 
     def to_csr(self) -> csr_mod.CSR:

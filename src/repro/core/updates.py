@@ -65,6 +65,7 @@ class UpdatePlan:
     _del_batch: Optional[edgebatch.EdgeBatch] = dataclasses.field(
         default=None, repr=False, compare=False
     )
+    _validated: bool = dataclasses.field(default=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------
     @property
@@ -113,6 +114,37 @@ class UpdatePlan:
         bw[rowi, col] = self.q_wgt[src]
         bl[rowi, col] = self.q_del[src].astype(np.int32)
         return bd, bw, bl
+
+    def validate(self, num_vertices: Optional[int] = None) -> "UpdatePlan":
+        """Boundary validation at ``apply()`` time (DESIGN.md §13).
+
+        Every representation calls this before touching its arrays, so a
+        corrupt plan — typically a damaged WAL record surviving its CRC by
+        construction rather than by luck — fails loudly instead of
+        poisoning the arena: negative vertex ids and non-finite insert
+        weights raise ``ValueError``.  With ``num_vertices`` (the WAL
+        record's vertex watermark on replay) insert ids must also stay
+        below the bound; out-of-range *deletes* remain silently filtered
+        downstream (``rows_in_range``), as always.  The unconditional
+        checks are memoized per plan, so a cached plan replayed across a
+        stream or across representations pays them once.
+        """
+        if not self._validated:
+            if self.q_src.shape[0]:
+                if int(self.q_src.min()) < 0 or int(self.q_dst.min()) < 0:
+                    raise ValueError("UpdatePlan: negative vertex id in op stream")
+                ins = ~self.q_del
+                w = self.q_wgt[ins]
+                if w.shape[0] and not bool(np.isfinite(w).all()):
+                    raise ValueError("UpdatePlan: non-finite insert weight")
+            self._validated = True
+        if num_vertices is not None:
+            mx = self.max_insert_vertex()
+            if mx >= int(num_vertices):
+                raise ValueError(
+                    f"UpdatePlan: insert vertex id {mx} >= bound {int(num_vertices)}"
+                )
+        return self
 
     def max_insert_vertex(self) -> int:
         """Largest vertex id an insert op touches (-1 when insert-free)."""
@@ -352,6 +384,54 @@ def _build_plan(
     ins_count = np.add.reduceat((~q_del).astype(np.int64), run_first)
     k = int(next_pow2_vec(run_count.max())[()]) if rows.shape[0] else 1
 
+    return UpdatePlan(
+        q_src=q_src,
+        q_dst=q_dst,
+        q_wgt=q_wgt,
+        q_del=q_del,
+        rows=rows,
+        run_first=run_first,
+        run_count=run_count,
+        ins_count=ins_count,
+        run_width=k,
+    )
+
+
+def plan_from_canonical(q_src, q_dst, q_wgt, q_del) -> UpdatePlan:
+    """Rebuild an UpdatePlan from its canonical op stream (WAL replay path).
+
+    The journal persists exactly the four canonical arrays; everything else
+    (runs, widths) is derived state, recomputed here with the same
+    ``np.unique`` pass ``_build_plan`` uses — so a replayed plan drives
+    ``apply`` through byte-identical operands.  The stream must already be
+    canonical: (src, dst)-sorted with strictly increasing keys, negative
+    ids rejected.  Value-level validation (finite weights, vertex bounds)
+    stays in :meth:`UpdatePlan.validate`, which replay calls with the
+    record's vertex watermark.
+    """
+    q_src = np.ascontiguousarray(q_src, np.int32)
+    q_dst = np.ascontiguousarray(q_dst, np.int32)
+    q_wgt = np.ascontiguousarray(q_wgt, np.float32)
+    q_del = np.ascontiguousarray(q_del, bool)
+    n = q_src.shape[0]
+    if not (q_dst.shape[0] == q_wgt.shape[0] == q_del.shape[0] == n):
+        raise ValueError("plan_from_canonical: op stream arrays disagree on length")
+    if n == 0:
+        return _empty_plan()
+    if int(q_src.min()) < 0 or int(q_dst.min()) < 0:
+        raise ValueError("plan_from_canonical: negative vertex id")
+    keys = _pair_keys(q_src, q_dst)
+    if n >= 2 and not bool(np.all(keys[1:] > keys[:-1])):
+        raise ValueError("plan_from_canonical: op stream not (src, dst)-sorted unique")
+
+    rows, run_first, run_count = np.unique(
+        q_src, return_index=True, return_counts=True
+    )
+    rows = rows.astype(np.int64)
+    run_first = run_first.astype(np.int64)
+    run_count = run_count.astype(np.int64)
+    ins_count = np.add.reduceat((~q_del).astype(np.int64), run_first)
+    k = int(next_pow2_vec(run_count.max())[()])
     return UpdatePlan(
         q_src=q_src,
         q_dst=q_dst,

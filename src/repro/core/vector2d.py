@@ -60,6 +60,7 @@ class Vector2D:
         g = self if inplace else self.clone()
         if plan.n_ops == 0:
             return g, 0
+        plan.validate()  # corrupt plans (WAL replay) fail loudly (§13)
         if plan.n_ins:
             g._reserve(plan.max_insert_vertex() + 1)
         dm = 0
@@ -98,6 +99,31 @@ class Vector2D:
 
     def snapshot(self) -> "Vector2D":
         return self.clone()  # no cheap snapshot in this class — the point
+
+    # -- durable state (checkpoint/restore, DESIGN.md §13) ---------------
+    def state_tree(self) -> dict:
+        lens = np.array([r.shape[0] for r in self.rows], np.int64)
+        return {
+            "row_lens": lens,
+            "dst_flat": (
+                np.concatenate(self.rows) if self.rows else np.empty(0, np.int32)
+            ).astype(np.int32),
+            "wgt_flat": (
+                np.concatenate(self.wrows) if self.wrows else np.empty(0, np.float32)
+            ).astype(np.float32),
+            "n": np.int64(self.n),
+            "m": np.int64(self.m),
+        }
+
+    @classmethod
+    def from_state_tree(cls, t: dict) -> "Vector2D":
+        lens = np.asarray(t["row_lens"], np.int64)
+        bounds = np.cumsum(lens)[:-1]
+        d = np.asarray(t["dst_flat"], np.int32)
+        w = np.asarray(t["wgt_flat"], np.float32)
+        rows = [a.copy() for a in np.split(d, bounds)] if lens.shape[0] else []
+        wrows = [a.copy() for a in np.split(w, bounds)] if lens.shape[0] else []
+        return cls(rows, wrows, int(t["n"]), int(t["m"]))
 
     def to_csr(self) -> csr_mod.CSR:
         if self.m == 0:

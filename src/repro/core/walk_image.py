@@ -133,6 +133,93 @@ class WalkImage:
         return self.live / max(int(self.bump), 1)
 
     # ------------------------------------------------------------------
+    # integrity (DESIGN.md §13 — the auditor's image half)
+    # ------------------------------------------------------------------
+    def audit(self) -> dict:
+        """Geometry + content invariant sweep; raises ``AuditError``.
+
+        Asserts everything the patch engine and the walk scan rely on:
+        blocks live inside the bump frontier and are pairwise disjoint,
+        every live slot carries an in-range destination owned by its
+        block's row and rows stay strictly ascending, slack slots are
+        SENTINEL (the merge gather masks on it — a non-SENTINEL slack
+        slot would resurrect a ghost edge on the next patch), and the
+        per-row degrees account for exactly ``self.live`` edges.
+        """
+        from ..runtime import faultinject as _fi
+
+        chk = _fi._check
+        nv, bump, cap_e = int(self.nv), int(self.bump), self.cap_e
+        chk(0 <= bump <= cap_e, f"bump {bump} outside [0, cap_e {cap_e}]")
+        chk(
+            self.starts.shape[0] >= nv
+            and self.caps.shape[0] >= nv
+            and self.degs.shape[0] >= nv,
+            "block geometry arrays shorter than nv",
+        )
+        starts = np.asarray(self.starts[:nv], np.int64)
+        caps = np.asarray(self.caps[:nv], np.int64)
+        degs = np.asarray(self.degs[:nv], np.int64)
+        chk(bool((degs >= 0).all()), "negative image degree")
+        chk(bool((caps >= degs).all()), "image degree exceeds block capacity")
+        blocked = caps > 0
+        chk(bool((degs[~blocked] == 0).all()), "edges on a block-less row")
+        chk(bool((starts[blocked] >= 0).all()), "blocked row with start < 0")
+        chk(
+            bool(((starts[blocked] + caps[blocked]) <= bump).all()),
+            "block extends past the bump frontier",
+        )
+        if blocked.any():
+            order = np.argsort(starts[blocked], kind="stable")
+            s_b, c_b = starts[blocked][order], caps[blocked][order]
+            chk(
+                bool(((s_b[:-1] + c_b[:-1]) <= s_b[1:]).all()),
+                "overlapping blocks",
+            )
+        m = int(degs.sum())
+        chk(m == int(self.live), f"degree sum {m} != image live {int(self.live)}")
+        n_blocks = int(blocked.sum())
+        if m:
+            d = np.asarray(self.dst)
+            w = np.asarray(self.wgt)
+            r = np.asarray(self.rows)
+            first = np.cumsum(degs) - degs
+            gidx = np.repeat(starts, degs) + (
+                np.arange(m, dtype=np.int64) - np.repeat(first, degs)
+            )
+            owner = np.repeat(np.arange(nv, dtype=np.int64), degs)
+            dl, wl, rl = d[gidx], w[gidx], r[gidx]
+            chk(not bool((dl == SENTINEL).any()), "SENTINEL inside a live prefix")
+            chk(
+                bool((dl >= 0).all()) and bool((dl < nv).all()),
+                "image dst id out of [0, nv)",
+            )
+            chk(bool((rl == owner).all()), "live slot owned by the wrong row")
+            chk(bool(np.isfinite(wl).all()), "non-finite live image weight")
+            interior = owner[1:] == owner[:-1]
+            chk(
+                not bool((interior & (dl[1:] <= dl[:-1])).any()),
+                "image row not strictly ascending",
+            )
+        slack = caps - degs
+        if int(slack.sum()):
+            sfirst = np.cumsum(slack) - slack
+            sidx = np.repeat(starts + degs, slack) + (
+                np.arange(int(slack.sum()), dtype=np.int64)
+                - np.repeat(sfirst, slack)
+            )
+            chk(
+                bool((np.asarray(self.dst)[sidx] == SENTINEL).all()),
+                "non-SENTINEL slack slot",
+            )
+        return {
+            "blocks": n_blocks,
+            "bump": bump,
+            "slack": int(slack.sum()),
+            "occupancy": self.occupancy,
+        }
+
+    # ------------------------------------------------------------------
     # construction
     # ------------------------------------------------------------------
     @classmethod

@@ -1,0 +1,134 @@
+"""Health-gated backend fallback chain for kernel dispatch (DESIGN.md §13).
+
+A Pallas miscompile or a device OOM mid-stream should degrade throughput,
+not kill the update pipeline.  Every chained dispatch site (``slot_update``
+fused apply, ``slot_walk``) runs its attempt through :func:`run_chain`,
+which walks the backend chain
+
+    pallas → xla → host ref        (or xla → ref when pallas isn't requested)
+
+under a per-(site, backend) circuit breaker:
+
+* **closed** — backend healthy, dispatch goes straight through (cost on the
+  healthy path: one dict lookup);
+* each candidate gets **retry-once** (transient failures — a flaky
+  allocation — don't trip the breaker needlessly);
+* two consecutive failures **trip** the breaker: the backend is *open* for
+  an exponentially growing cool-down (``cooldown * 2^(trips-1)``, capped),
+  and dispatch falls through to the next link;
+* an expired cool-down is the implicit **half-open** probe: the next
+  dispatch tries the backend again — success closes the breaker
+  (re-promotion), failure re-trips it with a doubled cool-down.
+
+The last link of a chain is always attempted even when its breaker is open
+(there is nothing further to fall back to); if it too fails,
+:class:`FallbackExhausted` carries the final error.
+
+``faultinject.fire(f"{site}.{backend}")`` runs *before* every attempt, so
+injected kernel failures hit with operands untouched — which also means a
+donated-buffer first attempt can always be retried on the next link.  A
+real failure *after* a donated buffer was consumed is not retryable (jax
+reports the deleted buffer and the chain exhausts); injection points and
+off-device failures (compile/lowering errors) both fire pre-execution, so
+every failure mode this layer is tested against falls back cleanly.
+
+:class:`SimulatedCrash` is a BaseException and flies through the chain —
+a process kill is not a kernel failure.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+from ..runtime import faultinject
+
+CHAINS = {
+    "pallas": ("pallas", "xla", "ref"),
+    "xla": ("xla", "ref"),
+    "ref": ("ref",),
+}
+
+#: retries per candidate before its breaker trips (retry-once)
+RETRIES = 1
+
+#: site -> backend that served the most recent successful dispatch
+LAST_USED: dict = {}
+
+
+class FallbackExhausted(RuntimeError):
+    """Every backend in the chain failed; ``__cause__`` is the final error."""
+
+
+class CircuitBreaker:
+    """Per-key trip/cool-down state.  Keys are (site, backend) tuples.
+
+    The clock is injectable so tests drive cool-down expiry with a
+    simulated clock instead of sleeping.
+    """
+
+    def __init__(
+        self,
+        *,
+        cooldown: float = 0.25,
+        max_cooldown: float = 30.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.cooldown = cooldown
+        self.max_cooldown = max_cooldown
+        self.clock = clock
+        self._state: dict = {}  # key -> {"trips": int, "open_until": float}
+
+    def available(self, key) -> bool:
+        st = self._state.get(key)
+        return st is None or self.clock() >= st["open_until"]
+
+    def trip(self, key) -> None:
+        st = self._state.setdefault(key, {"trips": 0, "open_until": 0.0})
+        st["trips"] += 1
+        wait = min(self.cooldown * (2.0 ** (st["trips"] - 1)), self.max_cooldown)
+        st["open_until"] = self.clock() + wait
+
+    def record_success(self, key) -> None:
+        # full re-promotion: the trip history is cleared, not just paused
+        self._state.pop(key, None)
+
+    def state(self, key) -> Optional[dict]:
+        st = self._state.get(key)
+        return None if st is None else dict(st)
+
+    def reset(self) -> None:
+        self._state.clear()
+
+
+#: process-wide breaker shared by all chained dispatch sites
+BREAKER = CircuitBreaker()
+
+
+def run_chain(site: str, backend: str, attempt: Callable, *, breaker: Optional[CircuitBreaker] = None):
+    """Run ``attempt(candidate)`` down ``CHAINS[backend]``.
+
+    Returns ``(result, used_backend)``.  Raises :exc:`FallbackExhausted`
+    when every candidate fails; lets :class:`SimulatedCrash` (BaseException)
+    propagate untouched.
+    """
+    br = breaker if breaker is not None else BREAKER
+    candidates = CHAINS.get(backend, (backend,))
+    last_err: Optional[Exception] = None
+    for i, b in enumerate(candidates):
+        key = (site, b)
+        if i < len(candidates) - 1 and not br.available(key):
+            continue  # cooling down; the chain floor always gets a shot
+        for _ in range(RETRIES + 1):
+            try:
+                faultinject.fire(f"{site}.{b}")
+                out = attempt(b)
+            except Exception as e:
+                last_err = e
+                continue
+            br.record_success(key)
+            LAST_USED[site] = b
+            return out, b
+        br.trip(key)
+    raise FallbackExhausted(
+        f"{site}: all backends failed (chain {candidates}, requested {backend!r})"
+    ) from last_err

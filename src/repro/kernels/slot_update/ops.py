@@ -35,7 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core import util
+from .. import fallback as _fb
 from . import kernel as _kernel
+from . import ref as _refmod
 
 SENTINEL = util.SENTINEL
 #: Off-TPU write-back dispatch: arenas up to this many slots always use
@@ -479,6 +481,80 @@ def _jit_fused(groups: tuple, scatter: bool, rebuild_hi: int, any_moves: bool,
     return jax.jit(fn, donate_argnums=(0, 1, 2) if any_moves else (0, 1))
 
 
+def _fused_apply_ref(dst, wgt, slot_rows, groups, *, any_moves: bool,
+                     blocks: bool, wkey: tuple, lo, hi, visits0):
+    """Host-numpy fused apply — the fallback chain's floor (DESIGN.md §13).
+
+    Replays the whole plan through ``merge_rows_reference`` with direct
+    array writes (the scatter/rebuild distinction collapses on host),
+    mirroring the device program's full output contract: patched buffers,
+    concatenated counts, refreshed [lo, hi) geometry and — when a walk
+    epilogue is fused — the host walk over the patched intervals.  Slow
+    by design; its job is stream survival when both device merge
+    backends are tripped.
+    """
+    d = np.array(dst)
+    w = np.array(wgt)
+    r = np.array(slot_rows) if any_moves else slot_rows
+    lo_h = np.array(lo) if (blocks or wkey) else None
+    hi_h = np.array(hi) if (blocks or wkey) else None
+    counts_all = []
+    for width, a_pad, _k, _dk, moves, ops3 in groups:
+        row_ops, bdl, bw = ops3
+        old_starts, old_caps, new_starts, new_caps, degs, row_ids = (
+            np.asarray(row_ops[i], np.int64) for i in range(6)
+        )
+        d_rows = np.full((a_pad, width), SENTINEL, np.int32)
+        w_rows = np.zeros((a_pad, width), np.float32)
+        for i in range(a_pad):
+            dg = int(degs[i])
+            if dg and old_starts[i] >= 0:
+                s = int(old_starts[i])
+                d_rows[i, :dg] = d[s:s + dg]
+                w_rows[i, :dg] = w[s:s + dg]
+        out_d, out_w, counts = _refmod.merge_rows_reference(
+            d_rows, w_rows, degs, bdl[0], bw, bdl[1]
+        )
+        counts_all.append(counts.astype(np.int32))
+        for i in range(a_pad):
+            ns, nc = int(new_starts[i]), int(new_caps[i])
+            if ns < 0 or nc <= 0:
+                continue  # pad row
+            if moves and old_starts[i] >= 0 and old_starts[i] != ns:
+                os_, oc = int(old_starts[i]), int(old_caps[i])
+                d[os_:os_ + oc] = SENTINEL  # vacated block goes dead
+                w[os_:os_ + oc] = 0.0
+            d[ns:ns + nc] = out_d[i, :nc]
+            w[ns:ns + nc] = out_w[i, :nc]
+            if any_moves:
+                r[ns:ns + nc] = row_ids[i]
+            if lo_h is not None and row_ids[i] < lo_h.shape[0]:
+                lo_h[row_ids[i]] = ns
+                hi_h[row_ids[i]] = ns + int(counts[i])
+    outs = [jnp.asarray(d), jnp.asarray(w)]
+    if any_moves:
+        outs.append(jnp.asarray(r))
+    outs.append(np.concatenate(counts_all) if counts_all else np.zeros(0, np.int32))
+    if wkey:
+        from ..slot_walk import ref as _sw_ref  # lazy: avoid import cycle
+
+        steps, nv, edges_hi, nwalks, normalize, _engine = wkey
+        v0 = (
+            np.asarray(visits0, np.float32)
+            if nwalks
+            else np.ones((1, nv), np.float32)
+        )
+        v = _sw_ref.slot_walk_host(
+            d, None, steps, nv, edges_hi=edges_hi,
+            block_lo=lo_h[:nv], block_hi=hi_h[:nv],
+            normalize=normalize, visits0=v0,
+        )
+        outs.append(v if nwalks else v[0])
+    if blocks or wkey:
+        outs.extend([jnp.asarray(lo_h), jnp.asarray(hi_h)])
+    return tuple(outs)
+
+
 def fused_apply(
     dst, wgt, slot_rows, groups,
     *, scatter: bool, backend: str = "auto", interpret: bool = False,
@@ -510,6 +586,8 @@ def fused_apply(
     """
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("pallas", "xla"):
+        raise ValueError(f"unknown slot_update backend: {backend!r}")
     gkey = tuple(
         (int(w), int(a), int(k), int(dk), bool(mv))
         for w, a, k, dk, mv, _ in groups
@@ -517,21 +595,43 @@ def fused_apply(
     any_moves = any(g[4] for g in gkey)
     blocks = walk is None and lo is not None and hi is not None
     wkey = () if walk is None else tuple(walk)
-    fn = _jit_fused(
-        gkey, bool(scatter), int(rebuild_hi), any_moves, donate, backend,
-        interpret, blocks, wkey,
-    )
     ops_flat = [o for *_hdr, ops9 in groups for o in ops9]
     dummy = np.zeros(1, np.int32)
-    out = fn(
-        dst, wgt, slot_rows,
-        dummy if slot_map is None else slot_map,
-        dummy if owner_patch is None else owner_patch,
-        dummy if lo is None else lo,
-        dummy if hi is None else hi,
-        np.zeros((1, 1), np.float32) if visits0 is None else visits0,
-        *ops_flat,
-    )
+
+    # dispatch runs through the health-gated fallback chain (DESIGN.md
+    # §13).  Injected faults and compile/lowering failures fire BEFORE
+    # execution, so operands are intact for the next link; only the
+    # first attempt may donate — a retry must still own its inputs.  (A
+    # real device failure AFTER a donated buffer was consumed is not
+    # retryable: jax reports the deleted buffer and the chain exhausts.)
+    state = {"first": True}
+
+    def _dispatch(b: str):
+        first, state["first"] = state["first"], False
+        if b == "ref":
+            return _fused_apply_ref(
+                dst, wgt, slot_rows, groups, any_moves=any_moves,
+                blocks=blocks, wkey=wkey, lo=lo, hi=hi, visits0=visits0,
+            )
+        # a walk engine tied to the failing backend degrades with it; an
+        # explicitly mixed request (e.g. xla merge + pallas walk parity
+        # runs) keeps its engine
+        wk = wkey[:5] + (b,) if (wkey and wkey[5] == backend) else wkey
+        fn = _jit_fused(
+            gkey, bool(scatter), int(rebuild_hi), any_moves,
+            donate and first, b, interpret, blocks, wk,
+        )
+        return fn(
+            dst, wgt, slot_rows,
+            dummy if slot_map is None else slot_map,
+            dummy if owner_patch is None else owner_patch,
+            dummy if lo is None else lo,
+            dummy if hi is None else hi,
+            np.zeros((1, 1), np.float32) if visits0 is None else visits0,
+            *ops_flat,
+        )
+
+    out, _used = _fb.run_chain("slot_update", backend, _dispatch)
     i = 2
     if any_moves:
         new_rows = out[i]

@@ -29,7 +29,9 @@ import jax
 import jax.numpy as jnp
 
 from ...core import util
+from .. import fallback as _fb
 from . import kernel as _kernel
+from . import ref as _ref
 
 SENTINEL = util.SENTINEL
 EB = 128  # slots per tile (MXU-native)
@@ -452,6 +454,8 @@ def slot_walk(
     edges_hi = min(int(edges_hi), dst.shape[0])
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("pallas", "xla"):
+        raise ValueError(f"unknown slot_walk backend: {backend!r}")
     if visits0 is not None:
         if visits0.ndim != 2 or visits0.shape[1] != num_vertices:
             raise ValueError(
@@ -459,59 +463,53 @@ def slot_walk(
                 f"{visits0.shape}"
             )
         visits0 = jnp.asarray(visits0, jnp.float32)
-        if block_lo is not None and block_hi is not None:
-            if backend not in ("pallas", "xla"):
-                raise ValueError(f"unknown slot_walk backend: {backend!r}")
-            return slot_walk_multi_blocked(
-                dst, block_lo, block_hi, visits0, steps,
-                num_vertices, edges_hi=edges_hi, normalize=normalize,
-                engine=backend, interpret=interpret,
+
+    # dispatch runs through the health-gated fallback chain (DESIGN.md
+    # §13): a failing backend is retried once, then the call degrades
+    # pallas → xla → host ref under the per-backend circuit breaker
+    # instead of killing the stream
+    def _dispatch(b: str) -> jnp.ndarray:
+        if b == "ref":
+            return _ref.slot_walk_host(
+                dst, slot_rows, steps, num_vertices, edges_hi=edges_hi,
+                block_lo=block_lo, block_hi=block_hi, normalize=normalize,
+                visits0=visits0,
             )
-        if backend == "pallas":
-            return slot_walk_multi_pallas(
-                dst, slot_rows, visits0, steps, num_vertices,
-                edges_hi=edges_hi, normalize=normalize, interpret=interpret,
-            )
-        if backend == "xla":
+        if visits0 is not None:
+            if block_lo is not None and block_hi is not None:
+                return slot_walk_multi_blocked(
+                    dst, block_lo, block_hi, visits0, steps,
+                    num_vertices, edges_hi=edges_hi, normalize=normalize,
+                    engine=b, interpret=interpret,
+                )
+            if b == "pallas":
+                return slot_walk_multi_pallas(
+                    dst, slot_rows, visits0, steps, num_vertices,
+                    edges_hi=edges_hi, normalize=normalize,
+                    interpret=interpret,
+                )
             return slot_walk_multi_xla(
                 dst, slot_rows, visits0, steps, num_vertices,
                 edges_hi=edges_hi, normalize=normalize,
             )
-        raise ValueError(f"unknown slot_walk backend: {backend!r}")
-    if block_lo is not None and block_hi is not None:
-        if backend not in ("pallas", "xla"):
-            raise ValueError(f"unknown slot_walk backend: {backend!r}")
-        return slot_walk_blocked(
-            dst,
-            block_lo,
-            block_hi,
-            steps,
-            num_vertices,
-            edges_hi=edges_hi,
-            normalize=normalize,
-            engine=backend,
-            interpret=interpret,
-        )
-    if backend == "pallas":
-        return slot_walk_pallas(
-            dst,
-            slot_rows,
-            steps,
-            num_vertices,
-            edges_hi=edges_hi,
-            normalize=normalize,
-            interpret=interpret,
-        )
-    if backend == "xla":
+        if block_lo is not None and block_hi is not None:
+            return slot_walk_blocked(
+                dst, block_lo, block_hi, steps, num_vertices,
+                edges_hi=edges_hi, normalize=normalize, engine=b,
+                interpret=interpret,
+            )
+        if b == "pallas":
+            return slot_walk_pallas(
+                dst, slot_rows, steps, num_vertices,
+                edges_hi=edges_hi, normalize=normalize, interpret=interpret,
+            )
         return slot_walk_xla(
-            dst,
-            slot_rows,
-            steps,
-            num_vertices,
-            edges_hi=edges_hi,
-            normalize=normalize,
+            dst, slot_rows, steps, num_vertices,
+            edges_hi=edges_hi, normalize=normalize,
         )
-    raise ValueError(f"unknown slot_walk backend: {backend!r}")
+
+    out, _used = _fb.run_chain("slot_walk", backend, _dispatch)
+    return out
 
 
 def slot_walk_image(

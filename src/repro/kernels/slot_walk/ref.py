@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...core import util
 
@@ -35,3 +36,63 @@ def slot_walk_reference(
         if normalize:
             visits = visits / jnp.maximum(jnp.max(visits), 1.0)
     return visits
+
+
+def slot_walk_host(
+    dst,
+    slot_rows,
+    steps: int,
+    num_vertices: int,
+    *,
+    edges_hi=None,
+    block_lo=None,
+    block_hi=None,
+    normalize: bool = False,
+    visits0=None,
+) -> jnp.ndarray:
+    """Pure-numpy walk — the fallback chain's floor (DESIGN.md §13).
+
+    Accepts every operand form the dispatcher routes (rows-carrying
+    buffers, [lo, hi) interval geometry, batched ``visits0``) so any
+    ``slot_walk`` call can complete here when both device backends are
+    tripped.  Per-step f32 rounding of the bincount accumulation differs
+    from the device formulations (host sums are sequential), so results
+    are reference-accurate, not bit-identical to a healthy round — the
+    chain trades exact dispatch parity for stream survival at this link.
+    """
+    d_full = np.asarray(dst)
+    e = d_full.shape[0] if edges_hi is None else min(int(edges_hi), d_full.shape[0])
+    d = d_full[:e].astype(np.int64)
+    nv = int(num_vertices)
+    if block_lo is not None and block_hi is not None:
+        # fold the interval geometry into a per-slot owner plane
+        lo = np.clip(np.asarray(block_lo, np.int64), 0, e)
+        hi = np.clip(np.asarray(block_hi, np.int64), 0, e)
+        deg = np.maximum(hi - lo, 0)
+        rows = np.full(e, nv, np.int64)
+        total = int(deg.sum())
+        if total:
+            first = np.cumsum(deg) - deg
+            idx = np.repeat(lo, deg) + (np.arange(total) - np.repeat(first, deg))
+            rows[idx] = np.repeat(np.arange(deg.shape[0], dtype=np.int64), deg)
+    else:
+        rows = np.asarray(slot_rows)[:e].astype(np.int64)
+    valid = (d != int(SENTINEL)) & (rows >= 0) & (rows < nv)
+    gidx = np.where(valid, np.clip(d, 0, nv - 1), 0)
+    seg = np.where(valid, rows, nv)
+    if visits0 is None:
+        vis = np.ones((1, nv), np.float32)
+    else:
+        vis = np.asarray(visits0, np.float32).reshape(-1, nv)
+    for _ in range(int(steps)):
+        vals = np.where(valid[None, :], vis[:, gidx], np.float32(0.0))
+        nxt = np.empty_like(vis)
+        for b in range(vis.shape[0]):
+            nxt[b] = np.bincount(
+                seg, weights=vals[b], minlength=nv + 1
+            )[:nv].astype(np.float32)
+        if normalize:
+            nxt = nxt / np.maximum(nxt.max(axis=1, keepdims=True), 1.0)
+        vis = nxt.astype(np.float32)
+    out = jnp.asarray(vis)
+    return out if visits0 is not None else out[0]

@@ -14,7 +14,6 @@ import dataclasses
 import time
 from typing import Callable, Optional
 
-import jax
 import numpy as np
 
 from ..checkpoint import manager as ckpt
@@ -99,11 +98,8 @@ def elastic_mesh_shape(n_devices: int, *, model_parallel: int = 16):
     the data axis keeps the recompiled program count logarithmic under
     repeated shrink/grow events (CP2AA policy applied to topology).
     """
-    from ..core import alloc
-
     data = max(n_devices // model_parallel, 1)
     data_pow2 = 1 << (data.bit_length() - 1)  # round DOWN to pow-2
-    del alloc
     return (data_pow2, model_parallel)
 
 

@@ -1,0 +1,226 @@
+"""Deterministic fault injection + cross-layer invariant auditor (DESIGN.md §13).
+
+The durability layer (``runtime/durable.py``) and the kernel fallback chain
+(``kernels/fallback.py``) are only trustworthy if every failure mode they
+claim to survive is actually exercised.  This module provides the four
+injection families the recovery protocol is tested against:
+
+* **kernel failure** — ``fire("slot_update.xla")`` etc. raises an
+  :class:`InjectedKernelError` at the named dispatch site, driving the
+  circuit-breaker chain;
+* **process kill** — ``fire("durable.pre_append" | "durable.post_append" |
+  "durable.post_apply")`` raises :class:`SimulatedCrash` (a *BaseException*,
+  so nothing in the pipeline accidentally swallows it) at the three
+  WAL-ordering-critical points of ``DurableGraph.apply``;
+* **torn / corrupted WAL segments** — :func:`tear_tail` and
+  :func:`corrupt_byte` damage log files the way a crashed writer or bad
+  sector would;
+* **interrupted checkpoint** — ``fire("checkpoint.pre_rename")`` kills the
+  writer between the tmp-dir write and the atomic rename, leaving the
+  ``.tmp_ckpt_*`` debris a real crash leaves.
+
+Injection points are *armed* host-side (``arm``/``injected``) and fire
+deterministically: ``after`` skips that many hits, ``times`` bounds how many
+raise.  :class:`FaultSchedule` derives a seeded (round, point) schedule for
+randomized sweeps.  ``fire()`` on an un-armed point is a dict lookup — the
+production hot path pays nothing.
+
+:func:`audit` is the post-recovery invariant pass: CSR well-formedness,
+WalkImage block-geometry/content integrity (``WalkImage.audit``), and
+CSR↔image cross-consistency, for any of the five representations.
+
+No ``repro.core`` imports — the kernel packages import this module, and
+core imports the kernel packages; keeping this module core-free breaks the
+cycle.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Optional
+
+import numpy as np
+
+
+class SimulatedCrash(BaseException):
+    """Process-kill stand-in.  BaseException: only the test harness (or a
+    deliberate ``except BaseException``) may catch it — ordinary
+    ``except Exception`` recovery/fallback code must let it fly, exactly
+    like a real SIGKILL."""
+
+    def __init__(self, point: str):
+        super().__init__(f"simulated crash at {point}")
+        self.point = point
+
+
+class InjectedKernelError(RuntimeError):
+    """Stand-in for a kernel-level failure (miscompile, device OOM)."""
+
+    def __init__(self, point: str):
+        super().__init__(f"injected kernel failure at {point}")
+        self.point = point
+
+
+class AuditError(RuntimeError):
+    """An invariant audit found cross-layer inconsistency."""
+
+
+# point -> {"after": int, "times": int, "seen": int, "fired": int, "exc": type}
+_ARMED: dict = {}
+
+
+def arm(point: str, *, after: int = 0, times: int = 1, exc=None) -> None:
+    """Arm ``point``: the next ``fire(point)`` calls skip ``after`` hits,
+    then raise ``exc(point)`` on the following ``times`` hits."""
+    if exc is None:
+        exc = SimulatedCrash if point.startswith(("durable.", "checkpoint.")) else InjectedKernelError
+    _ARMED[point] = {"after": int(after), "times": int(times), "seen": 0, "fired": 0, "exc": exc}
+
+
+def disarm(point: Optional[str] = None) -> None:
+    """Disarm one point, or everything when ``point`` is None."""
+    if point is None:
+        _ARMED.clear()
+    else:
+        _ARMED.pop(point, None)
+
+
+def fired(point: str) -> int:
+    """How many times ``point`` has actually raised since it was armed."""
+    st = _ARMED.get(point)
+    return 0 if st is None else st["fired"]
+
+
+def fire(point: str) -> None:
+    """Hit an injection point.  No-op unless armed (production cost: one
+    falsy-dict check)."""
+    if not _ARMED:
+        return
+    st = _ARMED.get(point)
+    if st is None:
+        return
+    st["seen"] += 1
+    if st["seen"] <= st["after"] or st["fired"] >= st["times"]:
+        return
+    st["fired"] += 1
+    raise st["exc"](point)
+
+
+@contextlib.contextmanager
+def injected(point: str, *, after: int = 0, times: int = 1, exc=None):
+    """Scoped ``arm``; always disarms the point on exit."""
+    arm(point, after=after, times=times, exc=exc)
+    try:
+        yield
+    finally:
+        disarm(point)
+
+
+class FaultSchedule:
+    """Seeded (round, point) schedule for randomized crash sweeps.
+
+    ``plan(n_rounds)`` picks one injection point and the round it fires in,
+    deterministically from the seed — hypothesis/parametrized sweeps share
+    one code path and every failure reproduces from its seed alone.
+    """
+
+    def __init__(self, seed: int, points: tuple):
+        self.seed = int(seed)
+        self.points = tuple(points)
+        self._rng = np.random.default_rng(self.seed)
+
+    def plan(self, n_rounds: int) -> tuple:
+        """Returns (round_index, point) with round_index in [0, n_rounds)."""
+        rnd = int(self._rng.integers(0, max(n_rounds, 1)))
+        point = self.points[int(self._rng.integers(0, len(self.points)))]
+        return rnd, point
+
+
+# -- file damage helpers (WAL / checkpoint corruption) ----------------------
+
+
+def tear_tail(path: str, nbytes: int) -> int:
+    """Truncate the final ``nbytes`` of ``path`` (a torn write at the tail:
+    the crash happened mid-record).  Returns the new size."""
+    size = os.path.getsize(path)
+    new = max(size - int(nbytes), 0)
+    os.truncate(path, new)
+    return new
+
+
+def corrupt_byte(path: str, offset: int) -> None:
+    """Flip one byte of ``path`` in place (bit rot / bad sector: the record
+    is complete but its checksum no longer matches)."""
+    with open(path, "r+b") as f:
+        f.seek(int(offset))
+        b = f.read(1)
+        if not b:
+            raise ValueError(f"offset {offset} beyond end of {path}")
+        f.seek(int(offset))
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+# -- invariant auditor ------------------------------------------------------
+
+
+def _check(cond, msg: str):
+    if not cond:
+        raise AuditError(msg)
+
+
+def audit(rep) -> dict:
+    """Cross-consistency audit of a live representation (post-recovery gate).
+
+    Verifies, for any of the five representations:
+
+    1. the canonical CSR is well-formed — monotone offsets, per-row strictly
+       ascending in-range destinations, finite weights, edge count agreeing
+       with ``rep.m``;
+    2. the representation's WalkImage passes its own geometry/content audit
+       (:meth:`WalkImage.audit` — blocks inside the bump frontier, disjoint,
+       live prefixes owned and sorted, SENTINEL slack);
+    3. CSR ↔ image cross-consistency — the image's live payload, gathered in
+       row order, is exactly the CSR's dst/wgt streams.
+
+    Raises :class:`AuditError` on the first violation; returns summary stats.
+    """
+    c = rep.to_csr()
+    off = np.asarray(c.offsets).astype(np.int64)
+    nv, m = int(c.n), int(c.m)
+    d = np.asarray(c.dst)[:m]
+    w = np.asarray(c.wgt)[:m] if c.wgt is not None else np.ones(m, np.float32)
+
+    _check(off.shape[0] == nv + 1, f"csr offsets length {off.shape[0]} != n+1 ({nv + 1})")
+    _check(int(off[0]) == 0, "csr offsets[0] != 0")
+    _check(bool((np.diff(off) >= 0).all()), "csr offsets not monotone")
+    _check(int(off[-1]) == m, f"csr offsets[-1] {int(off[-1])} != m {m}")
+    _check(int(rep.m) == m, f"rep.m {int(rep.m)} != csr.m {m}")
+    if m:
+        _check(bool((d >= 0).all()) and bool((d < nv).all()), "csr dst id out of [0, n)")
+        _check(bool(np.isfinite(w).all()), "non-finite csr weight")
+        row_of = np.repeat(np.arange(nv, dtype=np.int64), np.diff(off))
+        interior = row_of[1:] == row_of[:-1]
+        _check(
+            not bool((interior & (d[1:] <= d[:-1])).any()),
+            "csr row not strictly ascending",
+        )
+
+    img = rep.to_walk_image()
+    stats = img.audit()
+    _check(int(img.nv) == nv, f"image nv {int(img.nv)} != csr n {nv}")
+    _check(int(img.live) == m, f"image live {int(img.live)} != csr m {m}")
+    if m:
+        starts = np.asarray(img.starts[:nv], np.int64)
+        degs = np.asarray(img.degs[:nv], np.int64)
+        _check(bool((degs == np.diff(off)).all()), "image degrees != csr degrees")
+        first = np.cumsum(degs) - degs
+        gidx = np.repeat(starts, degs) + (np.arange(m) - np.repeat(first, degs))
+        _check(
+            bool((np.asarray(img.dst)[gidx] == d).all()),
+            "image dst payload != csr dst",
+        )
+        _check(
+            bool((np.asarray(img.wgt)[gidx] == w).all()),
+            "image wgt payload != csr wgt",
+        )
+    return {"n": nv, "m": m, **stats}

@@ -1,0 +1,531 @@
+"""Durability pipeline (DESIGN.md §13): WAL journal, checkpoint/restore
+bit-parity, crash-recovery sweeps over every representation × injection
+point, the kernel fallback chain, and the cross-layer invariant audit."""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.core import REPRESENTATIONS, csr as csr_mod, edgebatch, updates
+from repro.kernels import fallback
+from repro.runtime import durable, faultinject
+
+N_V = 48
+CRASH_POINTS = ("durable.pre_append", "durable.post_append", "durable.post_apply")
+
+
+@pytest.fixture(autouse=True)
+def _clean_fault_state():
+    faultinject.disarm()
+    fallback.BREAKER.reset()
+    fallback.LAST_USED.clear()
+    yield
+    faultinject.disarm()
+    fallback.BREAKER.reset()
+    fallback.LAST_USED.clear()
+
+
+@pytest.fixture(scope="module")
+def base_csr():
+    rng = np.random.default_rng(11)
+    m = 220
+    return csr_mod.from_coo(
+        rng.integers(0, N_V, m),
+        rng.integers(0, N_V, m),
+        rng.random(m).astype(np.float32),
+        n=N_V,
+    )
+
+
+def make_plans(k=6, seed=7, n=N_V):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(k):
+        ib = edgebatch.from_arrays(
+            rng.integers(0, n, 12),
+            rng.integers(0, n, 12),
+            rng.random(12).astype(np.float32),
+        )
+        db = edgebatch.from_arrays(rng.integers(0, n, 6), rng.integers(0, n, 6))
+        out.append(updates.plan_update(inserts=ib, deletes=db))
+    return out
+
+
+def dense_oracle(rep):
+    c = rep.to_csr()
+    return (
+        np.asarray(c.offsets),
+        np.asarray(c.dst)[: c.m],
+        np.asarray(c.wgt)[: c.m],
+    )
+
+
+def assert_bit_parity(a, b):
+    for x, y in zip(dense_oracle(a), dense_oracle(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# WAL record / journal mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_wal_record_roundtrip():
+    plan = make_plans(1)[0]
+    rec = durable.encode_record(9, 77, plan)
+    seq, nv, (qs, qd, qw, ql) = durable.decode_record(
+        rec[: durable._HEADER.size], rec[durable._HEADER.size :]
+    )
+    assert (seq, nv) == (9, 77)
+    np.testing.assert_array_equal(qs, plan.q_src)
+    np.testing.assert_array_equal(qd, plan.q_dst)
+    np.testing.assert_array_equal(qw, plan.q_wgt)
+    np.testing.assert_array_equal(ql, plan.q_del)
+
+
+def test_journal_append_replay_rotation(tmp_path):
+    wal = str(tmp_path / "wal")
+    j = durable.UpdateJournal(wal, segment_bytes=256)  # force rotation
+    plans = make_plans(5)
+    seqs = [j.append(p, N_V) for p in plans]
+    assert seqs == [1, 2, 3, 4, 5]
+    assert len(j.segments()) > 1  # each ~240-byte record rotates
+    j.close()
+    j2 = durable.UpdateJournal(wal, segment_bytes=256)
+    got = list(j2.replay())
+    assert [s for s, _, _ in got] == seqs
+    for (_, nv, (qs, qd, qw, ql)), p in zip(got, plans):
+        assert nv == N_V
+        np.testing.assert_array_equal(qs, p.q_src)
+        np.testing.assert_array_equal(qw, p.q_wgt)
+    assert [s for s, _, _ in j2.replay(after=3)] == seqs[3:]
+    assert j2.next_seq == 6  # reopen resumes the sequence
+    j2.close()
+
+
+def test_journal_truncate_through(tmp_path):
+    wal = str(tmp_path / "wal")
+    j = durable.UpdateJournal(wal, segment_bytes=256)
+    for p in make_plans(6):
+        j.append(p, N_V)
+    n_before = len(j.segments())
+    assert n_before >= 3
+    j.truncate_through(6)
+    # everything but the append-target segment is redundant
+    assert len(j.segments()) == 1
+    # the surviving records still replay cleanly
+    assert all(s <= 6 for s, _, _ in j.replay())
+    j.close()
+
+
+def test_torn_tail_repaired_on_recovery_open(tmp_path):
+    wal = str(tmp_path / "wal")
+    j = durable.UpdateJournal(wal)
+    for p in make_plans(3):
+        j.append(p, N_V)
+    j.close()
+    seg = j.segments()[-1]
+    faultinject.tear_tail(seg, 10)  # torn mid-record at the tail
+    j2 = durable.UpdateJournal(wal, repair=True)
+    assert [s for s, _, _ in j2.replay()] == [1, 2]  # record 3 cut
+    assert j2.next_seq == 3  # its sequence number is reused
+    j2.close()
+
+
+def test_corrupt_record_raises(tmp_path):
+    wal = str(tmp_path / "wal")
+    j = durable.UpdateJournal(wal)
+    for p in make_plans(3):
+        j.append(p, N_V)
+    j.close()
+    seg = j.segments()[0]
+    # flip a payload byte of the FIRST record: complete but rotten
+    faultinject.corrupt_byte(seg, durable._HEADER.size + 3)
+    with pytest.raises(durable.WalCorruptError):
+        list(durable.UpdateJournal(wal).replay())
+    # repair refuses too — truncating would drop acknowledged updates
+    with pytest.raises(durable.WalCorruptError):
+        durable.UpdateJournal(wal, repair=True)
+
+
+# ---------------------------------------------------------------------------
+# boundary validation
+# ---------------------------------------------------------------------------
+
+
+def test_edgebatch_rejects_nonfinite_weight():
+    with pytest.raises(ValueError, match="non-finite"):
+        edgebatch.from_arrays(
+            np.array([0, 1]), np.array([1, 2]),
+            np.array([1.0, np.nan], np.float32),
+        )
+    with pytest.raises(ValueError, match="non-finite"):
+        edgebatch.from_arrays(
+            np.array([0]), np.array([1]), np.array([np.inf], np.float32)
+        )
+
+
+def test_plan_from_canonical_rejects_unsorted_and_negative():
+    with pytest.raises(ValueError, match="sorted"):
+        updates.plan_from_canonical(
+            np.array([1, 0], np.int32), np.array([0, 0], np.int32),
+            np.ones(2, np.float32), np.zeros(2, bool),
+        )
+    with pytest.raises(ValueError, match="negative"):
+        updates.plan_from_canonical(
+            np.array([-1, 0], np.int32), np.array([0, 0], np.int32),
+            np.ones(2, np.float32), np.zeros(2, bool),
+        )
+    with pytest.raises(ValueError, match="length"):
+        updates.plan_from_canonical(
+            np.array([0], np.int32), np.array([0, 1], np.int32),
+            np.ones(2, np.float32), np.zeros(2, bool),
+        )
+
+
+def _nan_plan():
+    # plan_from_canonical defers value checks to validate()/apply()
+    return updates.plan_from_canonical(
+        np.array([0, 1], np.int32), np.array([1, 2], np.int32),
+        np.array([1.0, np.nan], np.float32), np.array([False, False]),
+    )
+
+
+@pytest.mark.parametrize("name", list(REPRESENTATIONS))
+def test_apply_rejects_nan_weight_every_rep(name, base_csr):
+    g = REPRESENTATIONS[name].from_csr(base_csr)
+    with pytest.raises(ValueError, match="non-finite"):
+        g.apply(_nan_plan())
+
+
+def test_validate_vertex_bound_replay_only():
+    plan = updates.plan_from_canonical(
+        np.array([5], np.int32), np.array([7], np.int32),
+        np.ones(1, np.float32), np.zeros(1, bool),
+    )
+    plan.validate()  # unbounded: fine (apply grows the vertex set)
+    with pytest.raises(ValueError, match="bound"):
+        plan.validate(num_vertices=7)  # replay watermark says <= 6
+
+
+# ---------------------------------------------------------------------------
+# checkpoint bit-parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(REPRESENTATIONS))
+def test_checkpoint_roundtrip_bit_parity(name, base_csr, tmp_path):
+    cls = REPRESENTATIONS[name]
+    g = cls.from_csr(base_csr)
+    plans = make_plans(4, seed=3)
+    for p in plans[:2]:
+        g, _ = g.apply(p)
+    d = str(tmp_path / "ck")
+    ckpt.save_arrays(d, 0, g.state_tree())
+    arrays, step = ckpt.restore_arrays(d)
+    h = cls.from_state_tree(arrays)
+    assert_bit_parity(g, h)
+    # the restored instance keeps applying in lockstep — exact state, not
+    # just an equivalent edge set (arena geometry included)
+    for p in plans[2:]:
+        g, _ = g.apply(p)
+        h, _ = h.apply(p)
+    assert_bit_parity(g, h)
+    np.testing.assert_array_equal(
+        np.asarray(g.reverse_walk(3)), np.asarray(h.reverse_walk(3))
+    )
+
+
+# ---------------------------------------------------------------------------
+# crash-recovery sweeps
+# ---------------------------------------------------------------------------
+
+
+def run_crash(cls, base_csr, tmp_path, point, kcrash=3, n_plans=6, seed=7):
+    """Drive a durable stream into a crash at ``point``; return
+    (recovered DurableGraph, uncrashed twin rep, remaining plans)."""
+    wal, ck = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    plans = make_plans(n_plans, seed=seed)
+    g = durable.DurableGraph(cls.from_csr(base_csr), wal, ck)
+    crashed = False
+    for i, p in enumerate(plans):
+        if i == kcrash:
+            faultinject.arm(point)
+        try:
+            g.apply(p)
+        except faultinject.SimulatedCrash:
+            crashed = True
+            break
+        finally:
+            faultinject.disarm()
+    assert crashed
+    g.close()
+    r = durable.DurableGraph.recover(wal, ck)
+    # pre-append: the crashed apply never hit the log; post-*: it did
+    upto = kcrash if point == "durable.pre_append" else kcrash + 1
+    twin = cls.from_csr(base_csr)
+    for p in plans[:upto]:
+        twin, _ = twin.apply(p)
+    return r, twin, plans[upto:]
+
+
+@pytest.mark.parametrize("point", CRASH_POINTS)
+@pytest.mark.parametrize("name", list(REPRESENTATIONS))
+def test_crash_recovery_bit_parity(name, point, base_csr, tmp_path):
+    r, twin, rest = run_crash(REPRESENTATIONS[name], base_csr, tmp_path, point)
+    assert_bit_parity(r.rep, twin)
+    np.testing.assert_array_equal(
+        np.asarray(r.rep.reverse_walk(3)), np.asarray(twin.reverse_walk(3))
+    )
+    # the recovered stream keeps going — and stays in lockstep
+    for p in rest:
+        r.apply(p)
+        twin, _ = twin.apply(p)
+    assert_bit_parity(r.rep, twin)
+    r.close()
+
+
+def test_crash_with_torn_tail(base_csr, tmp_path):
+    cls = REPRESENTATIONS["digraph"]
+    wal, ck = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    plans = make_plans(4)
+    g = durable.DurableGraph(cls.from_csr(base_csr), wal, ck)
+    for p in plans:
+        g.apply(p)
+    g.close()
+    # the final append itself was torn mid-write: record 4 is damaged
+    faultinject.tear_tail(g.journal.segments()[-1], 7)
+    r = durable.DurableGraph.recover(wal, ck)
+    twin = cls.from_csr(base_csr)
+    for p in plans[:3]:
+        twin, _ = twin.apply(p)
+    assert r.seq == 3
+    assert_bit_parity(r.rep, twin)
+    r.close()
+
+
+def test_interrupted_checkpoint_leaves_debris_and_recovers(base_csr, tmp_path):
+    cls = REPRESENTATIONS["lazy"]
+    wal, ck = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    plans = make_plans(3)
+    g = durable.DurableGraph(cls.from_csr(base_csr), wal, ck)
+    for p in plans[:2]:
+        g.apply(p)
+    faultinject.arm("checkpoint.pre_rename")
+    with pytest.raises(faultinject.SimulatedCrash):
+        g.checkpoint()
+    faultinject.disarm()
+    g.close()
+    debris = [n for n in os.listdir(ck) if n.startswith(".tmp_ckpt_")]
+    assert debris  # a real crash leaves the tmp dir behind
+    r = durable.DurableGraph.recover(wal, ck)
+    assert not [n for n in os.listdir(ck) if n.startswith(".tmp_ckpt_")]
+    twin = cls.from_csr(base_csr)
+    for p in plans[:2]:
+        twin, _ = twin.apply(p)
+    assert_bit_parity(r.rep, twin)  # step-0 base + full WAL replay
+    r.close()
+
+
+def test_auto_checkpoint_prunes_wal(base_csr, tmp_path):
+    cls = REPRESENTATIONS["coo"]
+    wal, ck = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    g = durable.DurableGraph(
+        cls.from_csr(base_csr), wal, ck,
+        checkpoint_every=2, segment_bytes=256,
+    )
+    plans = make_plans(6, seed=5)
+    for p in plans:
+        g.apply(p)
+    assert ckpt.latest_step(ck) == 6
+    assert len(g.journal.segments()) == 1  # pruned behind the checkpoint
+    g.close()
+    r = durable.DurableGraph.recover(wal, ck)
+    twin = cls.from_csr(base_csr)
+    for p in plans:
+        twin, _ = twin.apply(p)
+    assert_bit_parity(r.rep, twin)
+    r.close()
+
+
+def test_hypothesis_random_crash_sweep(base_csr, tmp_path):
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    names = list(REPRESENTATIONS)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def sweep(seed):
+        sched = faultinject.FaultSchedule(seed, CRASH_POINTS)
+        kcrash, point = sched.plan(4)
+        cls = REPRESENTATIONS[names[seed % len(names)]]
+        base = str(tmp_path / f"s{seed}")
+        os.makedirs(base, exist_ok=True)
+        try:
+            r, twin, _ = run_crash(
+                cls, base_csr, __import__("pathlib").Path(base), point,
+                kcrash=kcrash, n_plans=5, seed=seed,
+            )
+            assert_bit_parity(r.rep, twin)
+            np.testing.assert_array_equal(
+                np.asarray(r.rep.reverse_walk(2)),
+                np.asarray(twin.reverse_walk(2)),
+            )
+            r.close()
+        finally:
+            shutil.rmtree(base, ignore_errors=True)
+
+    sweep()
+
+
+# ---------------------------------------------------------------------------
+# kernel fallback chain
+# ---------------------------------------------------------------------------
+
+
+def test_slot_update_falls_back_to_ref(base_csr):
+    cls = REPRESENTATIONS["digraph"]
+    g = cls.from_csr(base_csr)
+    twin = cls.from_csr(base_csr)
+    plan = make_plans(1, seed=13)[0]
+    # kill both xla tries (attempt + retry) -> chain lands on host ref
+    faultinject.arm("slot_update.xla", times=2)
+    g, _ = g.apply(plan)
+    faultinject.disarm()
+    assert fallback.LAST_USED["slot_update"] == "ref"
+    twin, _ = twin.apply(plan)
+    assert_bit_parity(g, twin)
+    # breaker re-promotes xla after its cooldown; parity must hold across
+    # the ref->xla seam on the SAME graph state
+    fallback.BREAKER.reset()
+    p2 = make_plans(1, seed=14)[0]
+    g, _ = g.apply(p2)
+    twin, _ = twin.apply(p2)
+    assert fallback.LAST_USED["slot_update"] == "xla"
+    assert_bit_parity(g, twin)
+
+
+def test_slot_walk_falls_back_to_ref(base_csr):
+    cls = REPRESENTATIONS["chunked"]
+    g = cls.from_csr(base_csr)
+    clean = np.asarray(g.reverse_walk(3))
+    faultinject.arm("slot_walk.xla", times=2)
+    out = np.asarray(g.reverse_walk(3))
+    faultinject.disarm()
+    assert fallback.LAST_USED["slot_walk"] == "ref"
+    np.testing.assert_allclose(out, clean, rtol=1e-5, atol=1e-5)
+
+
+def test_forced_pallas_failure_completes_via_xla(base_csr, monkeypatch):
+    """ISSUE acceptance: a Pallas failure mid-stream completes through the
+    xla link without raising."""
+    from repro.kernels.slot_update import ops as _su_ops
+
+    orig = _su_ops.fused_apply
+
+    def force_pallas(*args, **kw):
+        kw["backend"] = "pallas"
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(_su_ops, "fused_apply", force_pallas)
+    cls = REPRESENTATIONS["digraph"]
+    g = cls.from_csr(base_csr)
+    twin = cls.from_csr(base_csr)
+    plan = make_plans(1, seed=21)[0]
+    # both pallas tries die before launch; xla completes the dispatch
+    faultinject.arm("slot_update.pallas", times=2)
+    g, _ = g.apply(plan)
+    faultinject.disarm()
+    assert fallback.LAST_USED["slot_update"] == "xla"
+    st = fallback.BREAKER.state(("slot_update", "pallas"))
+    assert st is not None and st["trips"] >= 1  # breaker tripped open
+    monkeypatch.setattr(_su_ops, "fused_apply", orig)
+    twin, _ = twin.apply(plan)
+    assert_bit_parity(g, twin)
+
+
+def test_breaker_cooldown_and_repromotion():
+    t = {"now": 0.0}
+    br = fallback.CircuitBreaker(cooldown=1.0, max_cooldown=8.0, clock=lambda: t["now"])
+    key = ("site", "xla")
+    assert br.available(key)
+    br.trip(key)
+    assert not br.available(key)  # open
+    t["now"] = 1.1
+    assert br.available(key)  # half-open: cooldown expired, probe allowed
+    br.trip(key)  # probe failed: exponential backoff (2.0s now)
+    t["now"] = 2.0
+    assert not br.available(key)
+    t["now"] = 3.2
+    assert br.available(key)
+    br.record_success(key)  # probe succeeded: full re-promotion
+    assert br.state(key) is None
+    br.trip(key)  # next trip starts from the base cooldown again
+    t["now"] = 3.2 + 1.1
+    assert br.available(key)
+
+
+def test_run_chain_exhaustion_raises():
+    def attempt(b):
+        raise RuntimeError(f"{b} down")
+
+    br = fallback.CircuitBreaker(clock=lambda: 0.0)
+    with pytest.raises(fallback.FallbackExhausted):
+        fallback.run_chain("site2", "xla", attempt, breaker=br)
+
+
+def test_simulated_crash_not_swallowed_by_chain(base_csr):
+    """SimulatedCrash is a BaseException: the fallback chain must let a
+    process-kill fly instead of retrying around it."""
+    cls = REPRESENTATIONS["digraph"]
+    g = cls.from_csr(base_csr)
+    faultinject.arm("slot_update.xla", exc=faultinject.SimulatedCrash)
+    with pytest.raises(faultinject.SimulatedCrash):
+        g.apply(make_plans(1, seed=31)[0])
+    faultinject.disarm()
+
+
+def test_steady_state_untouched_by_chain(base_csr):
+    """No fault armed -> the primary backend serves every dispatch and the
+    breaker holds no state (the <15%-overhead guarantee's control side)."""
+    cls = REPRESENTATIONS["digraph"]
+    g = cls.from_csr(base_csr)
+    for p in make_plans(3, seed=17):
+        g, _ = g.apply(p)
+        g.reverse_walk(2)
+    assert fallback.LAST_USED.get("slot_update") == "xla"
+    assert fallback.LAST_USED.get("slot_walk") in (None, "xla")
+    assert fallback.BREAKER.state(("slot_update", "xla")) is None
+
+
+# ---------------------------------------------------------------------------
+# invariant audit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(REPRESENTATIONS))
+def test_audit_passes_on_live_stream(name, base_csr):
+    g = REPRESENTATIONS[name].from_csr(base_csr)
+    for p in make_plans(3, seed=23):
+        g, _ = g.apply(p)
+    stats = faultinject.audit(g)
+    assert stats["m"] == g.to_csr().m
+    assert stats["blocks"] >= 1
+
+
+def test_audit_detects_edge_count_drift(base_csr):
+    g = REPRESENTATIONS["digraph"].from_csr(base_csr)
+    g.m += 1  # simulated accounting corruption
+    with pytest.raises(faultinject.AuditError, match="rep.m"):
+        faultinject.audit(g)
+
+
+def test_audit_detects_image_geometry_corruption(base_csr):
+    g = REPRESENTATIONS["vector2d"].from_csr(base_csr)
+    img = g.to_walk_image()
+    img.degs[0] += 1  # degree drift: live-count / payload checks trip
+    with pytest.raises(faultinject.AuditError):
+        img.audit()
