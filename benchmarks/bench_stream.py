@@ -24,9 +24,22 @@ dispatch (§12) the row additionally records ``round_dispatches`` — the
 image-engine device dispatches the walk half of a steady-state round
 issues, which must be exactly 1 (the queued plan's patch groups and the
 step scan run in the SAME jitted program; smoke.sh gates on it).
+
+``BENCH_SHARDS=N`` adds the multi-device rows (DESIGN.md §14): the same
+stream replayed on a ``ShardedGraph`` at shards=1 and shards=N for both
+walk-image layouts (``digraph`` = slot layout, ``chunked`` = dense).
+Under forced host devices the N-shard row runs the real shard_map
+program and publishes its proof fields: ``round_dispatches`` is the
+fused slot_update dispatches per TOUCHED DEVICE of a steady-state
+routed apply (must be 1), and ``collective_bytes_per_step`` is the
+jaxpr-measured per-device frontier exchange, gated against the
+``(S-1)·rows_max·4 ≈ |V|·4`` model.  ``BENCH_SHARDS_ONLY=1`` skips the
+single-device representation rows (smoke.sh uses it to append the
+sharded rows into the same trajectory file via ``--json`` merge).
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -38,6 +51,83 @@ from . import common
 
 ROUNDS = 12
 WALK_STEPS = 4
+
+
+def _sharded_rows(c, graph: str, frac: float, batches, n_sh: int):
+    """shards={1,N} stream rows for both layouts (DESIGN.md §14)."""
+    from repro.core import distributed as dist
+    from repro.kernels.slot_update import ops as su_ops
+    from repro.kernels.slot_walk import sharded as sw
+    from repro.launch import mesh as mesh_mod
+
+    rows = []
+    for layout, dense in (("digraph", False), ("chunked", True)):
+        for S in sorted({1, n_sh}):
+            # real mesh when the host exposes enough devices (smoke.sh
+            # forces 4); otherwise the bit-identical local emulation —
+            # recorded in ``mode`` so proof gates only bind shmap rows.
+            mesh = (
+                mesh_mod.host_mesh(S)
+                if S > 1 and len(jax.devices()) >= S
+                else None
+            )
+            mode = "shmap" if mesh is not None else "local"
+            # warm pass: compile every jit shape the stream touches
+            g = dist.shard_csr(c, S, mesh=mesh, dense=dense)
+            jax.block_until_ready(g.reverse_walk(WALK_STEPS))
+            for ins, dele in batches:
+                g.apply(updates.plan_update(inserts=ins, deletes=dele))
+                jax.block_until_ready(g.reverse_walk(WALK_STEPS))
+            # measured: fresh graph, identical replay, best of two passes
+            t_upd = t_walk = float("inf")
+            for _ in range(2):
+                g = dist.shard_csr(c, S, mesh=mesh, dense=dense)
+                jax.block_until_ready(g.reverse_walk(WALK_STEPS))
+                p_upd = p_walk = 0.0
+                for ins, dele in batches:
+                    plan = updates.plan_update(inserts=ins, deletes=dele)
+                    t0 = time.perf_counter()
+                    g.apply(plan)
+                    jax.block_until_ready([im.dst for im in g.shards])
+                    p_upd += time.perf_counter() - t0
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(g.reverse_walk(WALK_STEPS))
+                    p_walk += time.perf_counter() - t0
+                if p_upd + p_walk < t_upd + t_walk:
+                    t_upd, t_walk = p_upd, p_walk
+            # routed-patch proof: fused slot_update dispatches per touched
+            # device over two more rounds.  A legal occasional rebuild
+            # round dispatches FEWER than one per routed shard, so the
+            # max is the steady-state figure (clean rounds are exactly 1).
+            disp = []
+            for ins, dele in batches[:2]:
+                plan = updates.plan_update(inserts=ins, deletes=dele)
+                routed = dist.route_updates(plan, g.n_shards, g.rows_max)
+                d0 = su_ops.STATS["dispatches"]
+                g.apply(plan)
+                delta = su_ops.STATS["dispatches"] - d0
+                disp.append(delta / max(len(routed), 1))
+            rd = max(disp)
+            coll = g.collective_bytes_per_step(WALK_STEPS)
+            model = sw.model_bytes_per_step(g.n_shards, g.rows_max, 0)
+            per_round = (t_upd + t_walk) / ROUNDS
+            rows.append(
+                {
+                    "name": f"stream/{graph}/f{frac:g}/shards{S}/{layout}",
+                    "us_per_round": round(per_round * 1e6, 1),
+                    "round_dispatches": int(rd) if rd == int(rd) else rd,
+                    "mode": mode,
+                    "collective_bytes_per_step": int(coll),
+                    "model_bytes_per_step": int(model),
+                    "frontier_bound_bytes": int(1.5 * c.n * 4),
+                    "derived": f"mode={mode} "
+                    f"update_us={t_upd/ROUNDS*1e6:.1f} "
+                    f"walk_us={t_walk/ROUNDS*1e6:.1f} "
+                    f"nv={c.n} rows_max={g.rows_max} "
+                    f"dense={int(g.dense)} rounds={ROUNDS}",
+                }
+            )
+    return rows
 
 
 def run(graph: str = "web_small", frac: float = 1e-2):
@@ -53,8 +143,11 @@ def run(graph: str = "web_small", frac: float = 1e-2):
         )
         for _ in range(ROUNDS)
     ]
+    n_sh = int(os.environ.get("BENCH_SHARDS", "0") or "0")
+    only_shards = os.environ.get("BENCH_SHARDS_ONLY", "") not in ("", "0")
     rows = []
-    for rep_name, cls in REPRESENTATIONS.items():
+    reps = {} if only_shards else REPRESENTATIONS
+    for rep_name, cls in reps.items():
         # pass 1 (untimed): replay the whole stream once so every jit
         # shape the sequence will ever touch is compiled — benchmark
         # order no longer decides which representation pays the one-time
@@ -129,6 +222,8 @@ def run(graph: str = "web_small", frac: float = 1e-2):
                 f"rounds={n_meas}",
             }
         )
+    if n_sh > 0:
+        rows.extend(_sharded_rows(c, graph, frac, batches, n_sh))
     return common.emit(
         rows, ["name", "us_per_round", "round_dispatches", "derived"]
     )

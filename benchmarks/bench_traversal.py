@@ -13,8 +13,16 @@ occupancy story comparable across the whole table.  All rows warm
 uniformly through ``common.timeit_prepared`` (jit compilation and the
 one-time image build land in the untimed warmup for every
 representation, not just digraph).
+
+``BENCH_SHARDS=N`` appends the multi-device rows (DESIGN.md §14): the
+same updated graph walked through ``ShardedGraph`` at shards=1 and
+shards=N per layout, with the jaxpr-measured ``collective_bytes_per_
+step`` proof field on shard_map rows.  ``BENCH_SHARDS_ONLY=1`` emits
+only those rows (smoke.sh merges them into the trajectory via --json).
 """
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
@@ -25,9 +33,58 @@ from . import common
 STEPS = 42
 
 
+def _sharded_rows(c, graph: str, kind: str, plan, n_sh: int):
+    """shards={1,N} walk rows on the post-update graph (DESIGN.md §14)."""
+    import jax
+
+    from repro.core import distributed as dist
+    from repro.kernels.slot_walk import sharded as sw
+    from repro.launch import mesh as mesh_mod
+
+    rows = []
+    for layout, dense in (("digraph", False), ("chunked", True)):
+        for S in sorted({1, n_sh}):
+            mesh = (
+                mesh_mod.host_mesh(S)
+                if S > 1 and len(jax.devices()) >= S
+                else None
+            )
+            mode = "shmap" if mesh is not None else "local"
+            g = dist.shard_csr(c, S, mesh=mesh, dense=dense)
+            g.apply(plan)
+            m_now = g.m
+
+            def walk(_):
+                np.asarray(g.reverse_walk(STEPS))
+
+            t = common.timeit_prepared(
+                lambda: None, walk, repeats=5, reduce="min"
+            )
+            coll = g.collective_bytes_per_step(STEPS)
+            model = sw.model_bytes_per_step(g.n_shards, g.rows_max, 0)
+            occ = g.m / (g.n_shards * g.cap_e)
+            rows.append(
+                {
+                    "name": f"walk{STEPS}/{kind}/{graph}/shards{S}/{layout}",
+                    "us_per_call": round(t * 1e6, 1),
+                    "occupancy": f"{occ:.3f}",
+                    "mode": mode,
+                    "collective_bytes_per_step": int(coll),
+                    "model_bytes_per_step": int(model),
+                    "frontier_bound_bytes": int(1.5 * c.n * 4),
+                    "derived": f"mode={mode} "
+                    f"edge_steps_per_s={m_now*STEPS/t/1e6:.1f}M "
+                    f"nv={c.n} rows_max={g.rows_max} dense={int(g.dense)}",
+                }
+            )
+    return rows
+
+
 def run(graph: str = "social_small"):
     c = common.make_graph(graph)
     rng = np.random.default_rng(11)
+    n_sh = int(os.environ.get("BENCH_SHARDS", "0") or "0")
+    only_shards = os.environ.get("BENCH_SHARDS_ONLY", "") not in ("", "0")
     rows = []
     for kind in ("delete", "insert"):
         frac = 1e-2
@@ -37,7 +94,17 @@ def run(graph: str = "social_small"):
             if kind == "insert"
             else edgebatch.random_deletions(rng, c, count)
         )
-        for rep_name, cls in REPRESENTATIONS.items():
+        if n_sh > 0:
+            from repro.core import updates
+
+            plan = (
+                updates.plan_update(inserts=batch)
+                if kind == "insert"
+                else updates.plan_update(deletes=batch)
+            )
+            rows.extend(_sharded_rows(c, graph, kind, plan, n_sh))
+        reps = {} if only_shards else REPRESENTATIONS
+        for rep_name, cls in reps.items():
             g = cls.from_csr(c)
             g, _ = (
                 g.add_edges(batch) if kind == "insert" else g.remove_edges(batch)

@@ -1,7 +1,12 @@
 """Benchmark driver — one function per paper table/figure.
 Prints ``name,us_per_call,...`` CSV per benchmark; ``--json PATH``
 additionally writes the structured rows (suite -> [row dicts]) so
-``BENCH_*.json`` trajectory files can accumulate across PRs.
+``BENCH_*.json`` trajectory files can accumulate across PRs.  Writing
+MERGES by row name into the existing file: rows this run re-measured
+are replaced in place, rows it did not produce (e.g. the normal
+representation rows during a ``BENCH_SHARDS_ONLY=1`` sharded append,
+or the sharded rows during a normal run) are preserved — a partial
+run never drops the rest of the trajectory.
 
 ``--compare BASELINE.json`` diffs this run's per-row timing columns
 against a checked-in trajectory file (loaded BEFORE ``--json``
@@ -93,6 +98,36 @@ def compare_results(
     return failures
 
 
+def merge_results(prev: dict, new: dict) -> dict:
+    """Merge this run's rows into an existing trajectory file by name.
+
+    Suites absent from ``new`` pass through untouched; within a suite
+    present in both, rows keep the existing file's order, re-measured
+    rows (matched on ``name``) are replaced in place, and rows new to
+    this run append at the end.
+    """
+    out = dict(prev)
+    for suite, rows in new.items():
+        old = out.get(suite)
+        if not isinstance(old, list):
+            out[suite] = rows
+            continue
+        index = {
+            r.get("name"): i
+            for i, r in enumerate(old)
+            if isinstance(r, dict) and "name" in r
+        }
+        merged = list(old)
+        for r in rows:
+            i = index.get(r.get("name") if isinstance(r, dict) else None)
+            if i is None:
+                merged.append(r)
+            else:
+                merged[i] = r
+        out[suite] = merged
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -167,9 +202,18 @@ def main() -> None:
                 f"# regression: NOT updating {args.json}", file=sys.stderr
             )
         else:
+            try:
+                with open(args.json) as fh:
+                    prev = json.load(fh)
+                if not isinstance(prev, dict):
+                    prev = {}
+            except (FileNotFoundError, json.JSONDecodeError):
+                prev = {}  # fresh (or 0-byte touched) file: nothing to keep
             with open(args.json, "w") as fh:
-                json.dump(results, fh, indent=1, default=str)
-            print(f"# wrote {args.json}", file=sys.stderr)
+                json.dump(merge_results(prev, results), fh, indent=1,
+                          default=str)
+            print(f"# wrote {args.json} (merged by row name)",
+                  file=sys.stderr)
     if baseline is not None:
         if failures:
             print(

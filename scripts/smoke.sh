@@ -56,6 +56,54 @@ if bad:
 print("# stream proof ok: 1-dispatch flush→walk, host-free second walk")
 EOF
 
+echo "== sharded stream rows (forced 4-device shard_map, DESIGN.md §14) =="
+# appends shards={1,4} rows into the same trajectory (--json merges by
+# row name); --compare gates them with the usual 1.3x/no-ratchet rule.
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  BENCH_SHARDS=4 BENCH_SHARDS_ONLY=1 \
+  python -m benchmarks.run --only stream \
+    --compare BENCH_stream.json --json BENCH_stream.json
+
+echo "== sharded traversal rows (forced 4-device shard_map) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  BENCH_SHARDS=4 BENCH_SHARDS_ONLY=1 \
+  python -m benchmarks.run --only traversal \
+    --compare BENCH_traversal.json --json BENCH_traversal.json
+
+echo "== sharded proof fields (frontier bytes model, routed 1-dispatch) =="
+# the shard_map rows must prove the §14 model: a steady-state routed
+# apply is exactly ONE fused slot_update dispatch per touched device,
+# and the per-device collective traffic of a walk step equals the
+# jaxpr-measured frontier exchange, within 1.5x of |V|*4 bytes.
+python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_stream.json"))["stream"]
+sh = [r for r in rows if "/shards" in r["name"]]
+if not sh:
+    sys.exit("stream suite missing shards rows (BENCH_SHARDS append failed)")
+bad = []
+for r in sh:
+    if float(r.get("round_dispatches", 1)) != 1:
+        bad.append(f"{r['name']}: round_dispatches={r.get('round_dispatches')}")
+    if r.get("mode") == "shmap":
+        c = int(r.get("collective_bytes_per_step", -1))
+        m = int(r.get("model_bytes_per_step", 0))
+        b = int(r.get("frontier_bound_bytes", 0))
+        if not (0 < c <= b):
+            bad.append(f"{r['name']}: collective={c} not in (0, {b}]")
+        if c != m:
+            bad.append(f"{r['name']}: collective={c} != model={m}")
+if not any(r.get("mode") == "shmap" for r in sh):
+    sys.exit("no shard_map stream rows (forced devices missing?)")
+if bad:
+    sys.exit("sharded proof regressed: " + "; ".join(bad))
+tr = json.load(open("BENCH_traversal.json"))["traversal"]
+if not any("/shards4/" in r["name"] and r.get("mode") == "shmap" for r in tr):
+    sys.exit("traversal suite missing shard_map shards4 rows")
+print("# sharded proof ok: routed 1-dispatch patches, "
+      "frontier bytes == model <= 1.5x |V|*4")
+EOF
+
 echo "== recovery benchmark (durability pipeline, DESIGN.md §13) =="
 python -m benchmarks.run --only recovery --json BENCH_recovery.json
 

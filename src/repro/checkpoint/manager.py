@@ -4,10 +4,11 @@ Fault-tolerance contract (DESIGN.md §5): a step is durable once its
 directory is atomically renamed into place; restart picks the newest
 complete checkpoint; rotation bounds disk.  Pytrees are stored as one
 ``.npz`` per checkpoint plus a JSON manifest of the tree structure, so a
-restore can validate structure before touching device memory.  On real
-multi-host topologies each host writes its own shard files under the same
-step directory (``shard_id``); this container exercises the single-shard
-path plus the manifest/rotation/atomicity machinery.
+restore can validate structure before touching device memory.  Sharded
+owners (the §14 multi-device walk images) write one ``shard_{id}.npz``
+per device under ONE shared step manifest via
+:func:`save_arrays_sharded` — the atomic rename commits all shards or
+none; restore replays shards serially for now.
 """
 from __future__ import annotations
 
@@ -55,27 +56,56 @@ def save_arrays(
 
     Same atomic-rename protocol as :func:`save`, without requiring the
     state to be a pytree — representations hand over their
-    ``state_tree()`` dicts directly.  The ``checkpoint.pre_rename``
-    injection point simulates a crash between the tmp-dir write and the
-    commit rename; like a real crash it leaves the ``.tmp_ckpt_*``
-    debris in place (recovery sweeps it via :func:`clean_stale`), which
-    is why only the SimulatedCrash branch skips cleanup below.
+    ``state_tree()`` dicts directly.  ``shard_id`` names the shard file
+    (``shard_{id}.npz``); multi-shard owners use
+    :func:`save_arrays_sharded` so every shard commits under ONE step
+    manifest and one atomic rename.
+    """
+    return save_arrays_sharded(
+        ckpt_dir, step, {int(shard_id): arrays}, keep=keep
+    )
+
+
+def save_arrays_sharded(
+    ckpt_dir: str,
+    step: int,
+    shards: dict,
+    *,
+    keep: int = 3,
+) -> str:
+    """Write ``{shard_id: {key: ndarray}}`` — one file per shard, one
+    shared step manifest (DESIGN.md §14).
+
+    All shard files land in the same tmp dir, so the atomic-rename
+    commit point covers the whole mesh: a step is either durable for
+    every shard or for none.  The ``checkpoint.pre_rename`` injection
+    point simulates a crash between the tmp-dir write and the commit
+    rename; like a real crash it leaves the ``.tmp_ckpt_*`` debris in
+    place (recovery sweeps it via :func:`clean_stale`), which is why
+    only the SimulatedCrash branch skips cleanup below.
     """
     from ..runtime import faultinject  # lazy: checkpoint stays import-light
 
+    if not shards:
+        raise ValueError("save_arrays_sharded: no shards to write")
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=ckpt_dir)
     try:
-        arrays = {k: np.asarray(v) for k, v in arrays.items()}
-        np.savez(os.path.join(tmp, f"shard_{shard_id}.npz"), **arrays)
-        manifest = {
-            "step": step,
-            "keys": sorted(arrays.keys()),
-            "shapes": {k: list(v.shape) for k, v in arrays.items()},
-            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
-            "n_shards": 1,
-        }
+        manifest = {"step": step, "n_shards": len(shards), "shards": {}}
+        for sid in sorted(shards):
+            arrays = {k: np.asarray(v) for k, v in shards[sid].items()}
+            np.savez(os.path.join(tmp, f"shard_{sid}.npz"), **arrays)
+            manifest["shards"][str(sid)] = {
+                "keys": sorted(arrays.keys()),
+                "shapes": {k: list(v.shape) for k, v in arrays.items()},
+                "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            }
+        if len(shards) == 1:
+            # legacy flat fields: single-shard manifests stay readable by
+            # pre-§14 restores (and restore() below)
+            (only,) = manifest["shards"].values()
+            manifest.update(only)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         faultinject.fire("checkpoint.pre_rename")
@@ -91,12 +121,34 @@ def save_arrays(
     return final
 
 
-def restore_arrays(ckpt_dir: str, *, step: Optional[int] = None) -> tuple[dict, int]:
+def _shard_manifest(manifest: dict, shard_id: int, where: str) -> dict:
+    """The {keys, shapes, dtypes} block for one shard of a manifest."""
+    per = manifest.get("shards")
+    if per is not None:
+        blk = per.get(str(shard_id))
+        if blk is None:
+            raise FileNotFoundError(
+                f"checkpoint {where}: no shard {shard_id} in manifest "
+                f"(has {sorted(per)})"
+            )
+        return blk
+    if shard_id != 0:  # pre-§14 manifest: flat fields, single shard
+        raise FileNotFoundError(
+            f"checkpoint {where}: legacy single-shard manifest has no "
+            f"shard {shard_id}"
+        )
+    return manifest
+
+
+def restore_arrays(
+    ckpt_dir: str, *, step: Optional[int] = None, shard_id: int = 0
+) -> tuple[dict, int]:
     """Manifest-driven flat restore — no ``like`` template required.
 
     The recovery path has no live object to mirror (the process that
     owned the shapes is gone), so the manifest is the source of truth:
     every key must load with exactly its recorded shape and dtype.
+    ``shard_id`` selects one shard file of a sharded step manifest.
     Returns ``({key: ndarray}, step)``.
     """
     if step is None:
@@ -106,21 +158,51 @@ def restore_arrays(ckpt_dir: str, *, step: Optional[int] = None) -> tuple[dict, 
     d = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(d, "shard_0.npz"), allow_pickle=False)
-    if set(data.files) != set(manifest["keys"]):
+    blk = _shard_manifest(manifest, int(shard_id), d)
+    data = np.load(
+        os.path.join(d, f"shard_{int(shard_id)}.npz"), allow_pickle=False
+    )
+    if set(data.files) != set(blk["keys"]):
         raise ValueError(
-            f"checkpoint {d}: npz keys disagree with manifest"
+            f"checkpoint {d}: shard {shard_id} npz keys disagree with manifest"
         )
     out = {}
-    for k in manifest["keys"]:
+    for k in blk["keys"]:
         v = data[k]
-        if list(v.shape) != manifest["shapes"][k] or str(v.dtype) != manifest["dtypes"][k]:
+        if list(v.shape) != blk["shapes"][k] or str(v.dtype) != blk["dtypes"][k]:
             raise ValueError(
                 f"checkpoint {d}: {k} is {v.shape}/{v.dtype}, manifest says "
-                f"{manifest['shapes'][k]}/{manifest['dtypes'][k]}"
+                f"{blk['shapes'][k]}/{blk['dtypes'][k]}"
             )
         out[k] = v
     return out, int(step)
+
+
+def restore_arrays_sharded(
+    ckpt_dir: str, *, step: Optional[int] = None
+) -> tuple[dict, int]:
+    """Restore every shard of a step: ``({shard_id: arrays}, step)``.
+
+    Serial replay — shards load one after another (parallel replay is a
+    ROADMAP item).  Legacy single-shard manifests come back as
+    ``{0: arrays}``.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    sids = (
+        sorted(int(s) for s in manifest["shards"])
+        if manifest.get("shards") is not None
+        else [0]
+    )
+    return (
+        {s: restore_arrays(ckpt_dir, step=step, shard_id=s)[0] for s in sids},
+        int(step),
+    )
 
 
 def clean_stale(ckpt_dir: str) -> list[str]:

@@ -1,272 +1,549 @@
-"""Distributed dynamic graph: the paper's per-partition CSR (Alg 5) as the
-shard layout of a multi-pod mesh (DESIGN.md §5).
+"""Multi-device sharded walk images (DESIGN.md §14).
 
-Vertices are block-partitioned over the mesh's data axes (each shard owns a
-contiguous vertex range — the analogue of the paper's per-thread partition);
-edges live with their source vertex.  Three distributed operations:
+``ShardedGraph`` is a thin wrapper over per-shard ``WalkImage``s: vertices
+block-partition over a 1-D ``("data",)`` mesh (shard s owns the contiguous
+range ``[s·rows_max, (s+1)·rows_max)``, the analogue of the paper's Alg-5
+per-thread partition), and each shard's edges live in its OWN standard
+walk image — same packed tiles, same CP2AA/dense layout policy, same
+``kernels/slot_walk`` / ``kernels/slot_update`` programs as the
+single-device path.  There is no bespoke distributed walk or apply any
+more:
 
-  * ``reverse_walk`` — per-step: all-gather the frontier (visits vector),
-    local gather + segment-sum.  This is the halo exchange of a 1-D vertex
-    partitioning; the collective term is |V|·4 bytes per step per shard.
-  * ``route_updates`` — bucket a batch by owning shard (host), pad buckets
-    to a shared pow-2 width (CP2AA bucketing keeps the all-to-all shape
-    stable across steps), exchange, apply locally.
-  * ``apply_updates`` — per-shard sort-merge into the local padded CSR
-    (functional; local slack follows the same pow-2 class policy).
+  * ``reverse_walk`` — ONE jitted shard_map program
+    (``kernels/slot_walk/sharded``): every shard runs the blocked
+    interval step on its tiles and the only cross-shard exchange per
+    step is the frontier all_gather, (S-1)·rows_max·4 ≈ |V|·4 bytes per
+    device per step.  Shard cuts align to block boundaries by
+    construction, so the hierarchical prefix's inter-tile base scan
+    cancels inside each shard and never crosses devices.
+  * ``apply`` — ``route_updates`` slices a canonical ``UpdatePlan`` by
+    owning shard on host (the stream is (src, dst)-sorted, so routing is
+    a searchsorted over block boundaries — zero re-sort) and each shard
+    patches its slice through its image's fused ``slot_update`` path:
+    one dispatch per device per plan, executing on the shard's own
+    device because its buffers are committed there.
+  * ``gather_csr`` — reassembles a host CSR from the live block
+    prefixes (per-shard pow-2 slack drops by construction), validating
+    that every shard's edges sit inside its owned row range — a
+    row-count mismatch raises instead of silently mis-stitching offsets.
 
-Implementation notes: everything here is mesh-generic ``shard_map`` code.
-Tests run it on a small forced-host-device mesh; the dry-run lowers it on
-the production meshes.
+Growth and overflow take the rebuild path every representation uses:
+gather, host-apply the unapplied plans, re-shard once — this is how a
+grown row (or a new vertex) relocates across a shard boundary.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import alloc, csr as csr_mod, util
-
-if hasattr(jax, "shard_map"):  # jax >= 0.5
-    _shard_map = jax.shard_map
-else:  # pragma: no cover - depends on installed jax
-    from jax.experimental.shard_map import shard_map as _shard_map_legacy
-
-    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
-        # older jax spells check_vma as check_rep
-        return _shard_map_legacy(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_rep=check_vma,
-        )
+from . import alloc, csr as csr_mod, updates as upd_mod, util, walk_image
+from ..launch import mesh as mesh_mod
 
 SENTINEL = util.SENTINEL
 
 
-@dataclasses.dataclass(frozen=True)
-class ShardedGraph:
-    """Equal-size per-shard slotted rows: [S, rows_per_shard * slots]."""
+def _dense_policy(deg: np.ndarray, m: int) -> bool:
+    """The §12 compaction decision, made ONCE globally so every shard
+    builds the same layout (and the jit-shape lattice stays shared)."""
+    caps = np.where(deg > 0, alloc.edge_capacities(deg), 0)
+    total = int(caps.sum())
+    return m > 0 and m < walk_image.DENSE_THRESHOLD * total
 
-    src_local: jnp.ndarray   # [S, E_loc] local row id (or SENTINEL)
-    dst: jnp.ndarray         # [S, E_loc] global dst   (or SENTINEL)
-    wgt: jnp.ndarray         # [S, E_loc]
-    n: int                   # global vertex count
-    rows_per_shard: int
+
+def _shard_cap(deg_s: np.ndarray, dense: bool) -> int:
+    """The cap_e ``WalkImage.from_csr_arrays`` would pick for one shard."""
+    if dense:
+        total = int(deg_s.sum())
+    else:
+        total = int(np.where(deg_s > 0, alloc.edge_capacities(deg_s), 0).sum())
+    return alloc.pow2_with_headroom(total, 1.0 if dense else 0.25)
+
+
+@dataclasses.dataclass
+class ShardedGraph:
+    """Per-shard WalkImages over a block vertex partition (DESIGN.md §14).
+
+    Every image spans the PADDED global vertex space ``v_pad =
+    n_shards·rows_max`` (so visit vectors concatenate without index
+    remapping — vertex ids are identical on every shard) but holds only
+    its owned rows' blocks; rows outside the owned range have no block
+    and contribute exact zeros to the walk step.
+    """
+
+    shards: list          # [S] WalkImage, nv == v_pad each
+    n: int                # true global vertex count (<= v_pad)
+    rows_max: int         # vertices per shard block
     n_shards: int
+    mesh: Optional[object] = None   # jax Mesh; None = single-device local mode
+    dense: bool = False             # global layout policy (shared by shards)
+    _placed: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    # ------------------------------------------------------------------
+    @property
+    def v_pad(self) -> int:
+        return self.n_shards * self.rows_max
 
     @property
-    def e_loc(self) -> int:
-        return int(self.dst.shape[1])
+    def cap_e(self) -> int:
+        return self.shards[0].cap_e
 
+    @property
+    def m(self) -> int:
+        return sum(int(img.live) for img in self.shards)
 
-def shard_csr(c: csr_mod.CSR, n_shards: int) -> ShardedGraph:
-    """Partition a CSR into equal vertex blocks with pow-2 local capacity."""
-    rows_per = -(-c.n // n_shards)
-    o = np.asarray(c.offsets)
-    d = np.asarray(c.dst)
-    w = np.asarray(c.wgt) if c.wgt is not None else np.ones(c.m, np.float32)
-    counts = [
-        int(o[min((s + 1) * rows_per, c.n)] - o[min(s * rows_per, c.n)])
-        for s in range(n_shards)
-    ]
-    e_loc = alloc.next_pow2(max(max(counts), 1))
-    src_l = np.full((n_shards, e_loc), SENTINEL, np.int32)
-    dst_l = np.full((n_shards, e_loc), SENTINEL, np.int32)
-    wgt_l = np.zeros((n_shards, e_loc), np.float32)
-    rows_global = np.repeat(np.arange(c.n), np.diff(o))
-    for s in range(n_shards):
-        lo, hi = o[min(s * rows_per, c.n)], o[min((s + 1) * rows_per, c.n)]
-        k = hi - lo
-        src_l[s, :k] = rows_global[lo:hi] - s * rows_per
-        dst_l[s, :k] = d[lo:hi]
-        wgt_l[s, :k] = w[lo:hi]
-    return ShardedGraph(
-        src_local=jnp.asarray(src_l),
-        dst=jnp.asarray(dst_l),
-        wgt=jnp.asarray(wgt_l),
-        n=int(c.n),
-        rows_per_shard=rows_per,
-        n_shards=n_shards,
-    )
+    def owned_range(self, s: int) -> tuple[int, int]:
+        return s * self.rows_max, min((s + 1) * self.rows_max, self.n)
 
+    def edges_hi(self) -> int:
+        """Shared static walk bound: shards share cap_e, so the max of the
+        per-shard quantized bumps is on the same lattice."""
+        return max(img.edges_hi() for img in self.shards)
 
-def _walk_step(src_local, dst, visits_local, rows_per_shard, axis):
-    """One reverse-walk step inside shard_map: all-gather frontier, local
-    gather + segment-sum.  visits_local: [rows_per_shard]."""
-    frontier = jax.lax.all_gather(visits_local, axis, tiled=True)  # [n_global_pad]
-    valid = dst != SENTINEL
-    vals = jnp.where(valid, frontier[jnp.clip(dst, 0, frontier.shape[0] - 1)], 0.0)
-    seg = jnp.where(valid, src_local, rows_per_shard).astype(jnp.int32)
-    out = jax.ops.segment_sum(vals, seg, num_segments=rows_per_shard + 1)
-    return out[:rows_per_shard]
+    def _devices(self):
+        return list(np.asarray(self.mesh.devices).reshape(-1))
 
+    def _lohi(self, img) -> tuple[np.ndarray, np.ndarray]:
+        starts = np.asarray(img.starts[: self.v_pad], np.int64)
+        degs = np.asarray(img.degs[: self.v_pad], np.int64)
+        has = starts >= 0
+        lo = np.where(has, starts, 0).astype(np.int32)
+        hi = np.where(has, starts + degs, 0).astype(np.int32)
+        return lo, hi
 
-def make_reverse_walk(
-    mesh: Mesh, steps: int, rows_per_shard: int, axis=("data",)
-):
-    """Build a jitted sharded reverse walk over the mesh axes ``axis``."""
-    axis_names = axis if isinstance(axis, tuple) else (axis,)
-    spec = P(axis_names)
+    # ------------------------------------------------------------------
+    # updates: host routing + per-shard fused patches
+    # ------------------------------------------------------------------
+    def apply(self, plan) -> None:
+        """Apply one canonical UpdatePlan across the mesh.
 
-    @functools.partial(
-        jax.jit,
-        static_argnames=(),
-    )
-    def walk(src_local, dst, visits0):
-        def shard_fn(src_l, d, v):
-            # shard_map gives [1, ...] blocks on the sharded leading dim
-            src_l, d, v = src_l[0], d[0], v[0]
+        Width groups route host-side to the shard owning their rows and
+        each shard patches its slice through the unchanged fused
+        ``slot_update`` dispatch — exactly one device program per
+        touched shard (its buffers are committed to its device, so the
+        patch executes there).  Vertex growth or a shard whose bump
+        slack is exhausted falls back to ONE gather + host-apply +
+        re-shard — the relocation path that can move rows across shard
+        boundaries.
+        """
+        plan.validate()
+        if plan.n_ops == 0:
+            return
+        if plan.max_insert_vertex() >= self.n:
+            self._rebuild(extra=(plan,))
+            return
+        failed = False
+        for sid, sub in route_updates(plan, self.n_shards, self.rows_max):
+            img = self.shards[sid]
+            img.queue(sub)
+            if not img.flush():
+                failed = True  # sub (or a compaction request) pends on img
+        self._placed = None
+        if failed:
+            self._rebuild()
 
-            def body(vis, _):
-                return _walk_step(src_l, d, vis, rows_per_shard, axis_names), None
+    def _rebuild(self, extra=()) -> None:
+        """Gather + host-apply unapplied plans + re-shard ONCE."""
+        src, dst, wgt = _gather_coo(self)
+        plans = [p for img in self.shards for p in img._pending]
+        plans.extend(extra)
+        n_new = self.n
+        for p in plans:
+            n_new = max(n_new, p.max_insert_vertex() + 1)
+        for p in plans:
+            src, dst, wgt = _host_apply(src, dst, wgt, p)
+        c = csr_mod.from_coo(src, dst, wgt, n=n_new, dedup=False)
+        g = shard_csr(c, self.n_shards, mesh=self.mesh, dense=None)
+        self.shards = g.shards
+        self.n = g.n
+        self.rows_max = g.rows_max
+        self.dense = g.dense
+        self._placed = None
 
-            v, _ = jax.lax.scan(body, v, None, length=steps)
-            return v[None]
+    # ------------------------------------------------------------------
+    # traversal: one program, frontier-exchange only
+    # ------------------------------------------------------------------
+    def _assemble(self):
+        """(dst_g, lo_g, hi_g) walk operands, memoized until the next apply.
 
-        return _shard_map(
-            shard_fn,
-            mesh=mesh,
-            in_specs=(spec, spec, spec),
-            out_specs=spec,
-            check_vma=False,
-        )(src_local, dst, visits0)
-
-    return walk
-
-
-def reverse_walk(g: ShardedGraph, steps: int, mesh: Mesh, axis=("data",)):
-    """Run the sharded reverse walk; returns visits [n] (host-trimmed)."""
-    axis_names = axis if isinstance(axis, tuple) else (axis,)
-    visits0 = jnp.ones((g.n_shards, g.rows_per_shard), jnp.float32)
-    spec = NamedSharding(mesh, P(axis_names))
-    src_local = jax.device_put(g.src_local, spec)
-    dst = jax.device_put(g.dst, spec)
-    visits0 = jax.device_put(visits0, spec)
-    walk = make_reverse_walk(mesh, steps, g.rows_per_shard, axis_names)
-    out = walk(src_local, dst, visits0)
-    return out.reshape(-1)[: g.n]
-
-
-# ---------------------------------------------------------------------------
-# distributed batch updates
-# ---------------------------------------------------------------------------
-def route_updates(
-    batch_src: np.ndarray,
-    batch_dst: np.ndarray,
-    batch_wgt: Optional[np.ndarray],
-    g: ShardedGraph,
-):
-    """Bucket a COO batch by owning shard, pad to pow-2 width [S, K].
-
-    On real hardware each host buckets its local slice and the exchange is
-    an all-to-all; in this single-controller build the bucketing is global
-    host work with the same pow-2-padded layout.
-    """
-    owner = batch_src // g.rows_per_shard
-    # per-shard slices must stay (src, dst)-lexsorted for binary search
-    order = np.lexsort((batch_dst, batch_src, owner))
-    owner_s = owner[order]
-    counts = np.bincount(owner_s, minlength=g.n_shards)
-    k = alloc.next_pow2(max(int(counts.max()), 1))
-    s_out = np.full((g.n_shards, k), SENTINEL, np.int32)
-    d_out = np.full((g.n_shards, k), SENTINEL, np.int32)
-    w_out = np.zeros((g.n_shards, k), np.float32)
-    w = batch_wgt if batch_wgt is not None else np.ones_like(batch_src, np.float32)
-    srt_s, srt_d, srt_w = batch_src[order], batch_dst[order], w[order]
-    pos = 0
-    for s in range(g.n_shards):
-        c = int(counts[s])
-        s_out[s, :c] = srt_s[pos : pos + c] - s * g.rows_per_shard
-        d_out[s, :c] = srt_d[pos : pos + c]
-        w_out[s, :c] = srt_w[pos : pos + c]
-        pos += c
-    return jnp.asarray(s_out), jnp.asarray(d_out), jnp.asarray(w_out)
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_shard_update(out_cap: int, op: str, mesh_axes, rows_per_shard: int):
-    """Per-shard sort-merge update (insert='union', delete='difference')."""
-
-    def local(src_l, dst_l, wgt_l, bs, bd, bw):
-        src_l, dst_l, wgt_l = src_l[0], dst_l[0], wgt_l[0]
-        bs, bd, bw = bs[0], bd[0], bw[0]
-        if op == "insert":
-            s = jnp.concatenate([bs, src_l])
-            d = jnp.concatenate([bd, dst_l])
-            w = jnp.concatenate([bw, wgt_l])
-            order = util.lexsort2(s, d)
-            s, d, w = s[order], d[order], w[order]
-            dup = jnp.concatenate(
-                [jnp.array([False]), (s[1:] == s[:-1]) & (d[1:] == d[:-1])]
-            )
-            s = jnp.where(dup, SENTINEL, s)
-            d = jnp.where(dup, SENTINEL, d)
-            order = util.lexsort2(s, d)
-            s, d, w = s[order][:out_cap], d[order][:out_cap], w[order][:out_cap]
+        Mesh mode builds the global [S, ...] arrays zero-copy from the
+        per-shard committed buffers (``make_array_from_single_device_
+        arrays``); local mode stacks them on the one device.
+        """
+        if self._placed is not None:
+            return self._placed
+        S, v_pad, cap_e = self.n_shards, self.v_pad, self.cap_e
+        lohi = [self._lohi(img) for img in self.shards]
+        if self.mesh is None:
+            dst_g = jnp.stack([img.dst for img in self.shards])
+            lo_g = jnp.stack([jnp.asarray(lo) for lo, _ in lohi])
+            hi_g = jnp.stack([jnp.asarray(hi) for _, hi in lohi])
         else:
-            _, found = util.searchsorted_2d(bs, bd, src_l, dst_l)
-            s = jnp.where(found, SENTINEL, src_l)
-            d = jnp.where(found, SENTINEL, dst_l)
-            order = util.lexsort2(s, d)
-            s, d, w = s[order][:out_cap], d[order][:out_cap], wgt_l[order][:out_cap]
-        m_loc = jnp.sum(s != SENTINEL, dtype=jnp.int32)
-        return s[None], d[None], w[None], m_loc[None]
+            from jax.sharding import NamedSharding, PartitionSpec as P
 
-    def fn(mesh, src_l, dst_l, wgt_l, bs, bd, bw):
-        spec = P(mesh_axes)
-        return _shard_map(
-            local,
-            mesh=mesh,
-            in_specs=(spec,) * 6,
-            out_specs=(spec, spec, spec, P(mesh_axes)),
-            check_vma=False,
-        )(src_l, dst_l, wgt_l, bs, bd, bw)
+            devs = self._devices()
+            sh = NamedSharding(self.mesh, P("data", None))
 
-    return fn
+            def _global(shape, parts):
+                return jax.make_array_from_single_device_arrays(
+                    shape, sh, parts
+                )
+
+            dst_g = _global(
+                (S, cap_e),
+                [jnp.reshape(img.dst, (1, cap_e)) for img in self.shards],
+            )
+            lo_g = _global(
+                (S, v_pad),
+                [
+                    jax.device_put(lo.reshape(1, v_pad), d)
+                    for (lo, _), d in zip(lohi, devs)
+                ],
+            )
+            hi_g = _global(
+                (S, v_pad),
+                [
+                    jax.device_put(hi.reshape(1, v_pad), d)
+                    for (_, hi), d in zip(lohi, devs)
+                ],
+            )
+        self._placed = (dst_g, lo_g, hi_g)
+        return self._placed
+
+    def reverse_walk(self, steps: int, *, visits0=None):
+        """k-step reverse walk; [n] (or [B, n] with ``visits0`` [B, n]).
+
+        One jitted program per walk: the shard_map frontier-exchange
+        build on a mesh, or its bit-identical local emulation on one
+        device.  Unweighted visit counts are exact small integers in
+        f32, so both modes (and the single-device WalkImage path) agree
+        bitwise on the graphs the parity suite sweeps.
+        """
+        from ..kernels.slot_walk import sharded as _sw
+
+        nwalks = 0 if visits0 is None else int(visits0.shape[0])
+        b = max(nwalks, 1)
+        vis = np.ones((b, self.v_pad), np.float32)
+        if visits0 is not None:
+            # pad rows keep 1.0 — no edge ever references them, so their
+            # value is unobservable and trimmed from the result
+            vis[:, : self.n] = np.asarray(visits0, np.float32)
+        dst_g, lo_g, hi_g = self._assemble()
+        e_hi = self.edges_hi()
+        if self.mesh is None:
+            fn = _sw.make_local_walk(
+                steps, self.n_shards, self.rows_max, self.cap_e, e_hi, nwalks
+            )
+            out = fn(dst_g, lo_g, hi_g, jnp.asarray(vis))
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            fn = _sw.make_sharded_walk(
+                self.mesh, steps, self.n_shards, self.rows_max, self.cap_e,
+                e_hi, nwalks,
+            )
+            vis_r = jax.device_put(
+                vis, NamedSharding(self.mesh, P(None, None))
+            )
+            out = fn(dst_g, lo_g, hi_g, vis_r)
+        walk_image.STATS["dispatches"] += 1
+        out = out[:, : self.n]
+        return out[0] if visits0 is None else out
+
+    def collective_bytes_per_step(self, steps: int, *, nwalks: int = 0) -> int:
+        """Measured per-device collective bytes per walk step (jaxpr proof).
+
+        0 in local mode — the emulation genuinely exchanges nothing.
+        """
+        from ..kernels.slot_walk import sharded as _sw
+
+        if self.mesh is None:
+            return 0
+        return _sw.collective_bytes_per_step(
+            self.mesh, steps, self.n_shards, self.rows_max, self.cap_e,
+            self.edges_hi(), nwalks,
+        )
+
+    # ------------------------------------------------------------------
+    # checkpoint: one file per shard under a shared step manifest
+    # ------------------------------------------------------------------
+    def state_trees(self) -> dict:
+        """{shard_id: flat state dict} — the sharded checkpoint payload."""
+        out = {}
+        for s, img in enumerate(self.shards):
+            out[s] = {
+                "dst": np.asarray(img.dst),
+                "wgt": np.asarray(img.wgt),
+                "rows": np.asarray(img.rows),
+                "starts": np.asarray(img.starts, np.int64),
+                "caps": np.asarray(img.caps, np.int64),
+                "degs": np.asarray(img.degs, np.int64),
+                "meta": np.asarray(
+                    [img.nv, img.bump, img.live, self.n, self.rows_max,
+                     self.n_shards, int(self.dense)],
+                    np.int64,
+                ),
+            }
+        return out
+
+    def save(self, ckpt_dir: str, step: int, *, keep: int = 3) -> str:
+        from ..checkpoint import manager as ckpt
+
+        return ckpt.save_arrays_sharded(
+            ckpt_dir, step, self.state_trees(), keep=keep
+        )
+
+    @classmethod
+    def restore(
+        cls, ckpt_dir: str, *, step: Optional[int] = None, mesh=None
+    ) -> "ShardedGraph":
+        """Serial per-shard replay of a sharded step manifest."""
+        from ..checkpoint import manager as ckpt
+
+        trees, _step = ckpt.restore_arrays_sharded(ckpt_dir, step=step)
+        return cls.from_state_trees(trees, mesh=mesh)
+
+    @classmethod
+    def from_state_trees(cls, trees: dict, *, mesh=None) -> "ShardedGraph":
+        metas = {s: t["meta"] for s, t in trees.items()}
+        any_meta = next(iter(metas.values()))
+        n, rows_max, n_shards, dense = (
+            int(any_meta[3]), int(any_meta[4]), int(any_meta[5]),
+            bool(any_meta[6]),
+        )
+        if sorted(trees) != list(range(n_shards)):
+            raise ValueError(
+                f"sharded restore: have shards {sorted(trees)}, "
+                f"manifest says n_shards={n_shards}"
+            )
+        devs = (
+            list(np.asarray(mesh.devices).reshape(-1))
+            if mesh is not None
+            else [None] * n_shards
+        )
+        shards = []
+        for s in range(n_shards):
+            t = trees[s]
+            nv, bump, live = (int(t["meta"][0]), int(t["meta"][1]),
+                              int(t["meta"][2]))
+            dev = devs[s]
+            put = (lambda a: jax.device_put(a, dev)) if dev is not None \
+                else jnp.asarray
+            img = walk_image.WalkImage(
+                dst=put(t["dst"]), wgt=put(t["wgt"]), rows=put(t["rows"]),
+                starts=np.asarray(t["starts"], np.int64),
+                caps=np.asarray(t["caps"], np.int64),
+                degs=np.asarray(t["degs"], np.int64),
+                nv=nv, bump=bump, live=live,
+                base_occupancy=live / max(bump, 1),
+            )
+            shards.append(img)
+        return cls(
+            shards=shards, n=n, rows_max=rows_max, n_shards=n_shards,
+            mesh=mesh, dense=dense,
+        )
+
+    def audit(self) -> dict:
+        """Per-shard image audits plus the cross-shard boundary pass."""
+        reports = [img.audit() for img in self.shards]
+        for s, img in enumerate(self.shards):
+            lo_v, hi_v = self.owned_range(s)
+            degs = np.asarray(img.degs[: self.v_pad], np.int64)
+            stray = degs.copy()
+            stray[lo_v:hi_v] = 0
+            if stray.any():
+                raise ValueError(
+                    f"shard {s}: edges on non-owned rows "
+                    f"{np.nonzero(stray)[0][:8].tolist()}"
+                )
+        return {"shards": reports, "m": self.m}
 
 
-def apply_updates(
-    g: ShardedGraph,
-    batch_src: np.ndarray,
-    batch_dst: np.ndarray,
-    batch_wgt: Optional[np.ndarray],
-    mesh: Mesh,
+# ---------------------------------------------------------------------------
+# construction / routing / gathering
+# ---------------------------------------------------------------------------
+def shard_csr(
+    c: csr_mod.CSR,
+    n_shards: int,
     *,
-    op: str = "insert",
-    axis=("data",),
+    mesh=None,
+    dense: Optional[bool] = None,
 ) -> ShardedGraph:
-    axis_names = axis if isinstance(axis, tuple) else (axis,)
-    bs, bd, bw = route_updates(batch_src, batch_dst, batch_wgt, g)
-    if op == "insert":
-        out_cap = alloc.next_pow2(g.e_loc + int(bs.shape[1]))
-    else:
-        out_cap = g.e_loc
-    fn = _jit_shard_update(out_cap, op, axis_names, g.rows_per_shard)
-    spec = NamedSharding(mesh, P(axis_names))
-    args = [jax.device_put(x, spec) for x in (g.src_local, g.dst, g.wgt, bs, bd, bw)]
-    s, d, w, m_loc = jax.jit(
-        functools.partial(fn, mesh)
-    )(*args)
-    return dataclasses.replace(
-        g, src_local=s, dst=d, wgt=w
-    ), int(jnp.sum(m_loc))
+    """Partition a CSR into per-shard WalkImages on a block vertex layout.
+
+    All shards share one cap_e (``min_cap_e`` floors each build at the
+    largest shard's natural capacity) so every per-shard program — walk
+    step, fused patch — compiles once for the whole mesh.  With a mesh,
+    each shard's device payload is committed to its own device; without
+    one the graph runs in single-device local mode (parity tests, the
+    shards=1 bench row).
+    """
+    if n_shards < 1:
+        raise ValueError(f"shard_csr: n_shards must be >= 1, got {n_shards}")
+    if c.n < n_shards:
+        raise ValueError(
+            f"shard_csr: need n >= n_shards, got n={c.n}, S={n_shards}"
+        )
+    if mesh is not None and len(np.asarray(mesh.devices).reshape(-1)) != n_shards:
+        raise ValueError("shard_csr: mesh device count != n_shards")
+    rows_max = -(-c.n // n_shards)
+    v_pad = n_shards * rows_max
+    o = np.asarray(c.offsets, np.int64)
+    d = np.asarray(c.dst)
+    w = (
+        np.asarray(c.wgt, np.float32)
+        if c.wgt is not None
+        else np.ones(c.m, np.float32)
+    )
+    deg = np.diff(o)
+    if dense is None:
+        dense = _dense_policy(deg, int(c.m))
+
+    deg_full = np.zeros(v_pad, np.int64)
+    deg_full[: c.n] = deg
+    cap_shared = max(
+        _shard_cap(deg_full[s * rows_max:(s + 1) * rows_max], dense)
+        for s in range(n_shards)
+    )
+    devs = (
+        list(np.asarray(mesh.devices).reshape(-1))
+        if mesh is not None
+        else [None] * n_shards
+    )
+    shards = []
+    for s in range(n_shards):
+        lo_v = s * rows_max
+        hi_v = min((s + 1) * rows_max, c.n)
+        deg_s = np.zeros(v_pad, np.int64)
+        if hi_v > lo_v:
+            deg_s[lo_v:hi_v] = deg[lo_v:hi_v]
+        offsets_s = np.concatenate([[0], np.cumsum(deg_s)])
+        e0, e1 = (int(o[lo_v]), int(o[hi_v])) if hi_v > lo_v else (0, 0)
+        img = walk_image.WalkImage.from_csr_arrays(
+            offsets_s, d[e0:e1], w[e0:e1], v_pad,
+            dense=dense, min_cap_e=cap_shared,
+        )
+        if devs[s] is not None:
+            img.dst = jax.device_put(img.dst, devs[s])
+            img.wgt = jax.device_put(img.wgt, devs[s])
+            img.rows = jax.device_put(img.rows, devs[s])
+        shards.append(img)
+    return ShardedGraph(
+        shards=shards, n=int(c.n), rows_max=rows_max, n_shards=n_shards,
+        mesh=mesh, dense=bool(dense),
+    )
+
+
+def route_updates(plan, n_shards: int, rows_max: int):
+    """Slice a canonical UpdatePlan by owning shard: [(shard_id, subplan)].
+
+    The op stream is (src, dst)-sorted, so each shard's ops are one
+    contiguous slice — routing is a searchsorted over the block
+    boundaries, zero re-sort, and every slice is itself canonical
+    (strictly increasing keys), so ``plan_from_canonical`` rebuilds the
+    per-shard run structure byte-identically to a locally-planned batch.
+    Ops beyond the padded vertex space land on the last shard, where the
+    image's own row-range filter drops them (out-of-range deletes stay
+    silently filtered, as everywhere else).
+    """
+    bounds = np.arange(1, n_shards, dtype=np.int64) * rows_max
+    cuts = np.searchsorted(plan.q_src, bounds, side="left")
+    idx = np.concatenate([[0], cuts, [plan.n_ops]]).astype(np.int64)
+    out = []
+    for s in range(n_shards):
+        a, b = int(idx[s]), int(idx[s + 1])
+        if a == b:
+            continue
+        out.append((
+            s,
+            upd_mod.plan_from_canonical(
+                plan.q_src[a:b], plan.q_dst[a:b],
+                plan.q_wgt[a:b], plan.q_del[a:b],
+            ),
+        ))
+    return out
+
+
+def _gather_coo(g: ShardedGraph):
+    """Live (src, dst, wgt) from every shard's block prefixes, validated.
+
+    Per-shard pow-2 slack drops by construction (only ``deg`` slots per
+    row are read).  Edges on rows a shard does not own, or destination
+    ids outside ``[0, n)``, raise — silent mis-stitching of the
+    reassembled offsets is exactly the failure mode this guards.
+    """
+    srcs, dsts, wgts = [], [], []
+    for s, img in enumerate(g.shards):
+        lo_v, hi_v = g.owned_range(s)
+        degs = np.asarray(img.degs[: g.v_pad], np.int64)
+        stray = degs.copy()
+        stray[lo_v:hi_v] = 0
+        if stray.any():
+            bad = np.nonzero(stray)[0][:8].tolist()
+            raise ValueError(
+                f"gather_csr: shard {s} owns rows [{lo_v}, {hi_v}) but "
+                f"carries edges on rows {bad} — shard row-count mismatch"
+            )
+        dg = degs[lo_v:hi_v]
+        m_s = int(dg.sum())
+        if m_s == 0:
+            continue
+        starts = np.asarray(img.starts[lo_v:hi_v], np.int64)
+        first = np.cumsum(dg) - dg
+        gidx = np.repeat(starts, dg) + (
+            np.arange(m_s, dtype=np.int64) - np.repeat(first, dg)
+        )
+        d = np.asarray(img.dst)[gidx]
+        if bool((d == SENTINEL).any()) or bool((d >= g.n).any()):
+            raise ValueError(
+                f"gather_csr: shard {s} live prefix holds destination ids "
+                f"outside [0, {g.n}) — shard row-count mismatch"
+            )
+        srcs.append(np.repeat(np.arange(lo_v, hi_v, dtype=np.int64), dg))
+        dsts.append(d.astype(np.int64))
+        wgts.append(np.asarray(img.wgt)[gidx])
+    if not srcs:
+        z = np.empty(0, np.int64)
+        return z, z.copy(), np.empty(0, np.float32)
+    return (
+        np.concatenate(srcs), np.concatenate(dsts),
+        np.concatenate(wgts).astype(np.float32),
+    )
 
 
 def gather_csr(g: ShardedGraph) -> csr_mod.CSR:
-    """Collect the sharded graph back into a host CSR (tests)."""
-    s = np.asarray(g.src_local)
-    d = np.asarray(g.dst)
-    w = np.asarray(g.wgt)
-    srcs, dsts, wgts = [], [], []
-    for sh in range(g.n_shards):
-        mask = s[sh] != SENTINEL
-        srcs.append(s[sh][mask].astype(np.int64) + sh * g.rows_per_shard)
-        dsts.append(d[sh][mask])
-        wgts.append(w[sh][mask])
-    return csr_mod.from_coo(
-        np.concatenate(srcs), np.concatenate(dsts), np.concatenate(wgts), n=g.n,
-        dedup=False,
+    """Collect the sharded graph back into a host CSR (tests, rebuilds)."""
+    src, dst, wgt = _gather_coo(g)
+    return csr_mod.from_coo(src, dst, wgt, n=g.n, dedup=False)
+
+
+def _host_apply(src, dst, wgt, plan):
+    """Apply one canonical plan to host COO arrays (the rebuild path).
+
+    Keys touched by the plan (either op kind) drop from the old stream —
+    an insert replaces, a delete removes — then the plan's inserts
+    append.  ``from_coo`` re-sorts afterwards.
+    """
+    keys = (src.astype(np.int64) << 32) | dst.astype(np.int64)
+    pk = (plan.q_src.astype(np.int64) << 32) | plan.q_dst.astype(np.int64)
+    pos = np.searchsorted(pk, keys)
+    pos_c = np.minimum(pos, max(pk.shape[0] - 1, 0))
+    hit = (pos < pk.shape[0]) & (pk[pos_c] == keys) if pk.shape[0] else (
+        np.zeros(keys.shape[0], bool)
     )
+    ins = ~plan.q_del
+    return (
+        np.concatenate([src[~hit], plan.q_src[ins].astype(np.int64)]),
+        np.concatenate([dst[~hit], plan.q_dst[ins].astype(np.int64)]),
+        np.concatenate([wgt[~hit], plan.q_wgt[ins]]).astype(np.float32),
+    )
+
+
+def reverse_walk(g: ShardedGraph, steps: int, *, visits0=None):
+    """Module-level convenience wrapper over ``ShardedGraph.reverse_walk``."""
+    return g.reverse_walk(steps, visits0=visits0)

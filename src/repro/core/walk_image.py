@@ -225,7 +225,8 @@ class WalkImage:
     @classmethod
     def from_csr_arrays(cls, offsets, dst, wgt, nv: int, *,
                         engine: str = "auto",
-                        dense: Optional[bool] = None) -> "WalkImage":
+                        dense: Optional[bool] = None,
+                        min_cap_e: int = 0) -> "WalkImage":
         """Build a slack-padded OR dense image from CSR-ordered arrays.
 
         Reuses the ingest engine's ``arena_image`` fill (DESIGN.md §10):
@@ -235,7 +236,9 @@ class WalkImage:
         ``DENSE_THRESHOLD``, blocks take their exact degree (occupancy
         1.0) so the walk processes live edges only.  ``cap_e`` keeps
         >= 25% bump headroom either way so grown rows can relocate
-        without an immediate rebuild.
+        without an immediate rebuild.  ``min_cap_e`` floors the slot
+        capacity — the sharded layer (§14) passes one common floor so
+        every shard's image compiles to the same program shape.
         """
         from ..kernels.csr_build import ops as _cb_ops
 
@@ -253,6 +256,7 @@ class WalkImage:
         csum = np.cumsum(caps)
         starts = np.where(caps > 0, csum - caps, -1)
         cap_e = alloc.pow2_with_headroom(total, 1.0 if dense else 0.25)
+        cap_e = max(cap_e, int(min_cap_e))
         w = wgt if wgt is not None else np.ones(m, np.float32)
         # slice padded source buffers to the live prefix: the device
         # arena_image path derives its edge count (and jit-cache key)

@@ -58,6 +58,15 @@ XLA_FLOOR = 8
 #: representable float.
 PALLAS_MAX_ID = 1 << 24
 
+#: Module-level dispatch counter: each ``fused_apply`` call is one device
+#: program.  The sharded layer reads deltas to prove every shard's flush
+#: stays at round_dispatches=1 per device (DESIGN.md §14).
+STATS = {"dispatches": 0}
+
+
+def stats_snapshot() -> dict:
+    return dict(STATS)
+
 
 def width_floor(backend: str = "auto") -> int:
     """Row-group width floor for a (resolved) backend."""
@@ -632,6 +641,7 @@ def fused_apply(
         )
 
     out, _used = _fb.run_chain("slot_update", backend, _dispatch)
+    STATS["dispatches"] += 1
     i = 2
     if any_moves:
         new_rows = out[i]

@@ -1,72 +1,372 @@
-"""Distributed graph tests — run in a subprocess with 8 forced host devices
-(the main test process must keep the default single device)."""
+"""Sharded walk-image tests (DESIGN.md §14).
+
+In-process tests run the single-device LOCAL emulation of the sharded
+walk (bit-identical math, no mesh needed — the main test process must
+keep the default single device).  The shard_map path itself runs in a
+subprocess with 4 forced host devices: walk/update bit-parity against
+the single-device WalkImage path, the |V|·4 collective-bytes model, and
+per-device round_dispatches=1 accounting.
+
+Parity is asserted EXACTLY: the reverse walk is unweighted, so visit
+counts are small integers represented exactly in f32 on these graph
+sizes and step counts — any layout- or summation-order difference that
+changed a value would be a real defect, not noise.
+"""
 import os
 import subprocess
 import sys
 import textwrap
 
+import numpy as np
+import pytest
+
+from repro.core import csr as csr_mod, distributed as dist, edgebatch
+from repro.core import updates as upd_mod
+from repro.core.walk_image import WalkImage
+from repro.kernels.csr_build import ref as csr_ref
+
+STEPS = 4
+
+
+def _random_csr(rng, n, m):
+    src = rng.integers(0, n, m)
+    dstv = rng.integers(0, n, m)
+    w = rng.random(m).astype(np.float32)
+    return src, dstv, w, csr_mod.from_coo(src, dstv, w, n=n)
+
+
+def _single_device_walk(c, steps, visits0=None):
+    img = WalkImage.from_csr_arrays(
+        np.asarray(c.offsets), np.asarray(c.dst), np.asarray(c.wgt), c.n
+    )
+    return np.asarray(img.walk(steps, visits0=visits0))
+
+
+def _plan(ins=None, dels=None):
+    ib = edgebatch.from_arrays(*ins) if ins is not None else None
+    db = edgebatch.from_arrays(*dels) if dels is not None else None
+    return upd_mod.plan_update(ib, db)
+
+
+# ---------------------------------------------------------------------------
+# local-mode parity (single device, no mesh)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_walk_parity_local(n_shards):
+    rng = np.random.default_rng(0)
+    _, _, _, c = _random_csr(rng, 23, 140)
+    g = dist.shard_csr(c, n_shards)
+    got = np.asarray(g.reverse_walk(STEPS))
+    ref = _single_device_walk(c, STEPS)
+    assert np.array_equal(got, ref)
+
+
+def test_multi_walk_parity_local():
+    rng = np.random.default_rng(1)
+    _, _, _, c = _random_csr(rng, 19, 90)
+    v0 = rng.integers(0, 3, (3, c.n)).astype(np.float32)
+    g = dist.shard_csr(c, 4)
+    got = np.asarray(g.reverse_walk(STEPS, visits0=v0))
+    ref = _single_device_walk(c, STEPS, visits0=v0)
+    assert got.shape == (3, c.n)
+    assert np.array_equal(got, ref)
+
+
+def test_apply_routes_and_matches_single_device():
+    rng = np.random.default_rng(2)
+    src, dstv, w, c = _random_csr(rng, 29, 160)
+    g = dist.shard_csr(c, 4)
+    base = dist.gather_csr(g)
+    plan = _plan(
+        ins=(rng.integers(0, 29, 40), rng.integers(0, 29, 40),
+             rng.random(40).astype(np.float32)),
+        dels=(src[:25].copy(), dstv[:25].copy()),
+    )
+    routed = dist.route_updates(plan, g.n_shards, g.rows_max)
+    assert sum(p.n_ops for _, p in routed) == plan.n_ops
+    for sid, sub in routed:
+        lo, hi = sid * g.rows_max, (sid + 1) * g.rows_max
+        assert int(sub.q_src.min()) >= lo and int(sub.q_src.max()) < hi
+    g.apply(plan)
+    bs = np.repeat(np.arange(base.n), np.diff(np.asarray(base.offsets)))
+    s2, d2, w2 = dist._host_apply(
+        bs, np.asarray(base.dst), np.asarray(base.wgt), plan
+    )
+    want = csr_mod.from_coo(s2, d2, w2, n=base.n, dedup=False)
+    got = dist.gather_csr(g)
+    assert np.array_equal(np.asarray(got.offsets), np.asarray(want.offsets))
+    assert np.array_equal(np.asarray(got.dst), np.asarray(want.dst))
+    assert np.allclose(np.asarray(got.wgt), np.asarray(want.wgt))
+    assert np.array_equal(
+        np.asarray(g.reverse_walk(STEPS)), _single_device_walk(want, STEPS)
+    )
+
+
+def test_vertex_growth_reshards_across_boundary():
+    """New vertices land beyond the last shard's range: one re-shard."""
+    rng = np.random.default_rng(3)
+    _, _, _, c = _random_csr(rng, 16, 80)
+    g = dist.shard_csr(c, 4)
+    rows_max0 = g.rows_max
+    base = dist.gather_csr(g)
+    n_new = 16 + 9  # forces rows_max to grow: old boundaries all move
+    plan = _plan(ins=(
+        np.array([n_new - 1, 0, 7]), np.array([0, n_new - 1, n_new - 2]),
+        np.ones(3, np.float32),
+    ))
+    g.apply(plan)
+    assert g.n == n_new
+    assert g.rows_max > rows_max0
+    bs = np.repeat(np.arange(base.n), np.diff(np.asarray(base.offsets)))
+    s2, d2, w2 = dist._host_apply(
+        bs, np.asarray(base.dst), np.asarray(base.wgt), plan
+    )
+    want = csr_mod.from_coo(s2, d2, w2, n=n_new, dedup=False)
+    got = dist.gather_csr(g)
+    assert np.array_equal(np.asarray(got.offsets), np.asarray(want.offsets))
+    assert np.array_equal(
+        np.asarray(g.reverse_walk(STEPS)), _single_device_walk(want, STEPS)
+    )
+    g.audit()
+
+
+def test_grown_row_overflow_rebuilds():
+    """A hub row outgrowing its shard's bump slack takes the rebuild path
+    (relocation through gather + re-shard) and stays correct."""
+    rng = np.random.default_rng(4)
+    _, _, _, c = _random_csr(rng, 12, 40)
+    g = dist.shard_csr(c, 4)
+    cap0 = g.cap_e
+    # grow vertex 0 far past shard 0's slot capacity, in several plans
+    hub = np.arange(1, 12, dtype=np.int64)
+    for rep in range(6):
+        dsts = (hub + rep) % 12
+        plan = _plan(ins=(
+            np.zeros_like(dsts) + (rep % 3), dsts,
+            np.full(dsts.shape[0], 1.0, np.float32),
+        ))
+        g.apply(plan)
+        g.audit()
+    got = dist.gather_csr(g)
+    # dense oracle: replay the same plans on a host edge set
+    base = dist.gather_csr(dist.shard_csr(c, 4))
+    bs = np.repeat(np.arange(base.n), np.diff(np.asarray(base.offsets)))
+    s2, d2, w2 = bs, np.asarray(base.dst), np.asarray(base.wgt)
+    for rep in range(6):
+        dsts = (hub + rep) % 12
+        plan = _plan(ins=(
+            np.zeros_like(dsts) + (rep % 3), dsts,
+            np.full(dsts.shape[0], 1.0, np.float32),
+        ))
+        s2, d2, w2 = dist._host_apply(s2, d2, w2, plan)
+    want = csr_mod.from_coo(s2, d2, w2, n=12, dedup=False)
+    assert np.array_equal(np.asarray(got.offsets), np.asarray(want.offsets))
+    assert np.array_equal(np.asarray(got.dst), np.asarray(want.dst))
+    assert np.array_equal(
+        np.asarray(g.reverse_walk(STEPS)), _single_device_walk(want, STEPS)
+    )
+    assert g.cap_e >= cap0  # rebuild re-sized the shared slot space
+
+
+def test_gather_csr_matches_reference_oracle():
+    rng = np.random.default_rng(5)
+    src, dstv, w, c = _random_csr(rng, 17, 110)
+    g = dist.shard_csr(c, 4)
+    got = dist.gather_csr(g)
+    ro, rd, rw = csr_ref.coo_to_csr_reference(src, dstv, w, n=17, dedup=True)
+    assert np.array_equal(np.asarray(got.offsets), ro)
+    assert np.array_equal(np.asarray(got.dst), rd)
+    assert np.allclose(np.asarray(got.wgt), rw)
+
+
+def test_gather_csr_rejects_row_count_mismatch():
+    rng = np.random.default_rng(6)
+    _, _, _, c = _random_csr(rng, 16, 60)
+    g = dist.shard_csr(c, 4)
+    # corrupt shard 1's geometry: claim an edge on a row shard 0 owns
+    img = g.shards[1]
+    img.degs[0] = 1
+    img.starts[0] = 0
+    with pytest.raises(ValueError, match="row-count mismatch"):
+        dist.gather_csr(g)
+
+
+def test_sharded_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import manager as ckpt
+
+    rng = np.random.default_rng(7)
+    _, _, _, c = _random_csr(rng, 21, 120)
+    g = dist.shard_csr(c, 4)
+    d = str(tmp_path / "ck")
+    g.save(d, 3)
+    # one file per shard under one step manifest
+    step_dir = os.path.join(d, "step_0000000003")
+    files = sorted(os.listdir(step_dir))
+    assert files == ["manifest.json", "shard_0.npz", "shard_1.npz",
+                     "shard_2.npz", "shard_3.npz"]
+    g2 = dist.ShardedGraph.restore(d)
+    assert (g2.n, g2.n_shards, g2.rows_max) == (g.n, g.n_shards, g.rows_max)
+    assert np.array_equal(
+        np.asarray(g2.reverse_walk(STEPS)), np.asarray(g.reverse_walk(STEPS))
+    )
+    # single-shard restore API addresses one shard of the manifest
+    arrays, step = ckpt.restore_arrays(d, shard_id=2)
+    assert step == 3 and "dst" in arrays
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore_arrays(d, shard_id=9)
+
+
+def test_hypothesis_sweep_parity():
+    pytest.importorskip(
+        "hypothesis", reason="optional dev dependency — pip install repro[dev]"
+    )
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=4, max_value=40),
+        m=st.integers(min_value=0, max_value=160),
+        n_shards=st.sampled_from([2, 3, 4]),
+        steps=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        n_ins=st.integers(min_value=0, max_value=30),
+        n_del=st.integers(min_value=0, max_value=30),
+    )
+    def sweep(n, m, n_shards, steps, seed, n_ins, n_del):
+        if n < n_shards:
+            return
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, n, m)
+        dstv = rng.integers(0, n, m)
+        w = rng.random(m).astype(np.float32)
+        c = csr_mod.from_coo(src, dstv, w, n=n)
+        g = dist.shard_csr(c, n_shards)
+        base = dist.gather_csr(g)
+        assert np.array_equal(
+            np.asarray(g.reverse_walk(steps)), _single_device_walk(c, steps)
+        )
+        ins = (
+            rng.integers(0, n, n_ins), rng.integers(0, n, n_ins),
+            rng.random(n_ins).astype(np.float32),
+        ) if n_ins else None
+        dels = (
+            rng.integers(0, n, n_del), rng.integers(0, n, n_del),
+        ) if n_del else None
+        if ins is None and dels is None:
+            return
+        plan = _plan(ins=ins, dels=dels)
+        g.apply(plan)
+        bs = np.repeat(np.arange(base.n), np.diff(np.asarray(base.offsets)))
+        s2, d2, w2 = dist._host_apply(
+            bs, np.asarray(base.dst), np.asarray(base.wgt), plan
+        )
+        want = csr_mod.from_coo(s2, d2, w2, n=n, dedup=False)
+        got = dist.gather_csr(g)
+        assert np.array_equal(
+            np.asarray(got.offsets), np.asarray(want.offsets)
+        )
+        assert np.array_equal(np.asarray(got.dst), np.asarray(want.dst))
+        assert np.array_equal(
+            np.asarray(g.reverse_walk(steps)),
+            _single_device_walk(want, steps),
+        )
+
+    sweep()
+
+
+# ---------------------------------------------------------------------------
+# shard_map path — subprocess with 4 forced host devices
+# ---------------------------------------------------------------------------
 SCRIPT = textwrap.dedent(
     """
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     sys.path.insert(0, "src")
     import jax
     import numpy as np
-    from repro.core import distributed as dist, from_coo, traversal
-    from repro.io import synthetic
+    from repro.core import csr as csr_mod, distributed as dist, edgebatch
+    from repro.core import updates as upd_mod
+    from repro.core.walk_image import WalkImage
+    from repro.kernels.slot_update import ops as su_ops
     from repro.launch import mesh as mesh_mod
 
-    assert len(jax.devices()) == 8
-    mesh = mesh_mod.make_mesh_like((8,), ("data",))
+    assert len(jax.devices()) == 4
+    mesh = mesh_mod.host_mesh(4)
+    devs = list(np.asarray(mesh.devices).reshape(-1))
 
-    rng = np.random.default_rng(0)
-    src, dstv = synthetic.uniform_edges(rng, 64, 500)
-    c = from_coo(src, dstv, n=64)
-    g = dist.shard_csr(c, 8)
+    rng = np.random.default_rng(11)
+    n, m, STEPS = 37, 260, 4
+    src = rng.integers(0, n, m); dstv = rng.integers(0, n, m)
+    w = rng.random(m).astype(np.float32)
+    c = csr_mod.from_coo(src, dstv, w, n=n)
 
-    # 1) sharded reverse walk == dense oracle
-    out = np.asarray(dist.reverse_walk(g, 4, mesh))
-    oracle = traversal.reverse_walk_dense_oracle(c.to_dense(), 4)
-    np.testing.assert_allclose(out, oracle, rtol=1e-5)
-    print("sharded reverse walk OK")
+    img = WalkImage.from_csr_arrays(
+        np.asarray(c.offsets), np.asarray(c.dst), np.asarray(c.wgt), c.n)
+    ref = np.asarray(img.walk(STEPS))
 
-    # 2) distributed insert + delete == host-set oracle
-    ins_s = rng.integers(0, 64, 100); ins_d = rng.integers(0, 64, 100)
-    g2, m_after = dist.apply_updates(g, ins_s, ins_d, None, mesh, op="insert")
-    got = g2 and dist.gather_csr(g2)
-    exp = set(zip(src.tolist(), dstv.tolist())) | set(zip(ins_s.tolist(), ins_d.tolist()))
-    got_set = set()
-    o = np.asarray(got.offsets); d = np.asarray(got.dst)
-    for u in range(got.n):
-        for v in d[o[u]:o[u+1]]:
-            got_set.add((u, int(v)))
-    assert got_set == exp, (len(got_set), len(exp))
-    print("distributed insert OK, m =", m_after)
+    g = dist.shard_csr(c, 4, mesh=mesh)
+    out = np.asarray(g.reverse_walk(STEPS))
+    assert np.array_equal(out, ref), abs(out - ref).max()
+    print("shmap walk parity OK")
 
-    del_s = np.array([p[0] for p in list(exp)[:50]]); del_d = np.array([p[1] for p in list(exp)[:50]])
-    g3, m3 = dist.apply_updates(g2, del_s, del_d, None, mesh, op="delete")
-    got = dist.gather_csr(g3)
-    exp2 = exp - set(zip(del_s.tolist(), del_d.tolist()))
-    got_set = set()
-    o = np.asarray(got.offsets); d = np.asarray(got.dst)
-    for u in range(got.n):
-        for v in d[o[u]:o[u+1]]:
-            got_set.add((u, int(v)))
-    assert got_set == exp2
-    print("distributed delete OK, m =", m3)
+    g_local = dist.shard_csr(c, 4)
+    assert np.array_equal(np.asarray(g_local.reverse_walk(STEPS)), out)
+    print("shmap vs local bit parity OK")
 
-    # 3) walk on the updated sharded graph still matches oracle
-    out = np.asarray(dist.reverse_walk(g3, 3, mesh))
-    oracle = traversal.reverse_walk_dense_oracle(got.to_dense(), 3)
-    np.testing.assert_allclose(out, oracle, rtol=1e-5)
+    got = g.collective_bytes_per_step(STEPS)
+    model = (g.n_shards - 1) * g.rows_max * 4
+    assert got == model, (got, model)
+    assert 0 < got <= 1.5 * n * 4, (got, n * 4)
+    print("collective bytes/step", got, "<= 1.5x |V|*4 =", 1.5 * n * 4)
+
+    plan = upd_mod.plan_update(edgebatch.from_arrays(
+        rng.integers(0, n, 24), rng.integers(0, n, 24),
+        rng.random(24).astype(np.float32)), None)
+    routed = dist.route_updates(plan, g.n_shards, g.rows_max)
+    shard_ids = [id(im) for im in g.shards]
+    before = su_ops.STATS["dispatches"]
+    g.apply(plan)
+    delta = su_ops.STATS["dispatches"] - before
+    assert shard_ids == [id(im) for im in g.shards], "unexpected rebuild"
+    assert delta == len(routed), (delta, len(routed))
+    print("per-device round_dispatches=1 OK over", len(routed), "shards")
+
+    for s, im in enumerate(g.shards):
+        ds = list(im.dst.devices())
+        assert len(ds) == 1 and ds[0] == devs[s], (s, ds)
+    print("buffers stay committed per device after patch")
+
+    base = dist.gather_csr(g)
+    img2 = WalkImage.from_csr_arrays(
+        np.asarray(base.offsets), np.asarray(base.dst),
+        np.asarray(base.wgt), n)
+    assert np.array_equal(np.asarray(g.reverse_walk(STEPS)),
+                          np.asarray(img2.walk(STEPS)))
     print("walk-after-update OK")
+
+    # grown-row relocation crossing a shard boundary: growth re-shard
+    plan2 = upd_mod.plan_update(edgebatch.from_arrays(
+        np.array([n + 6, 2]), np.array([1, n + 6]),
+        np.ones(2, np.float32)), None)
+    g.apply(plan2)
+    assert g.n == n + 7 and g.mesh is mesh
+    bs = np.repeat(np.arange(base.n), np.diff(np.asarray(base.offsets)))
+    s2, d2, w2 = dist._host_apply(
+        bs, np.asarray(base.dst), np.asarray(base.wgt), plan2)
+    want = csr_mod.from_coo(s2, d2, w2, n=n + 7, dedup=False)
+    img3 = WalkImage.from_csr_arrays(
+        np.asarray(want.offsets), np.asarray(want.dst),
+        np.asarray(want.wgt), n + 7)
+    assert np.array_equal(np.asarray(g.reverse_walk(STEPS)),
+                          np.asarray(img3.walk(STEPS)))
+    print("growth re-shard on mesh OK")
     """
 )
 
 
-def test_distributed_graph_8dev(tmp_path):
+def test_sharded_graph_4dev_shmap(tmp_path):
     p = tmp_path / "dist_check.py"
     p.write_text(SCRIPT)
     env = dict(os.environ)
@@ -80,4 +380,4 @@ def test_distributed_graph_8dev(tmp_path):
         timeout=600,
     )
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    assert "walk-after-update OK" in r.stdout
+    assert "growth re-shard on mesh OK" in r.stdout

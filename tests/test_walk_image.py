@@ -339,6 +339,48 @@ def test_compare_results_gates_all_reps_on_walk_suites():
     # unknown rows and missing columns are ignored, not errors
     odd = {"s": [{"name": "new/row", "us_per_call": 5.0}, {"name": "walk/x/digraph"}]}
     assert compare_results(odd, base) == []
+    # sharded rows ride the same gate: the last /-token is the layout
+    slow_sh = {
+        "stream": [{"name": "stream/x/shards4/chunked", "us_per_round": 131.0}]
+    }
+    base_sh = {
+        "stream": [{"name": "stream/x/shards4/chunked", "us_per_round": 100.0}]
+    }
+    fails = compare_results(slow_sh, base_sh)
+    assert len(fails) == 1 and "shards4" in fails[0]
+
+
+def test_merge_results_preserves_unreplayed_rows():
+    """--json merge: re-measured rows replace in place, others survive."""
+    from benchmarks.run import merge_results
+
+    prev = {
+        "stream": [
+            {"name": "stream/x/digraph", "us_per_round": 10.0},
+            {"name": "stream/x/shards4/digraph", "us_per_round": 40.0},
+        ],
+        "load": [{"name": "load/x", "us_per_call": 5.0}],
+    }
+    new = {
+        "stream": [
+            {"name": "stream/x/shards4/digraph", "us_per_round": 42.0},
+            {"name": "stream/x/shards1/digraph", "us_per_round": 11.0},
+        ]
+    }
+    out = merge_results(prev, new)
+    # untouched suite passes through
+    assert out["load"] == prev["load"]
+    names = [r["name"] for r in out["stream"]]
+    # existing order kept, replaced in place, new row appended
+    assert names == [
+        "stream/x/digraph",
+        "stream/x/shards4/digraph",
+        "stream/x/shards1/digraph",
+    ]
+    assert out["stream"][1]["us_per_round"] == 42.0
+    assert out["stream"][0]["us_per_round"] == 10.0
+    # suite absent from prev comes in whole
+    assert merge_results({}, new) == new
 
 
 # ---------------------------------------------------------------------------
