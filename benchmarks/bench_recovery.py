@@ -18,7 +18,17 @@ Four questions, one row each:
 * ``fallback_engage`` — round latency while the primary backend is
   forced down (injected failures trip the breaker; the chain completes
   the stream via the host floor) — the degraded-mode cost, reported
-  rather than gated.
+  rather than gated;
+* ``group_commit`` — the §15 group-commit proof: a round's plans land
+  as ONE WAL flush (``wal_flushes_per_round``, smoke-gated == 1) with
+  the round latency alongside;
+* ``sharded_serial_full`` vs ``sharded_parallel_diff`` — the same
+  16-round sharded (S=4, local mode) workload recovered two ways: the
+  PR 6 pipeline (full-state restore + serial record-by-record replay of
+  the whole window) against the §15 engine (differential-chain restore
+  + owner-routed parallel replay of only the un-checkpointed suffix).
+  Each row reports ``ckpt_restore_ms`` / ``replay_ms`` /
+  ``records_replayed``; smoke gates diff+parallel strictly cheaper.
 
 Row names keep the representation token OUT of last position on
 purpose: ms-scale checkpoint/recovery latencies on a CFS-throttled
@@ -171,6 +181,98 @@ def run(graph: str = "web_small", frac: float = 1e-2):
             }
         )
 
+        # -- group commit: one WAL flush per round ---------------------
+        wd, cd = tempfile.mkdtemp(dir=base), tempfile.mkdtemp(dir=base)
+        dg = durable.DurableGraph(DiGraph.from_csr(c), wd, cd)
+        round_pairs = [
+            (updates.plan_update(inserts=ins), updates.plan_update(deletes=dele))
+            for ins, dele in batches[:ROUNDS]
+        ]
+        dg.apply_group(round_pairs[0])  # warm
+        flush_deltas, t0 = [], time.perf_counter()
+        for pair in round_pairs[1:]:
+            f0 = dg.journal.flushes
+            dg.apply_group(pair)
+            flush_deltas.append(dg.journal.flushes - f0)
+        t_grp = time.perf_counter() - t0
+        dg.close()
+        rows.append(
+            {
+                "name": f"recovery/{graph}/group_commit",
+                "us_per_round": round(t_grp / len(flush_deltas) * 1e6, 1),
+                "wal_flushes_per_round": max(flush_deltas),
+                "derived": f"plans_per_round=2 rounds={len(flush_deltas)} "
+                f"ungrouped_flushes=2 rep=digraph",
+            }
+        )
+
+        # -- sharded recovery: PR6 serial-full vs §15 parallel-diff ----
+        from repro.core import distributed as dist
+
+        S, L, CKPT_AT = 4, 16, 12
+        sh_plans = [
+            updates.plan_update(inserts=ins, deletes=dele)
+            for ins, dele in batches[:L]
+        ]
+        warm = dist.shard_csr(c, S)
+        for p in sh_plans[:2]:
+            warm.apply(p)
+        warm.block_on()
+
+        # serial + full: one step-0 full checkpoint, replay the whole window
+        wd, cd = tempfile.mkdtemp(dir=base), tempfile.mkdtemp(dir=base)
+        dg = durable.DurableGraph(dist.shard_csr(c, S), wd, cd)
+        for p in sh_plans:
+            dg.apply(p)
+        dg.close()
+        st_full: dict = {}
+        r = durable.DurableGraph.recover(
+            wd, cd, parallel=False, audit=False, stats=st_full
+        )
+        r.rep.block_on()
+        r.close()
+        t_serial = st_full["restore_s"] + st_full["replay_s"]
+        rows.append(
+            {
+                "name": f"recovery/{graph}/sharded_serial_full",
+                "ms_per_call": round(t_serial * 1e3, 2),
+                "ckpt_restore_ms": round(st_full["restore_s"] * 1e3, 2),
+                "replay_ms": round(st_full["replay_s"] * 1e3, 2),
+                "records_replayed": st_full["records"],
+                "derived": f"shards={S} mode=serial ckpt=full rep=sharded",
+            }
+        )
+
+        # parallel + diff: a differential step inside the window bounds
+        # replay to the suffix; owner-routed threads drain the shards
+        wd, cd = tempfile.mkdtemp(dir=base), tempfile.mkdtemp(dir=base)
+        dg = durable.DurableGraph(
+            dist.shard_csr(c, S), wd, cd, diff=True, full_every=8
+        )
+        for i, p in enumerate(sh_plans):
+            dg.apply(p)
+            if i + 1 == CKPT_AT:
+                dg.checkpoint()  # diff step vs the step-0 full base
+        dg.close()
+        st_diff: dict = {}
+        r = durable.DurableGraph.recover(
+            wd, cd, parallel=True, diff=True, audit=False, stats=st_diff
+        )
+        r.rep.block_on()
+        r.close()
+        t_par = st_diff["restore_s"] + st_diff["replay_s"]
+        rows.append(
+            {
+                "name": f"recovery/{graph}/sharded_parallel_diff",
+                "ms_per_call": round(t_par * 1e3, 2),
+                "ckpt_restore_ms": round(st_diff["restore_s"] * 1e3, 2),
+                "replay_ms": round(st_diff["replay_s"] * 1e3, 2),
+                "records_replayed": st_diff["records"],
+                "derived": f"shards={S} mode=parallel ckpt=diff "
+                f"speedup={t_serial / max(t_par, 1e-9):.2f}x rep=sharded",
+            }
+        )
+
         # -- degraded mode: primary backend down, chain completes ------
         fallback.BREAKER.reset()
         g = DiGraph.from_csr(c)
@@ -193,7 +295,8 @@ def run(graph: str = "web_small", frac: float = 1e-2):
     finally:
         shutil.rmtree(base, ignore_errors=True)
     header = ["name", "ms_per_call", "us_per_round", "overhead_pct",
-              "round_dispatches", "derived"]
+              "round_dispatches", "ckpt_restore_ms", "replay_ms",
+              "records_replayed", "wal_flushes_per_round", "derived"]
     for r in rows:  # heterogeneous rows: blank the columns a row lacks
         for k in header:
             r.setdefault(k, "")

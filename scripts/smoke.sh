@@ -132,4 +132,41 @@ if bad:
 print("# recovery proof ok: WAL overhead < 15%, 1-dispatch durable rounds")
 EOF
 
+echo "== sharded recovery proof fields (group commit + diff replay, §15) =="
+# the §15 engine's two proof obligations in BENCH_recovery.json: a
+# group-committed round is exactly ONE WAL flush, and the differential
+# checkpoint + owner-routed parallel replay recovers the same 16-round
+# sharded workload strictly cheaper than the PR 6 serial full-restore.
+python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_recovery.json"))["recovery"]
+by = {r["name"].rsplit("/", 1)[-1]: r for r in rows}
+gc = by.get("group_commit")
+if gc is None:
+    sys.exit("recovery suite missing the group_commit row")
+if int(gc.get("wal_flushes_per_round", 0)) != 1:
+    sys.exit(f"group commit regressed: wal_flushes_per_round="
+             f"{gc.get('wal_flushes_per_round')} (want 1)")
+ser, par = by.get("sharded_serial_full"), by.get("sharded_parallel_diff")
+if ser is None or par is None:
+    sys.exit("recovery suite missing the sharded_serial_full / "
+             "sharded_parallel_diff rows")
+if int(par["records_replayed"]) >= int(ser["records_replayed"]):
+    sys.exit("diff checkpoint did not bound the replay window: "
+             f"{par['records_replayed']} vs {ser['records_replayed']} records")
+if float(par["ms_per_call"]) >= float(ser["ms_per_call"]):
+    sys.exit("sharded recovery regressed: parallel+diff "
+             f"{par['ms_per_call']}ms not under serial+full {ser['ms_per_call']}ms")
+print(f"# sharded recovery proof ok: 1 flush/round, parallel+diff "
+      f"{par['ms_per_call']}ms < serial+full {ser['ms_per_call']}ms "
+      f"({par['records_replayed']} vs {ser['records_replayed']} records)")
+EOF
+
+echo "== forced-4-device sharded crash/recover roundtrip (§15) =="
+# a real mesh (4 forced host devices): group-committed rounds, an
+# injected crash, owner-routed parallel replay onto the mesh, then
+# audit() + bit-parity against an uncrashed twin.
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  python scripts/sharded_recovery_check.py
+
 echo "== BENCH_{load,clone,traversal,update,stream,recovery}.json written =="

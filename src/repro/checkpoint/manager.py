@@ -8,7 +8,22 @@ restore can validate structure before touching device memory.  Sharded
 owners (the §14 multi-device walk images) write one ``shard_{id}.npz``
 per device under ONE shared step manifest via
 :func:`save_arrays_sharded` — the atomic rename commits all shards or
-none; restore replays shards serially for now.
+none.
+
+**Differential checkpoints (DESIGN.md §15).**  Full manifests carry a
+per-key list of ``CHUNK_BYTES``-granular CRC32 digests.
+:func:`save_arrays_diff` writes a step that persists only the chunks
+that changed since ``base_step`` — detected by hashing against the
+base manifest's digests, or told directly via ``dirty`` hints (the
+WAL-window dirty-block set the durability layer derives from
+``UpdatePlan`` rows and image block geometry, so the hash pass is
+skipped for tracked shards and untouched shards cost zero bytes AND
+zero work).  Diff manifests chain through ``base_step`` and always
+carry the FULL logical key/shape/dtype/digest set, so any diff step is
+a complete restore point: :func:`restore_arrays_diff` loads the chain's
+full base and patches chunks forward, verifying persisted-chunk CRCs.
+Rotation is chain-aware — a base is never rotated out from under a
+kept diff.
 """
 from __future__ import annotations
 
@@ -16,10 +31,56 @@ import json
 import os
 import shutil
 import tempfile
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+#: Dirty-block granularity of differential checkpoints.  16 KiB keeps
+#: manifests small (one digest per chunk) while a single-row patch still
+#: persists only a few chunks of the slot arrays.
+CHUNK_BYTES = 1 << 14
+
+
+def _chunk_crcs(buf: bytes) -> list:
+    """CRC32 digest per CHUNK_BYTES chunk of ``buf`` (empty → [])."""
+    return [
+        zlib.crc32(buf[i : i + CHUNK_BYTES])
+        for i in range(0, len(buf), CHUNK_BYTES)
+    ]
+
+
+def _ranges_to_chunks(ranges, itemsize: int, nbytes: int) -> np.ndarray:
+    """Chunk ids covered by half-open ELEMENT ranges ``[(lo, hi), ...]``.
+
+    The durability layer hands dirty hints in element units (rows, slot
+    extents); the byte scale is the key's own itemsize.  Ids are clipped
+    to the chunks that actually exist for an ``nbytes``-long buffer.
+    """
+    r = np.asarray(ranges, dtype=np.int64).reshape(-1, 2)
+    n_chunks = (nbytes + CHUNK_BYTES - 1) // CHUNK_BYTES
+    if r.shape[0] == 0 or n_chunks == 0:
+        return np.empty(0, dtype=np.int64)
+    r = r[r[:, 1] > r[:, 0]]
+    if r.shape[0] == 0:
+        return np.empty(0, dtype=np.int64)
+    lo = (r[:, 0] * itemsize) // CHUNK_BYTES
+    hi = (r[:, 1] * itemsize - 1) // CHUNK_BYTES  # inclusive
+    ids = np.concatenate(
+        [np.arange(a, b + 1, dtype=np.int64) for a, b in zip(lo, hi)]
+    )
+    ids = np.unique(ids)
+    return ids[(ids >= 0) & (ids < n_chunks)]
+
+
+def _read_manifest(step_dir: str) -> dict:
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{int(step):010d}")
 
 
 def _flatten_with_paths(tree):
@@ -92,7 +153,12 @@ def save_arrays_sharded(
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=ckpt_dir)
     try:
-        manifest = {"step": step, "n_shards": len(shards), "shards": {}}
+        manifest = {
+            "step": step,
+            "kind": "full",
+            "n_shards": len(shards),
+            "shards": {},
+        }
         for sid in sorted(shards):
             arrays = {k: np.asarray(v) for k, v in shards[sid].items()}
             np.savez(os.path.join(tmp, f"shard_{sid}.npz"), **arrays)
@@ -100,12 +166,148 @@ def save_arrays_sharded(
                 "keys": sorted(arrays.keys()),
                 "shapes": {k: list(v.shape) for k, v in arrays.items()},
                 "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+                # per-key chunk digests: the anchor future diff steps
+                # hash/patch against (§15)
+                "chunks": {k: _chunk_crcs(v.tobytes()) for k, v in arrays.items()},
             }
         if len(shards) == 1:
             # legacy flat fields: single-shard manifests stay readable by
             # pre-§14 restores (and restore() below)
             (only,) = manifest["shards"].values()
             manifest.update(only)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        faultinject.fire("checkpoint.pre_rename")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomicity: rename is the commit point
+    except faultinject.SimulatedCrash:
+        raise  # crashed writers don't clean up after themselves
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _rotate(ckpt_dir, keep)
+    return final
+
+
+def save_arrays_diff(
+    ckpt_dir: str,
+    step: int,
+    shards: dict,
+    *,
+    base_step: Optional[int] = None,
+    keep: int = 3,
+    dirty: Optional[dict] = None,
+) -> str:
+    """Write a differential step: only chunks changed since ``base_step``.
+
+    ``shards`` is the FULL current state (``{shard_id: {key: ndarray}}``
+    — same shape as :func:`save_arrays_sharded`); what shrinks is the
+    persisted payload, never the manifest's logical coverage, so every
+    diff step is a complete restore point for :func:`restore_arrays_diff`.
+    ``base_step`` defaults to the latest existing step (diff-on-diff
+    chains are fine; restore walks the chain back to a full base).
+
+    ``dirty`` optionally narrows the work per shard:
+
+    - absent / ``None`` per shard → hash-compare every chunk against the
+      base manifest digests (exact, costs one pass over the state);
+    - ``"clean"`` → persist nothing for the shard (shapes verified);
+    - ``"full"`` → persist the whole shard;
+    - ``{key: hint}`` with per-key ``"clean"`` / ``"full"`` / ``None`` /
+      an ``[(lo, hi), ...]`` array of half-open ELEMENT ranges — ranged
+      keys persist exactly the covered chunks with no hashing.
+
+    Keys whose shape/dtype changed vs the base, or that the base has no
+    digests for (legacy manifests), degrade to full persistence of that
+    key.  Changed chunks are stored as ``{key}::idx`` (chunk ids) +
+    ``{key}::dat`` (raw bytes) npz entries; fully-replaced keys keep
+    their plain name.
+    """
+    from ..runtime import faultinject  # lazy: checkpoint stays import-light
+
+    if not shards:
+        raise ValueError("save_arrays_diff: no shards to write")
+    if base_step is None:
+        base_step = latest_step(ckpt_dir)
+    if base_step is None:
+        raise FileNotFoundError(
+            f"save_arrays_diff: no base checkpoint under {ckpt_dir}"
+        )
+    base_man = _read_manifest(_step_dir(ckpt_dir, base_step))
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = _step_dir(ckpt_dir, step)
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=ckpt_dir)
+    try:
+        manifest = {
+            "step": step,
+            "kind": "diff",
+            "base_step": int(base_step),
+            "n_shards": len(shards),
+            "shards": {},
+        }
+        for sid in sorted(shards):
+            arrays = {k: np.asarray(v) for k, v in shards[sid].items()}
+            try:
+                base_blk = _shard_manifest(base_man, int(sid), "")
+            except FileNotFoundError:
+                base_blk = None  # shard count changed: persist fully
+            shard_hint = (dirty or {}).get(sid)
+            entries, chunks_out, diff_bytes = {}, {}, 0
+            for k in sorted(arrays):
+                arr = arrays[k]
+                buf = arr.tobytes()
+                base_ok = (
+                    base_blk is not None
+                    and k in base_blk.get("chunks", {})
+                    and base_blk["shapes"].get(k) == list(arr.shape)
+                    and base_blk["dtypes"].get(k) == str(arr.dtype)
+                )
+                if isinstance(shard_hint, dict):
+                    key_hint = shard_hint.get(k)
+                else:
+                    key_hint = shard_hint  # None / "clean" / "full"
+                if not base_ok or (isinstance(key_hint, str) and key_hint == "full"):
+                    entries[k] = arr
+                    chunks_out[k] = _chunk_crcs(buf)
+                    diff_bytes += len(buf)
+                    continue
+                base_crcs = base_blk["chunks"][k]
+                if isinstance(key_hint, str) and key_hint == "clean":
+                    # shape/dtype matched above; carry the base digests
+                    chunks_out[k] = list(base_crcs)
+                    continue
+                if key_hint is None:  # hash-compare against the base
+                    crcs = _chunk_crcs(buf)
+                    ids = np.asarray(
+                        [i for i, (a, b) in enumerate(zip(crcs, base_crcs)) if a != b],
+                        dtype=np.int64,
+                    )
+                    chunks_out[k] = crcs
+                else:  # element ranges: persist exactly the covered chunks
+                    ids = _ranges_to_chunks(key_hint, max(arr.dtype.itemsize, 1), len(buf))
+                    crcs = list(base_crcs)
+                    for i in ids:
+                        i = int(i)
+                        crcs[i] = zlib.crc32(buf[i * CHUNK_BYTES : (i + 1) * CHUNK_BYTES])
+                    chunks_out[k] = crcs
+                if ids.size:
+                    dat = b"".join(
+                        buf[int(i) * CHUNK_BYTES : (int(i) + 1) * CHUNK_BYTES]
+                        for i in ids
+                    )
+                    entries[f"{k}::idx"] = ids
+                    entries[f"{k}::dat"] = np.frombuffer(dat, dtype=np.uint8)
+                    diff_bytes += len(dat)
+            manifest["shards"][str(sid)] = {
+                "keys": sorted(arrays.keys()),
+                "shapes": {k: list(v.shape) for k, v in arrays.items()},
+                "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+                "chunks": chunks_out,
+                "diff_bytes": int(diff_bytes),
+            }
+            if entries:
+                np.savez(os.path.join(tmp, f"shard_{sid}.npz"), **entries)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         faultinject.fire("checkpoint.pre_rename")
@@ -155,9 +357,16 @@ def restore_arrays(
         step = latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    d = _step_dir(ckpt_dir, step)
+    manifest = _read_manifest(d)
+    if manifest.get("kind", "full") == "diff":
+        shards, step = restore_arrays_diff(ckpt_dir, step=step)
+        if int(shard_id) not in shards:
+            raise FileNotFoundError(
+                f"checkpoint {d}: no shard {shard_id} in diff manifest "
+                f"(has {sorted(shards)})"
+            )
+        return shards[int(shard_id)], int(step)
     blk = _shard_manifest(manifest, int(shard_id), d)
     data = np.load(
         os.path.join(d, f"shard_{int(shard_id)}.npz"), allow_pickle=False
@@ -183,17 +392,18 @@ def restore_arrays_sharded(
 ) -> tuple[dict, int]:
     """Restore every shard of a step: ``({shard_id: arrays}, step)``.
 
-    Serial replay — shards load one after another (parallel replay is a
-    ROADMAP item).  Legacy single-shard manifests come back as
-    ``{0: arrays}``.
+    Legacy single-shard manifests come back as ``{0: arrays}``;
+    differential steps are resolved through their chain via
+    :func:`restore_arrays_diff`.
     """
     if step is None:
         step = latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    d = _step_dir(ckpt_dir, step)
+    manifest = _read_manifest(d)
+    if manifest.get("kind", "full") == "diff":
+        return restore_arrays_diff(ckpt_dir, step=step)
     sids = (
         sorted(int(s) for s in manifest["shards"])
         if manifest.get("shards") is not None
@@ -203,6 +413,113 @@ def restore_arrays_sharded(
         {s: restore_arrays(ckpt_dir, step=step, shard_id=s)[0] for s in sids},
         int(step),
     )
+
+
+def restore_arrays_diff(
+    ckpt_dir: str, *, step: Optional[int] = None
+) -> tuple[dict, int]:
+    """Chain-walking restore: ``({shard_id: arrays}, step)`` for any step.
+
+    Walks ``base_step`` links back to a full checkpoint, loads that base,
+    then patches each diff step's persisted chunks forward in order.
+    Every patched chunk is verified against the manifest's CRC digest;
+    any gap in the chain (missing step, cycle, shape drift) fails loudly.
+    Works on full steps too (a chain of length one), so recovery can call
+    this unconditionally.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    chain, s, seen = [], int(step), set()
+    while True:
+        d = _step_dir(ckpt_dir, s)
+        if not os.path.exists(os.path.join(d, "manifest.json")):
+            raise FileNotFoundError(
+                f"diff chain for step {step} broken: step {s} is missing "
+                f"from {ckpt_dir}"
+            )
+        man = _read_manifest(d)
+        chain.append((s, d, man))
+        if man.get("kind", "full") != "diff":
+            break
+        b = man.get("base_step")
+        if b is None or int(b) >= s or s in seen:
+            raise ValueError(f"diff chain corrupt at step {s} (base={b})")
+        seen.add(s)
+        s = int(b)
+    chain.reverse()
+    base_step = chain[0][0]
+    shards = {
+        sid: dict(arrs)
+        for sid, arrs in restore_arrays_sharded(ckpt_dir, step=base_step)[0].items()
+    }
+    for s, d, man in chain[1:]:
+        for sid_s, blk in man["shards"].items():
+            sid = int(sid_s)
+            cur = shards.get(sid, {})
+            npz_path = os.path.join(d, f"shard_{sid}.npz")
+            data = (
+                np.load(npz_path, allow_pickle=False)
+                if os.path.exists(npz_path)
+                else None
+            )
+            out = {}
+            for k in blk["keys"]:
+                shape, dt = blk["shapes"][k], blk["dtypes"][k]
+                if data is not None and k in data.files:
+                    v = data[k]
+                elif data is not None and f"{k}::idx" in data.files:
+                    basev = cur.get(k)
+                    if basev is None or list(basev.shape) != shape or str(
+                        basev.dtype
+                    ) != dt:
+                        raise ValueError(
+                            f"diff step {s}: no compatible base value for {k}"
+                        )
+                    buf = bytearray(np.asarray(basev).tobytes())
+                    ids = data[f"{k}::idx"]
+                    dat = data[f"{k}::dat"].tobytes()
+                    off = 0
+                    digests = blk.get("chunks", {}).get(k)
+                    for i in ids:
+                        i = int(i)
+                        lo = i * CHUNK_BYTES
+                        hi = min(lo + CHUNK_BYTES, len(buf))
+                        n = hi - lo
+                        buf[lo:hi] = dat[off : off + n]
+                        off += n
+                        if digests is not None and zlib.crc32(
+                            bytes(buf[lo:hi])
+                        ) != digests[i]:
+                            raise ValueError(
+                                f"diff step {s}: chunk {i} of {k} fails its "
+                                f"CRC digest"
+                            )
+                    # .copy(): frombuffer views are read-only and restored
+                    # state must stay mutable for the live patch path
+                    v = (
+                        np.frombuffer(bytes(buf), dtype=np.dtype(dt))
+                        .reshape(shape)
+                        .copy()
+                    )
+                else:
+                    v = cur.get(k)
+                    if v is None:
+                        raise ValueError(
+                            f"diff step {s}: {k} carried forward but absent "
+                            f"from base"
+                        )
+                if list(np.asarray(v).shape) != shape or str(v.dtype) != dt:
+                    raise ValueError(
+                        f"diff step {s}: {k} is {np.asarray(v).shape}/{v.dtype},"
+                        f" manifest says {shape}/{dt}"
+                    )
+                out[k] = v
+            shards[sid] = out
+        # shard-count changes drop shards absent from the newest manifest
+        shards = {int(x): shards[int(x)] for x in man["shards"]}
+    return shards, int(step)
 
 
 def clean_stale(ckpt_dir: str) -> list[str]:
@@ -221,9 +538,26 @@ def clean_stale(ckpt_dir: str) -> list[str]:
 
 
 def _rotate(ckpt_dir: str, keep: int) -> None:
+    """Drop all but the newest ``keep`` steps — chain-aware: the full
+    base (and intermediate diffs) a kept diff step restores through are
+    never rotated out from under it."""
     steps = sorted(all_steps(ckpt_dir))
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"), ignore_errors=True)
+    have = set(steps)
+    keep_set = set(steps[-keep:]) if keep > 0 else set()
+    frontier = list(keep_set)
+    while frontier:
+        s = frontier.pop()
+        try:
+            man = _read_manifest(_step_dir(ckpt_dir, s))
+        except (OSError, json.JSONDecodeError):
+            continue
+        b = man.get("base_step")
+        if b is not None and int(b) in have and int(b) not in keep_set:
+            keep_set.add(int(b))
+            frontier.append(int(b))
+    for s in steps:
+        if s not in keep_set:
+            shutil.rmtree(_step_dir(ckpt_dir, s), ignore_errors=True)
 
 
 def all_steps(ckpt_dir: str) -> list[int]:

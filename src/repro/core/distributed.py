@@ -80,6 +80,10 @@ class ShardedGraph:
     n_shards: int
     mesh: Optional[object] = None   # jax Mesh; None = single-device local mode
     dense: bool = False             # global layout policy (shared by shards)
+    #: bumped by every ``_rebuild`` — lets observers (the §15 dirty-block
+    #: tracker) distinguish in-place per-shard patches from a global
+    #: re-shard that invalidates every shard's layout
+    generation: int = dataclasses.field(default=0, compare=False)
     _placed: Optional[tuple] = dataclasses.field(
         default=None, repr=False, compare=False
     )
@@ -163,7 +167,13 @@ class ShardedGraph:
         self.n = g.n
         self.rows_max = g.rows_max
         self.dense = g.dense
+        self.generation += 1
         self._placed = None
+
+    def block_on(self) -> None:
+        """Barrier: wait for every shard's device buffers (bench timing)."""
+        for img in self.shards:
+            jax.block_until_ready(img.dst)
 
     # ------------------------------------------------------------------
     # traversal: one program, frontier-exchange only

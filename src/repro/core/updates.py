@@ -286,6 +286,17 @@ class UpdatePlan:
         """
         return self.rows < cap_v
 
+    def touched_rows(self, cap_v: int) -> np.ndarray:
+        """In-range rows this plan can modify — the WAL-window dirty-row
+        export the §15 differential checkpointer accumulates.
+
+        A conservative superset of :meth:`active_rows` (inert delete-only
+        runs are kept; they cannot change state, so over-marking them
+        dirty costs a few redundant chunks, never correctness) that needs
+        no degree array — callable before OR after the apply.
+        """
+        return self.rows[self.rows_in_range(cap_v)]
+
 
 # ---------------------------------------------------------------------------
 # plan construction

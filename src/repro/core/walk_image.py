@@ -305,6 +305,21 @@ class WalkImage:
             self._pending.clear()
             self._stale = True
 
+    def block_ranges(self, rows: np.ndarray) -> np.ndarray:
+        """``[K, 2]`` half-open slot ranges of ``rows``'s CURRENT blocks.
+
+        The §15 differential checkpointer calls this before AND after a
+        patch: a relocated row's old slots are cleared to SENTINEL (the
+        walk masks on ``dst == SENTINEL`` over the whole bump prefix), so
+        both the vacated and the new extent are dirty bytes.  Rows
+        without a block contribute nothing.
+        """
+        rows = np.asarray(rows, np.int64)
+        st = np.asarray(self.starts[rows], np.int64)
+        cp = np.asarray(self.caps[rows], np.int64)
+        has = (st >= 0) & (cp > 0)
+        return np.stack([st[has], st[has] + cp[has]], axis=1)
+
     def _needs_compact(self) -> bool:
         return (
             self.bump >= COMPACT_MIN_SLOTS

@@ -31,6 +31,27 @@ upserts at fixed weights, deletes of absent keys filter out).
 
 Crash points, torn-tail repair, and the post-recovery invariant sweep
 are exercised through ``runtime/faultinject.py``.
+
+Sharded-scale recovery (DESIGN.md §15) extends both halves:
+
+* **group commit** — :meth:`UpdateJournal.append_group` encodes a
+  round's plans into ONE buffer with a single ``flush()`` (and a single
+  ``fsync`` under the power-loss model), so journal cost amortizes over
+  the round instead of per plan.  A crash mid-group tears a byte suffix;
+  ``repair_tail`` truncates to the last complete record boundary and the
+  un-acked suffix replays as absent — the same prefix-durability
+  contract as a single torn append.
+* **owner-routed parallel replay** — a :class:`DurableGraph` wrapping a
+  ``ShardedGraph`` partitions replayed records by shard owner through
+  the SAME ``route_updates`` searchsorted the live path uses and drains
+  each shard's queue on its own thread (each through the shard's
+  committed-device fused ``slot_update`` patch path).  Growth records
+  fence the fan-out into epochs; the per-shard + cross-boundary
+  ``audit()`` gates the result.
+* **differential checkpoints** — with ``diff=True`` the wrapper tracks
+  the WAL window's dirty blocks (plan rows + image block geometry) and
+  persists only those chunks via ``checkpoint.manager.save_arrays_diff``,
+  with a full compaction checkpoint every ``full_every`` snapshots.
 """
 from __future__ import annotations
 
@@ -124,6 +145,8 @@ class UpdateJournal:
         os.makedirs(wal_dir, exist_ok=True)
         self._fh = None
         self._cur_path: Optional[str] = None
+        #: write()+flush() syscall rounds — the group-commit proof field
+        self.flushes = 0
         if repair:
             self.repair_tail()
         self.next_seq = self._scan_next_seq()
@@ -141,9 +164,34 @@ class UpdateJournal:
         return int(os.path.basename(path)[4:-4])
 
     def _scan_next_seq(self) -> int:
-        last = 0
-        for seq, _nv, _arrs in self.replay():
+        """Next sequence number — learned from the FINAL segment only.
+
+        Segment filenames carry their first record's sequence number, so
+        the scan anchors at ``first_seq - 1`` and walks one segment's
+        records forward (the seed decoded the ENTIRE log on every open —
+        O(history) for a number the last few hundred KiB determine).  A
+        torn tail just stops the walk; bad magic mid-segment is real
+        corruption and raises.
+        """
+        segs = self.segments()
+        if not segs:
+            return 1
+        path = segs[-1]
+        last = self._first_seq(path) - 1
+        with open(path, "rb") as f:
+            data = f.read()
+        pos, size = 0, len(data)
+        while pos < size:
+            head = data[pos : pos + _HEADER.size]
+            if len(head) < _HEADER.size:
+                break  # torn header at the tail
+            magic, seq, _nv, n, _crc = _HEADER.unpack(head)
+            if magic != _MAGIC or n > _MAX_OPS:
+                raise WalCorruptError(f"{path}: bad record at offset {pos}")
+            if pos + _HEADER.size + _payload_size(n) > size:
+                break  # torn payload at the tail
             last = seq
+            pos += _HEADER.size + _payload_size(n)
         return last + 1
 
     # -- append side ----------------------------------------------------
@@ -153,15 +201,23 @@ class UpdateJournal:
             self.wal_dir, f"wal-{first_seq:012d}.seg"
         )
         self._fh = open(self._cur_path, "ab")
+        if self.fsync:
+            # power-loss model: file durability alone does not make the
+            # new NAME durable — fsync the directory after rotation
+            dfd = os.open(self.wal_dir, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
 
     def _close_fh(self) -> None:
         if self._fh is not None:
             self._fh.close()
             self._fh = None
 
-    def append(self, plan: updates.UpdatePlan, nv_bound: int) -> int:
-        """Write one record; durable (to the OS) before this returns."""
-        seq = self.next_seq
+    def _segment_for(self, seq: int) -> None:
+        """Position the append handle, rotating BEFORE the write — a
+        record (or group) never splits across segments."""
         if self._fh is None:
             segs = self.segments()
             if segs and os.path.getsize(segs[-1]) < self.segment_bytes:
@@ -171,12 +227,47 @@ class UpdateJournal:
                 self._open_segment(seq)
         elif self._fh.tell() >= self.segment_bytes:
             self._open_segment(seq)
-        self._fh.write(encode_record(seq, nv_bound, plan))
+
+    def _write_flush(self, buf: bytes) -> None:
+        self._fh.write(buf)
         self._fh.flush()
         if self.fsync:
             os.fsync(self._fh.fileno())
+        self.flushes += 1
+
+    def append(self, plan: updates.UpdatePlan, nv_bound: int) -> int:
+        """Write one record; durable (to the OS) before this returns."""
+        seq = self.next_seq
+        self._segment_for(seq)
+        self._write_flush(encode_record(seq, nv_bound, plan))
         self.next_seq = seq + 1
         return seq
+
+    def append_group(self, plans, nv_bounds) -> list[int]:
+        """Group commit: a round's plans in ONE buffer, ONE flush/fsync.
+
+        Records keep their individual seq/CRC framing (replay and repair
+        are unchanged), only the syscall cost amortizes.  The group lands
+        in a single segment — rotation happens before the write, never
+        inside it — so a crash tears at most the group's byte suffix,
+        which ``repair_tail`` truncates back to the last complete record
+        boundary: the surviving prefix was durable, the lost suffix was
+        never acknowledged.
+        """
+        if len(plans) != len(nv_bounds):
+            raise ValueError("append_group: plans/nv_bounds length mismatch")
+        if not plans:
+            return []
+        seq0 = self.next_seq
+        seqs = list(range(seq0, seq0 + len(plans)))
+        self._segment_for(seq0)
+        buf = b"".join(
+            encode_record(s, nv, p)
+            for s, nv, p in zip(seqs, nv_bounds, plans)
+        )
+        self._write_flush(buf)
+        self.next_seq = seq0 + len(plans)
+        return seqs
 
     # -- read side ------------------------------------------------------
     def replay(self, after: int = 0) -> Iterator[tuple]:
@@ -270,6 +361,24 @@ class UpdateJournal:
         self._close_fh()
 
 
+class _ShardDirty:
+    """Per-shard dirty-block accumulator for differential checkpoints."""
+
+    __slots__ = ("full", "touched", "rows", "ranges")
+
+    def __init__(self):
+        self.full = False     # whole shard dirty (rebuild / tracker overflow)
+        self.touched = False
+        self.rows = []        # np arrays of touched row ids
+        self.ranges = []      # np [K, 2] half-open slot-element ranges
+
+
+#: Beyond this many tracked rows a shard's accumulator degrades to
+#: "full" — the diff would approach full size anyway and the tracking
+#: lists must not grow with the WAL window unbounded.
+_DIRTY_CAP = 1 << 16
+
+
 class DurableGraph:
     """A representation wrapped in WAL-first apply + checkpoint/restore.
 
@@ -282,6 +391,13 @@ class DurableGraph:
     full canonical state every k applies (k=0: manual only); the
     constructor writes a step-0 checkpoint so recovery always has a
     base.
+
+    ``rep`` may be any of the five registered single-device
+    representations OR a ``ShardedGraph`` (§14) — the wrapper detects
+    which and routes applies, checkpoints, and recovery accordingly.
+    ``diff=True`` switches periodic checkpoints to §15 differential
+    steps (every ``full_every``-th snapshot is a full compaction point
+    that re-anchors the chain).
     """
 
     def __init__(
@@ -294,13 +410,25 @@ class DurableGraph:
         keep: int = 3,
         fsync: bool = False,
         segment_bytes: int = 1 << 20,
+        diff: bool = False,
+        full_every: int = 8,
         _recovering: bool = False,
     ):
+        from ..core import distributed as dist  # lazy: single-device users
+                                                # never pay the mesh import
         self.rep = rep
         self.wal_dir = wal_dir
         self.ckpt_dir = ckpt_dir
         self.checkpoint_every = int(checkpoint_every)
         self.keep = int(keep)
+        self.diff = bool(diff)
+        self.full_every = max(int(full_every), 1)
+        self._sharded = isinstance(rep, dist.ShardedGraph)
+        self._ckpts_since_full = 0
+        self._dirty: dict = {}
+        # replay applies are not dirty-tracked → first post-recovery
+        # checkpoint must be a full one
+        self._force_full = bool(_recovering)
         self.journal = UpdateJournal(
             wal_dir, segment_bytes=segment_bytes, fsync=fsync,
             repair=_recovering,
@@ -313,13 +441,111 @@ class DurableGraph:
 
     @property
     def rep_name(self) -> str:
+        if self._sharded:
+            return "sharded"
         cls = type(self.rep)
         for name, c in REPRESENTATIONS.items():
             if c is cls:
                 return name
         raise TypeError(f"unregistered representation {cls.__name__}")
 
+    # -- dirty-block tracking (differential checkpoints, §15) ----------
+    def _dirty_pre(self, plan):
+        """Snapshot the block geometry a plan is about to disturb."""
+        from ..core import distributed as dist
+
+        rep = self.rep
+        per = []
+        for sid, sub in dist.route_updates(plan, rep.n_shards, rep.rows_max):
+            img = rep.shards[sid]
+            rows = sub.touched_rows(rep.v_pad)
+            per.append((sid, rows, img.block_ranges(rows), img.bump))
+        return rep.generation, per
+
+    def _dirty_post(self, pre) -> None:
+        gen0, per = pre
+        rep = self.rep
+        if rep.generation != gen0:
+            # a rebuild re-sharded every image: whole-mesh dirty
+            for sid in range(rep.n_shards):
+                d = self._dirty.setdefault(sid, _ShardDirty())
+                d.full = d.touched = True
+                d.rows, d.ranges = [], []
+            return
+        for sid, rows, old_ranges, bump0 in per:
+            img = rep.shards[sid]
+            d = self._dirty.setdefault(sid, _ShardDirty())
+            d.touched = True
+            if d.full:
+                continue
+            d.rows.append(rows)
+            d.ranges.append(old_ranges)            # vacated slots → SENTINEL
+            d.ranges.append(img.block_ranges(rows))  # current extents
+            if img.bump > bump0:                   # freshly bumped blocks
+                d.ranges.append(np.array([[bump0, img.bump]], np.int64))
+            if sum(r.shape[0] for r in d.rows) > _DIRTY_CAP:
+                d.full, d.rows, d.ranges = True, [], []
+
+    def _export_dirty(self) -> dict:
+        """The {shard: hint} dirty-block set ``save_arrays_diff`` consumes."""
+        meta_full = {
+            "__meta__/rep": "full", "__meta__/wal_seq": "full",
+            "__meta__/nv_bound": "full",
+        }
+        out = {}
+        for sid in range(self.rep.n_shards):
+            d = self._dirty.get(sid)
+            if d is None or not d.touched:
+                if sid == 0:
+                    # shard 0 carries the wrapper meta, which always moves
+                    hint = {k: "clean" for k in
+                            ("dst", "wgt", "rows", "starts", "caps", "degs")}
+                    hint["meta"] = "clean"
+                    hint.update(meta_full)
+                    out[sid] = hint
+                else:
+                    out[sid] = "clean"
+                continue
+            if d.full:
+                out[sid] = "full"
+                continue
+            rows = (
+                np.unique(np.concatenate(d.rows)).astype(np.int64)
+                if d.rows else np.empty(0, np.int64)
+            )
+            row_ranges = np.stack([rows, rows + 1], axis=1)
+            slot_ranges = (
+                np.concatenate([np.asarray(r).reshape(-1, 2) for r in d.ranges])
+                if d.ranges else np.empty((0, 2), np.int64)
+            )
+            hint = {
+                "dst": slot_ranges, "wgt": slot_ranges, "rows": slot_ranges,
+                "starts": row_ranges, "caps": row_ranges, "degs": row_ranges,
+                "meta": "full",  # nv/bump/live counters, a few ints
+            }
+            if sid == 0:
+                hint.update(meta_full)
+            out[sid] = hint
+        return out
+
+    def _reset_dirty(self) -> None:
+        self._dirty = {}
+        self._force_full = False
+
     # -- the durable apply path ----------------------------------------
+    def _rep_apply(self, plan: updates.UpdatePlan) -> int:
+        """Dispatch one validated plan into the live representation."""
+        if not self._sharded:
+            # reps with rebuild semantics (SortedCOO) return a successor
+            # instance — rebind so the wrapper always tracks live state
+            self.rep, dm = self.rep.apply(plan)
+            return dm
+        pre = self._dirty_pre(plan) if self.diff else None
+        self.rep.apply(plan)  # ShardedGraph mutates in place
+        if pre is not None:
+            self._dirty_post(pre)
+        return 0
+
     def apply(self, plan: updates.UpdatePlan):
         """WAL-first apply; returns (self, net ΔM)."""
         if plan.n_ops == 0:
@@ -329,9 +555,7 @@ class DurableGraph:
         faultinject.fire("durable.pre_append")
         seq = self.journal.append(plan, nv_bound)
         faultinject.fire("durable.post_append")
-        # reps with rebuild semantics (SortedCOO) return a successor
-        # instance — rebind so the wrapper always tracks live state
-        self.rep, dm = self.rep.apply(plan)
+        dm = self._rep_apply(plan)
         self.seq = seq
         self._nv_bound = nv_bound
         faultinject.fire("durable.post_apply")
@@ -340,16 +564,81 @@ class DurableGraph:
             self.checkpoint()
         return self, dm
 
+    def apply_group(self, plans):
+        """Group-committed apply: one WAL flush for a round's plans.
+
+        Same ordering contract as :meth:`apply` — every plan is durable
+        (one ``append_group`` buffer) before the first fused dispatch
+        runs.  A crash mid-round therefore re-applies the whole round on
+        recovery (at-least-once, idempotent); a crash mid-append tears
+        the group's suffix, which was never acknowledged.  Returns
+        ``(self, net ΔM)`` summed over the round.
+        """
+        plans = [p for p in plans if p.n_ops]
+        if not plans:
+            return self, 0
+        bounds, nv = [], self._nv_bound
+        for p in plans:
+            p.validate()
+            nv = max(nv, p.max_insert_vertex() + 1)
+            bounds.append(nv)
+        faultinject.fire("durable.pre_append")
+        seqs = self.journal.append_group(plans, bounds)
+        faultinject.fire("durable.post_append")
+        total = 0
+        for p, seq, b in zip(plans, seqs, bounds):
+            total += self._rep_apply(p)
+            self.seq = seq
+            self._nv_bound = b
+            faultinject.fire("durable.post_apply")
+        self._applies_since_ckpt += len(plans)
+        if self.checkpoint_every and self._applies_since_ckpt >= self.checkpoint_every:
+            self.checkpoint()
+        return self, total
+
     # -- checkpoint / recover ------------------------------------------
     def checkpoint(self) -> str:
-        """Snapshot the full canonical state; prune the WAL behind it."""
-        arrays = dict(self.rep.state_tree())
-        arrays["__meta__/rep"] = np.array(self.rep_name)
-        arrays["__meta__/wal_seq"] = np.int64(self.seq)
-        arrays["__meta__/nv_bound"] = np.int64(self._nv_bound)
-        path = ckpt.save_arrays(
-            self.ckpt_dir, max(self.seq, 0), arrays, keep=self.keep
+        """Snapshot the canonical state; prune the WAL behind it.
+
+        With ``diff=True`` this writes a §15 differential step against
+        the latest checkpoint — unless no base exists, the chain is
+        ``full_every`` long (periodic compaction), or the window holds
+        untracked applies (post-recovery replay) — in which case it
+        falls back to a full step that re-anchors the chain.
+        """
+        meta = {
+            "__meta__/rep": np.array(self.rep_name),
+            "__meta__/wal_seq": np.int64(self.seq),
+            "__meta__/nv_bound": np.int64(self._nv_bound),
+        }
+        if self._sharded:
+            shards = {int(s): dict(t) for s, t in self.rep.state_trees().items()}
+            shards[0].update(meta)
+        else:
+            arrays = dict(self.rep.state_tree())
+            arrays.update(meta)
+            shards = {0: arrays}
+        step = max(self.seq, 0)
+        want_diff = (
+            self.diff
+            and not self._force_full
+            and ckpt.latest_step(self.ckpt_dir) is not None
+            and self._ckpts_since_full < self.full_every - 1
         )
+        if want_diff:
+            # sharded applies tracked exact dirty blocks; single-device
+            # diffs hash-compare chunks against the base (hint = None)
+            dirty = self._export_dirty() if self._sharded and self.diff else None
+            path = ckpt.save_arrays_diff(
+                self.ckpt_dir, step, shards, keep=self.keep, dirty=dirty
+            )
+            self._ckpts_since_full += 1
+        else:
+            path = ckpt.save_arrays_sharded(
+                self.ckpt_dir, step, shards, keep=self.keep
+            )
+            self._ckpts_since_full = 0
+        self._reset_dirty()
         self.journal.truncate_through(self.seq)
         self._applies_since_ckpt = 0
         return path
@@ -365,43 +654,154 @@ class DurableGraph:
         fsync: bool = False,
         segment_bytes: int = 1 << 20,
         audit: bool = True,
+        parallel: bool = True,
+        mesh=None,
+        diff: bool = False,
+        full_every: int = 8,
+        stats: Optional[dict] = None,
     ) -> "DurableGraph":
         """Newest complete checkpoint + WAL replay = the uncrashed graph.
 
         1. sweep ``.tmp_ckpt_*`` debris (writers the crash interrupted);
-        2. restore the newest complete checkpoint's exact state arrays;
+        2. restore the newest complete checkpoint's exact state arrays —
+           full, sharded, or a §15 differential chain, resolved
+           uniformly through ``restore_arrays_diff``;
         3. repair the WAL tail (the append the crash interrupted) and
-           replay every record past the checkpoint's watermark through
-           the representation's ordinary ``apply`` — validated against
-           the record's own vertex watermark;
-        4. run the cross-layer invariant audit on the result.
+           replay every record past the checkpoint's watermark — for a
+           sharded graph with ``parallel=True``, owner-routed across
+           per-shard threads (:meth:`_replay_parallel`); otherwise
+           serially through the ordinary ``apply`` path — each record
+           validated against its own vertex watermark;
+        4. run the cross-layer invariant audit on the result (the
+           per-shard + cross-boundary pass for sharded graphs).
+
+        ``mesh`` re-places recovered shards on devices (None = local
+        mode).  ``stats``, if given, receives ``restore_s`` /
+        ``replay_s`` / ``records`` for benchmarking.
         """
+        import time
+
+        t0 = time.perf_counter()
         ckpt.clean_stale(ckpt_dir)
-        arrays, _step = ckpt.restore_arrays(ckpt_dir)
-        name = str(arrays.pop("__meta__/rep")[()])
-        wal_seq = int(arrays.pop("__meta__/wal_seq")[()])
-        nv_bound = int(arrays.pop("__meta__/nv_bound")[()])
-        rep_cls = REPRESENTATIONS[name]
-        rep = rep_cls.from_state_tree(arrays)
+        trees, _step = ckpt.restore_arrays_diff(ckpt_dir)
+        meta_sid = 0 if 0 in trees else min(trees)
+        meta = trees[meta_sid]
+        name = str(meta.pop("__meta__/rep")[()])
+        wal_seq = int(meta.pop("__meta__/wal_seq")[()])
+        nv_bound = int(meta.pop("__meta__/nv_bound")[()])
+        if name == "sharded":
+            from ..core import distributed as dist
+
+            rep = dist.ShardedGraph.from_state_trees(trees, mesh=mesh)
+        else:
+            rep = REPRESENTATIONS[name].from_state_tree(trees[meta_sid])
+        t1 = time.perf_counter()
         g = cls(
             rep, wal_dir, ckpt_dir,
             checkpoint_every=checkpoint_every, keep=keep, fsync=fsync,
-            segment_bytes=segment_bytes, _recovering=True,
+            segment_bytes=segment_bytes, diff=diff, full_every=full_every,
+            _recovering=True,
         )
         g.seq = wal_seq
         g._nv_bound = max(nv_bound, 1)
-        for seq, rec_nv, (qs, qd, qw, ql) in g.journal.replay(after=wal_seq):
-            plan = updates.plan_from_canonical(qs, qd, qw, ql)
-            plan.validate(num_vertices=int(rec_nv))
-            g.rep, _ = g.rep.apply(plan)
-            g.seq = seq
-            g._nv_bound = max(g._nv_bound, int(rec_nv))
+        if g._sharded and parallel:
+            records = g._replay_parallel(wal_seq)
+        else:
+            records = 0
+            for seq, rec_nv, (qs, qd, qw, ql) in g.journal.replay(after=wal_seq):
+                plan = updates.plan_from_canonical(qs, qd, qw, ql)
+                plan.validate(num_vertices=int(rec_nv))
+                if g._sharded:
+                    g.rep.apply(plan)
+                else:
+                    g.rep, _ = g.rep.apply(plan)
+                g.seq = seq
+                g._nv_bound = max(g._nv_bound, int(rec_nv))
+                records += 1
+        t2 = time.perf_counter()
         if audit:
             faultinject.audit(g.rep)
+        if stats is not None:
+            stats.update(
+                restore_s=t1 - t0, replay_s=t2 - t1, records=records
+            )
         return g
+
+    def _replay_parallel(self, after: int) -> int:
+        """Owner-routed parallel WAL replay over the shard mesh (§15).
+
+        Records are decoded and validated up front, then split into
+        epochs at growth records (a growth triggers the global re-shard,
+        which must see every earlier record applied and fences every
+        later one).  Within an epoch each record is routed by the same
+        ``route_updates`` searchsorted the live path uses into per-shard
+        FIFO queues; one thread per touched shard drains its queue
+        through the shard's committed-device fused patch path.  A shard
+        whose flush fails stops queueing immediately (queue depth past
+        ``MAX_PENDING`` would silently drop plans) and hands its ordered
+        remainder to ONE global ``_rebuild`` — the exact fallback the
+        live path takes, so recovered content is identical.
+        """
+        from concurrent.futures import ThreadPoolExecutor
+
+        from ..core import distributed as dist
+
+        records = []
+        for seq, rec_nv, (qs, qd, qw, ql) in self.journal.replay(after=after):
+            plan = updates.plan_from_canonical(qs, qd, qw, ql)
+            plan.validate(num_vertices=int(rec_nv))
+            records.append((seq, int(rec_nv), plan))
+        if not records:
+            return 0
+
+        def drain(sid, subs):
+            img = self.rep.shards[sid]
+            for k, sub in enumerate(subs):
+                if img._stale:
+                    return subs[k:]
+                img.queue(sub)
+                if not img.flush():
+                    return subs[k + 1 :]  # sub itself pends on img
+            return []
+
+        with ThreadPoolExecutor(max_workers=self.rep.n_shards) as ex:
+            i = 0
+            while i < len(records):
+                j = i
+                while (
+                    j < len(records)
+                    and records[j][2].max_insert_vertex() < self.rep.n
+                ):
+                    j += 1
+                if j > i:  # fan an epoch of non-growth records out
+                    queues: dict = {}
+                    for _seq, _nv, plan in records[i:j]:
+                        for sid, sub in dist.route_updates(
+                            plan, self.rep.n_shards, self.rep.rows_max
+                        ):
+                            queues.setdefault(sid, []).append(sub)
+                    leftovers = list(
+                        ex.map(lambda kv: drain(*kv), sorted(queues.items()))
+                    )
+                    extra = [p for rest in leftovers for p in rest]
+                    if extra or any(img._pending for img in self.rep.shards):
+                        # _rebuild folds per-image pending queues first,
+                        # then extras — global (src, dst) order restored
+                        self.rep._rebuild(extra=tuple(extra))
+                if j < len(records):  # the growth record fencing the epoch
+                    self.rep.apply(records[j][2])
+                    j += 1
+                i = j
+        self.seq = records[-1][0]
+        self._nv_bound = max(self._nv_bound, max(nv for _s, nv, _p in records))
+        return len(records)
 
     # -- passthrough conveniences --------------------------------------
     def to_csr(self):
+        if self._sharded:
+            from ..core import distributed as dist
+
+            return dist.gather_csr(self.rep)
         return self.rep.to_csr()
 
     def reverse_walk(self, steps: int, *, visits0=None):

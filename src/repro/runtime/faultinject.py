@@ -182,8 +182,18 @@ def audit(rep) -> dict:
     3. CSR ↔ image cross-consistency — the image's live payload, gathered in
        row order, is exactly the CSR's dst/wgt streams.
 
+    Sharded graphs (anything exposing per-shard ``shards`` plus its own
+    ``audit``, i.e. ``ShardedGraph`` — duck-typed so this module stays
+    core-import-free) delegate to their own per-shard + cross-boundary
+    audit pass (DESIGN.md §14), which is the §15 recovery gate.
+
     Raises :class:`AuditError` on the first violation; returns summary stats.
     """
+    if hasattr(rep, "shards") and hasattr(rep, "audit"):
+        try:
+            return rep.audit()
+        except ValueError as e:
+            raise AuditError(str(e)) from e
     c = rep.to_csr()
     off = np.asarray(c.offsets).astype(np.int64)
     nv, m = int(c.n), int(c.m)

@@ -1,6 +1,7 @@
 """Durability pipeline (DESIGN.md §13): WAL journal, checkpoint/restore
 bit-parity, crash-recovery sweeps over every representation × injection
 point, the kernel fallback chain, and the cross-layer invariant audit."""
+import json
 import os
 import shutil
 
@@ -148,6 +149,162 @@ def test_corrupt_record_raises(tmp_path):
     # repair refuses too — truncating would drop acknowledged updates
     with pytest.raises(durable.WalCorruptError):
         durable.UpdateJournal(wal, repair=True)
+
+
+def test_scan_next_seq_reads_final_segment_only(tmp_path):
+    """Opening a journal must not decode the whole log: a rotten byte in
+    an EARLIER segment is invisible to the open (filenames carry
+    first_seq, only the final segment is walked) but still fatal to a
+    full replay."""
+    wal = str(tmp_path / "wal")
+    j = durable.UpdateJournal(wal, segment_bytes=256)
+    for p in make_plans(6):
+        j.append(p, N_V)
+    j.close()
+    segs = j.segments()
+    assert len(segs) >= 3
+    faultinject.corrupt_byte(segs[0], durable._HEADER.size + 3)
+    j2 = durable.UpdateJournal(wal, segment_bytes=256)  # opens fine
+    assert j2.next_seq == 7
+    with pytest.raises(durable.WalCorruptError):
+        list(j2.replay())  # the full decode still sees the rot
+    j2.close()
+
+
+def test_scan_next_seq_torn_final_segment(tmp_path):
+    wal = str(tmp_path / "wal")
+    j = durable.UpdateJournal(wal, segment_bytes=256)
+    for p in make_plans(4):
+        j.append(p, N_V)
+    j.close()
+    faultinject.tear_tail(j.segments()[-1], 10)
+    # without repair the torn record is simply not counted
+    j2 = durable.UpdateJournal(wal, segment_bytes=256)
+    assert j2.next_seq == 4
+    j2.close()
+
+
+def test_journal_fsync_rotation_durable(tmp_path):
+    """fsync=True also fsyncs the WAL directory after each rotation (the
+    new segment NAME must survive power loss, not just its bytes)."""
+    wal = str(tmp_path / "wal")
+    j = durable.UpdateJournal(wal, segment_bytes=256, fsync=True)
+    plans = make_plans(5)
+    for p in plans:
+        j.append(p, N_V)
+    assert len(j.segments()) > 1  # rotation happened under fsync
+    assert [s for s, _, _ in j.replay()] == [1, 2, 3, 4, 5]
+    j.close()
+
+
+def test_group_append_one_flush_one_segment(tmp_path):
+    wal = str(tmp_path / "wal")
+    j = durable.UpdateJournal(wal, segment_bytes=256)
+    plans = make_plans(4)
+    f0 = j.flushes
+    seqs = j.append_group(plans, [N_V] * 4)
+    assert seqs == [1, 2, 3, 4] and j.flushes - f0 == 1
+    # a group never splits across segments: all records in one file
+    assert len(j.segments()) == 1
+    got = list(j.replay())
+    assert [s for s, _, _ in got] == seqs
+    for (_, _, (qs, _, _, _)), p in zip(got, plans):
+        np.testing.assert_array_equal(qs, p.q_src)
+    # the NEXT group rotates first (segment is over budget), then lands
+    j.append_group(make_plans(2, seed=5), [N_V] * 2)
+    assert len(j.segments()) == 2
+    assert [s for s, _, _ in j.replay()] == [1, 2, 3, 4, 5, 6]
+    j.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager: stale sweep, legacy manifests, diff chains
+# ---------------------------------------------------------------------------
+def test_clean_stale_sweeps_tmp_dirs(tmp_path):
+    cd = str(tmp_path / "ckpt")
+    ckpt.save_arrays(cd, 0, {"a": np.arange(4)})
+    os.makedirs(os.path.join(cd, ".tmp_ckpt_dead1", "sub"))
+    os.makedirs(os.path.join(cd, ".tmp_ckpt_dead2"))
+    removed = ckpt.clean_stale(cd)
+    assert sorted(removed) == [".tmp_ckpt_dead1", ".tmp_ckpt_dead2"]
+    assert not [n for n in os.listdir(cd) if n.startswith(".tmp_ckpt_")]
+    # committed steps are untouched, and a second sweep is a no-op
+    assert ckpt.all_steps(cd) == [0]
+    assert ckpt.clean_stale(cd) == []
+
+
+def test_legacy_flat_manifest_restores(tmp_path):
+    """Pre-§14 manifests (no "shards" key, flat keys/shapes/dtypes) must
+    keep restoring through every entry point."""
+    cd = str(tmp_path / "ckpt")
+    d = os.path.join(cd, "step_0000000007")
+    os.makedirs(d)
+    arrays = {"dst": np.arange(10, dtype=np.int32), "deg": np.ones(5, np.int64)}
+    np.savez(os.path.join(d, "shard_0.npz"), **arrays)
+    manifest = {
+        "step": 7,
+        "keys": sorted(arrays),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    got, step = ckpt.restore_arrays(cd)
+    assert step == 7
+    np.testing.assert_array_equal(got["dst"], arrays["dst"])
+    shards, _ = ckpt.restore_arrays_sharded(cd)
+    assert list(shards) == [0]
+    np.testing.assert_array_equal(shards[0]["deg"], arrays["deg"])
+    # diff-aware chain restore treats it as a full base too
+    trees, _ = ckpt.restore_arrays_diff(cd)
+    np.testing.assert_array_equal(trees[0]["dst"], arrays["dst"])
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore_arrays(cd, shard_id=1)
+
+
+def test_manager_diff_chain_and_crc_gate(tmp_path):
+    cd = str(tmp_path / "ckpt")
+    rng = np.random.default_rng(3)
+    a0 = {"dst": rng.integers(0, 99, 9000).astype(np.int32),
+          "deg": rng.integers(0, 9, 300).astype(np.int64)}
+    ckpt.save_arrays_sharded(cd, 0, {0: dict(a0)})
+    a1 = {k: v.copy() for k, v in a0.items()}
+    a1["dst"][4096 // 4 + 1] = 777  # second 16 KiB chunk
+    # hash-compare diff, then a ranged-hint diff on top of it
+    ckpt.save_arrays_diff(cd, 1, {0: a1})
+    a2 = {k: v.copy() for k, v in a1.items()}
+    a2["deg"][5] = 42
+    hint = {0: {"dst": "clean", "deg": np.array([[5, 6]])}}
+    p2 = ckpt.save_arrays_diff(cd, 2, {0: a2}, dirty=hint)
+    man = ckpt._read_manifest(p2)
+    assert man["kind"] == "diff" and man["base_step"] == 1
+    for s, want in ((0, a0), (1, a1), (2, a2)):
+        trees, _ = ckpt.restore_arrays_diff(cd, step=s)
+        for k in want:
+            np.testing.assert_array_equal(trees[0][k], want[k])
+    # a digest that disagrees with the patched bytes must fail the gate
+    man_path = os.path.join(p2, "manifest.json")
+    man["shards"]["0"]["chunks"]["deg"][0] ^= 0xFF
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="CRC"):
+        ckpt.restore_arrays_diff(cd, step=2)
+
+
+def test_diff_rotation_keeps_chain_base(tmp_path):
+    cd = str(tmp_path / "ckpt")
+    a = {"x": np.arange(64, dtype=np.int64)}
+    ckpt.save_arrays_sharded(cd, 0, {0: dict(a)})
+    for s in (1, 2, 3, 4):
+        ckpt.save_arrays_diff(cd, s, {0: dict(a)}, keep=2)
+    steps = ckpt.all_steps(cd)
+    assert 0 in steps  # the full base survives keep=2
+    trees, _ = ckpt.restore_arrays_diff(cd)
+    np.testing.assert_array_equal(trees[0]["x"], a["x"])
+    # a NEW full step re-anchors; old chain becomes rotatable
+    ckpt.save_arrays_sharded(cd, 5, {0: dict(a)}, keep=2)
+    ckpt.save_arrays_sharded(cd, 6, {0: dict(a)}, keep=2)
+    assert ckpt.all_steps(cd) == [5, 6]
 
 
 # ---------------------------------------------------------------------------

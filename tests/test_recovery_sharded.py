@@ -1,0 +1,322 @@
+"""Sharded-scale recovery engine (DESIGN.md §15): owner-routed parallel
+WAL replay, group commit, and differential checkpoints.
+
+The crash matrix crosses injection points × {single-device, ShardedGraph
+S∈{2,4}} × {full, differential} checkpoints (plus a torn group-commit
+tail) and requires the recovered graph to be bit-identical to an
+uncrashed twin — dense CSR equality AND exact walk equality — with the
+per-shard + cross-boundary audit clean.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.core import REPRESENTATIONS, csr as csr_mod, edgebatch, updates
+from repro.core import distributed as dist
+from repro.runtime import durable, faultinject
+
+N_V = 48
+CRASH_POINTS = ("durable.pre_append", "durable.post_append", "durable.post_apply")
+
+
+@pytest.fixture(autouse=True)
+def _clean_fault_state():
+    faultinject.disarm()
+    yield
+    faultinject.disarm()
+
+
+@pytest.fixture(scope="module")
+def base_csr():
+    rng = np.random.default_rng(11)
+    m = 220
+    return csr_mod.from_coo(
+        rng.integers(0, N_V, m),
+        rng.integers(0, N_V, m),
+        rng.random(m).astype(np.float32),
+        n=N_V,
+    )
+
+
+def make_plans(k=6, seed=7, n=N_V):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(k):
+        ib = edgebatch.from_arrays(
+            rng.integers(0, n, 12),
+            rng.integers(0, n, 12),
+            rng.random(12).astype(np.float32),
+        )
+        db = edgebatch.from_arrays(rng.integers(0, n, 6), rng.integers(0, n, 6))
+        out.append(updates.plan_update(inserts=ib, deletes=db))
+    return out
+
+
+def assert_sharded_parity(g: dist.ShardedGraph, twin: dist.ShardedGraph):
+    """Bit-identity at the content level: gathered CSR streams AND the
+    exact (unweighted small-integer) walk outputs must match."""
+    ca, cb = dist.gather_csr(g), dist.gather_csr(twin)
+    np.testing.assert_array_equal(np.asarray(ca.offsets), np.asarray(cb.offsets))
+    np.testing.assert_array_equal(
+        np.asarray(ca.dst)[: ca.m], np.asarray(cb.dst)[: cb.m]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ca.wgt)[: ca.m], np.asarray(cb.wgt)[: cb.m]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(g.reverse_walk(3)), np.asarray(twin.reverse_walk(3))
+    )
+
+
+# ---------------------------------------------------------------------------
+# the crash matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("point", CRASH_POINTS)
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("diff", [False, True])
+def test_sharded_crash_matrix(base_csr, tmp_path, point, n_shards, diff):
+    """Crash at every pipeline point × shard width × checkpoint kind;
+    parallel owner-routed replay must reproduce the uncrashed twin."""
+    wd, cd = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    g = durable.DurableGraph(
+        dist.shard_csr(base_csr, n_shards), wd, cd, diff=diff, full_every=4
+    )
+    twin = dist.shard_csr(base_csr, n_shards)
+    plans = make_plans(6, seed=29)
+    kcrash = 3
+    faultinject.arm(point, after=kcrash)
+    survived = 0
+    try:
+        for i, p in enumerate(plans):
+            g.apply(p)
+            survived = i + 1
+            if i == 1:
+                g.checkpoint()  # mid-stream snapshot (diff or full)
+    except faultinject.SimulatedCrash:
+        pass
+    else:
+        raise AssertionError("crash point never fired")
+    faultinject.disarm(point)
+    # pre_append dies before the record is durable; the post_* points die
+    # after it — the twin must replay exactly the durable prefix
+    upto = kcrash if point == "durable.pre_append" else kcrash + 1
+    for p in plans[:upto]:
+        twin.apply(p)
+    g2 = durable.DurableGraph.recover(wd, cd, parallel=True, diff=diff)
+    assert g2.rep_name == "sharded"
+    assert_sharded_parity(g2.rep, twin)
+    g2.rep.audit()
+
+
+@pytest.mark.parametrize("point", CRASH_POINTS)
+@pytest.mark.parametrize("rep_name", ["digraph", "lazy"])
+def test_single_device_diff_crash_matrix(base_csr, tmp_path, point, rep_name):
+    """The §13 single-device matrix, rerun over differential checkpoints
+    (hash-compare dirty detection)."""
+    wd, cd = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    rep = REPRESENTATIONS[rep_name].from_csr(base_csr)
+    g = durable.DurableGraph(rep, wd, cd, diff=True, full_every=3)
+    twin = REPRESENTATIONS[rep_name].from_csr(base_csr)
+    plans = make_plans(6, seed=41)
+    kcrash = 3
+    faultinject.arm(point, after=kcrash)
+    try:
+        for i, p in enumerate(plans):
+            g.apply(p)
+            if i in (0, 2):
+                g.checkpoint()  # two diff steps on the chain
+    except faultinject.SimulatedCrash:
+        pass
+    else:
+        raise AssertionError("crash point never fired")
+    faultinject.disarm(point)
+    upto = kcrash if point == "durable.pre_append" else kcrash + 1
+    for p in plans[:upto]:
+        twin, _ = twin.apply(p)
+    g2 = durable.DurableGraph.recover(wd, cd, diff=True)
+    c1, c2 = g2.to_csr(), twin.to_csr()
+    np.testing.assert_array_equal(np.asarray(c1.offsets), np.asarray(c2.offsets))
+    np.testing.assert_array_equal(
+        np.asarray(c1.dst)[: c1.m], np.asarray(c2.dst)[: c2.m]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(c1.wgt)[: c1.m], np.asarray(c2.wgt)[: c2.m]
+    )
+    faultinject.audit(g2.rep)
+
+
+# ---------------------------------------------------------------------------
+# group commit
+# ---------------------------------------------------------------------------
+def test_group_commit_one_flush_per_round(base_csr, tmp_path):
+    g = durable.DurableGraph(
+        dist.shard_csr(base_csr, 2), str(tmp_path / "w"), str(tmp_path / "c")
+    )
+    twin = dist.shard_csr(base_csr, 2)
+    plans = make_plans(9, seed=53)
+    for r in range(3):
+        round_plans = plans[3 * r : 3 * r + 3]
+        f0 = g.journal.flushes
+        g.apply_group(round_plans)
+        assert g.journal.flushes - f0 == 1
+        for p in round_plans:
+            twin.apply(p)
+    # seqs are contiguous and individually framed: ordinary replay parity
+    assert g.seq == 9
+    g2 = durable.DurableGraph.recover(
+        str(tmp_path / "w"), str(tmp_path / "c"), parallel=True
+    )
+    assert_sharded_parity(g2.rep, twin)
+
+
+def test_group_commit_empty_and_filtered(base_csr, tmp_path):
+    g = durable.DurableGraph(
+        REPRESENTATIONS["digraph"].from_csr(base_csr),
+        str(tmp_path / "w"), str(tmp_path / "c"),
+    )
+    _, dm = g.apply_group([])
+    assert dm == 0 and g.seq == 0
+    empty = updates.plan_update()
+    g.apply_group([empty, empty])
+    assert g.seq == 0 and g.journal.flushes == 0
+
+
+def test_torn_group_commit_tail(base_csr, tmp_path):
+    """Tear bytes off a group's suffix: recovery keeps the complete
+    record prefix (never acked past it) and stays bit-identical."""
+    wd, cd = str(tmp_path / "w"), str(tmp_path / "c")
+    g = durable.DurableGraph(dist.shard_csr(base_csr, 2), wd, cd)
+    twin = dist.shard_csr(base_csr, 2)
+    plans = make_plans(6, seed=61)
+    g.apply_group(plans[:3])
+    for p in plans[:3]:
+        twin.apply(p)
+    g.apply_group(plans[3:])  # this group's tail gets torn
+    g.close()
+    seg = g.journal.segments()[-1]
+    # tear into the middle of the last record's payload
+    faultinject.tear_tail(seg, 17)
+    g2 = durable.DurableGraph.recover(wd, cd, parallel=True)
+    for p in plans[3:5]:  # records 4, 5 survived; record 6 was torn off
+        twin.apply(p)
+    assert g2.seq == 5
+    assert_sharded_parity(g2.rep, twin)
+    g2.rep.audit()
+
+
+# ---------------------------------------------------------------------------
+# parallel replay semantics
+# ---------------------------------------------------------------------------
+def test_parallel_matches_serial_replay(base_csr, tmp_path):
+    wd, cd = str(tmp_path / "w"), str(tmp_path / "c")
+    g = durable.DurableGraph(dist.shard_csr(base_csr, 4), wd, cd)
+    for p in make_plans(8, seed=67):
+        g.apply(p)
+    gp = durable.DurableGraph.recover(wd, cd, parallel=True)
+    gs = durable.DurableGraph.recover(wd, cd, parallel=False)
+    assert_sharded_parity(gp.rep, gs.rep)
+    assert gp.seq == gs.seq == 8
+
+
+def test_parallel_replay_growth_epochs(base_csr, tmp_path):
+    """Growth records fence the fan-out: records after a growth see the
+    re-sharded geometry, exactly like the live path."""
+    wd, cd = str(tmp_path / "w"), str(tmp_path / "c")
+    g = durable.DurableGraph(dist.shard_csr(base_csr, 2), wd, cd)
+    twin = dist.shard_csr(base_csr, 2)
+    gb = edgebatch.from_arrays(
+        np.array([N_V + 9, 5]), np.array([5, N_V + 9]), np.ones(2, np.float32)
+    )
+    stream = (
+        make_plans(2, seed=71)
+        + [updates.plan_update(inserts=gb)]
+        + make_plans(2, seed=73, n=N_V + 10)
+    )
+    for p in stream:
+        g.apply(p)
+        twin.apply(p)
+    g2 = durable.DurableGraph.recover(wd, cd, parallel=True)
+    assert g2.rep.n == twin.n == N_V + 10
+    assert_sharded_parity(g2.rep, twin)
+
+
+def test_recover_stats_surface(base_csr, tmp_path):
+    wd, cd = str(tmp_path / "w"), str(tmp_path / "c")
+    g = durable.DurableGraph(dist.shard_csr(base_csr, 2), wd, cd)
+    for p in make_plans(4, seed=79):
+        g.apply(p)
+    stats = {}
+    durable.DurableGraph.recover(wd, cd, parallel=True, stats=stats)
+    assert stats["records"] == 4
+    assert stats["restore_s"] >= 0 and stats["replay_s"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# differential checkpoints through the wrapper
+# ---------------------------------------------------------------------------
+def test_diff_chain_compacts_to_full(base_csr, tmp_path):
+    """full_every bounds the chain: every k-th snapshot re-anchors."""
+    wd, cd = str(tmp_path / "w"), str(tmp_path / "c")
+    g = durable.DurableGraph(
+        dist.shard_csr(base_csr, 2), wd, cd, diff=True, full_every=2
+    )
+    for p in make_plans(6, seed=83):
+        g.apply(p)
+        g.checkpoint()
+    kinds = []
+    for s in ckpt.all_steps(cd):
+        kinds.append(
+            ckpt._read_manifest(ckpt._step_dir(cd, s)).get("kind", "full")
+        )
+    assert "diff" in kinds and kinds.count("full") >= 2
+    # every step on disk is a complete restore point
+    for s in ckpt.all_steps(cd):
+        trees, _ = ckpt.restore_arrays_diff(cd, step=s)
+        assert set(trees) == {0, 1}
+
+
+def test_diff_dirty_hints_shrink_payload(base_csr, tmp_path):
+    """Tracked sharded diffs persist far less than the full state."""
+    wd, cd = str(tmp_path / "w"), str(tmp_path / "c")
+    g = durable.DurableGraph(
+        dist.shard_csr(base_csr, 4), wd, cd, diff=True, full_every=8
+    )
+    full_bytes = sum(
+        sum(np.asarray(v).nbytes for v in t.values())
+        for t in g.rep.state_trees().values()
+    )
+    # one tiny plan → one diff step whose payload is a few chunks
+    ib = edgebatch.from_arrays(
+        np.array([1, 2]), np.array([3, 4]), np.ones(2, np.float32)
+    )
+    g.apply(updates.plan_update(inserts=ib))
+    path = g.checkpoint()
+    man = ckpt._read_manifest(path)
+    assert man["kind"] == "diff"
+    diff_bytes = sum(b.get("diff_bytes", 0) for b in man["shards"].values())
+    assert 0 < diff_bytes < full_bytes / 2
+    # untouched shards persisted nothing (no npz file at all)
+    clean = [
+        s for s in man["shards"]
+        if man["shards"][s]["diff_bytes"] == 0
+        and not os.path.exists(os.path.join(path, f"shard_{s}.npz"))
+    ]
+    assert len(clean) >= 2
+    # and the diff restores bit-identically
+    g2 = durable.DurableGraph.recover(wd, cd, diff=True)
+    assert_sharded_parity(g2.rep, g.rep)
+
+
+def test_post_recovery_checkpoint_is_full(base_csr, tmp_path):
+    """Replay applies are untracked → the next snapshot re-anchors."""
+    wd, cd = str(tmp_path / "w"), str(tmp_path / "c")
+    g = durable.DurableGraph(
+        dist.shard_csr(base_csr, 2), wd, cd, diff=True, full_every=8
+    )
+    for p in make_plans(3, seed=89):
+        g.apply(p)
+    g2 = durable.DurableGraph.recover(wd, cd, diff=True, full_every=8)
+    path = g2.checkpoint()
+    assert ckpt._read_manifest(path)["kind"] == "full"
