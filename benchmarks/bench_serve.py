@@ -1,0 +1,161 @@
+"""Serve — multi-tenant walk serving under mixed update/walk traffic
+(DESIGN.md §16).
+
+Drives the ``runtime.serve`` WalkServer against the paper's web graph at
+two load levels plus one fault-injected row, reporting walk latency
+percentiles and the robustness proof fields smoke.sh gates on:
+
+* ``steady`` — paced submission the server keeps up with: the latency
+  row readers see when the queue never saturates;
+* ``overload`` — open-loop submission far above capacity with a bounded
+  queue and per-request deadlines: admission control must shed/reject
+  the excess (``shed_count`` > 0) while everything admitted still
+  resolves;
+* ``fault`` — the requested pallas walk backend is killed mid-traffic:
+  the breaker chain must complete the run via xla/ref
+  (``breaker_fallbacks`` >= 1) with ZERO lost requests.
+
+Proof fields on every row: ``torn_reads`` (served walks that match no
+sealed generation — must be 0: the snapshot-isolation contract,
+verified against the host per-generation oracle on a sampled subset),
+``lost`` (admitted requests that neither served nor rejected — must be
+0), ``shed_count``, ``breaker_fallbacks``.
+
+Latency percentiles are deliberately NOT published under a
+``--compare``-gated column name: on the CFS-throttled container p99
+under load is a coin flip between throttle modes, and the gate would
+flap.  The robustness proof fields are the invariant; the percentiles
+are the measured result.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import REPRESENTATIONS
+from repro.kernels import fallback
+from repro.launch import serve as launch_serve
+from repro.runtime import faultinject
+from repro.runtime import serve as serve_mod
+
+from . import common
+
+STEPS = 4
+UPDATE_EVERY = 10
+UPDATE_SIZE = 256
+VERIFY_SAMPLE = 0.25
+
+#: (load level, traffic + server knobs)
+LOADS = {
+    "steady": dict(
+        requests=240, submit_gap_s=0.002, timeout=None,
+        max_queue=256, batch_max=16,
+    ),
+    "overload": dict(
+        requests=480, submit_gap_s=0.0, timeout=0.25,
+        max_queue=32, batch_max=16,
+    ),
+}
+
+
+def _serve_row(c, graph, level, *, walk_backend="auto", fault_point=None,
+               requests, submit_gap_s, timeout, max_queue, batch_max):
+    rep = REPRESENTATIONS["digraph"].from_csr(c)
+    fallback.BREAKER.reset()
+    srv = serve_mod.WalkServer(
+        rep, max_queue=max_queue, batch_max=batch_max,
+        default_timeout=timeout, walk_backend=walk_backend,
+    ).start()
+    # warm the [B, V] walk shapes AND the update patch programs outside
+    # the measured window (compiles on the 1-core container otherwise
+    # dominate every percentile)
+    from repro.core import edgebatch, updates as upd_mod
+
+    wrng = np.random.default_rng(99)
+    warm_upds = []
+    for _ in range(3):
+        eb = edgebatch.random_insertions(wrng, int(c.n), UPDATE_SIZE)
+        plan = upd_mod.plan_update(inserts=eb)
+        warm_upds.append((srv.submit_update(plan), plan))
+    warm = [srv.submit_walk([1, 2], steps=STEPS) for _ in range(batch_max)]
+    for t, _ in warm_upds:
+        t.wait(60.0)
+    for t in warm:
+        t.wait(60.0)
+    if fault_point:
+        faultinject.arm(fault_point, times=2)
+    t0 = time.monotonic()
+    walks, upds = launch_serve.run_traffic(
+        srv, int(c.n), requests=requests, steps=STEPS,
+        update_every=UPDATE_EVERY, update_size=UPDATE_SIZE,
+        seed=13, submit_gap_s=submit_gap_s, timeout=timeout,
+    )
+    for t in walks:
+        t.wait(120.0)
+    stats = srv.stop()
+    wall = time.monotonic() - t0
+    if fault_point:
+        faultinject.disarm(fault_point)
+    fallback.BREAKER.reset()
+
+    walks = warm + walks
+    served = [t for t in walks if t.status == serve_mod.SERVED]
+    rejected = stats["rejected_backpressure"] + stats["rejected_other"]
+    lost = stats["submitted"] - (
+        stats["served"] + stats["shed_expired"] + rejected + stats["failed"]
+    )
+    torn, checked = launch_serve.count_torn_reads(
+        launch_serve.GenerationOracle(c), walks, warm_upds + upds,
+        sample=VERIFY_SAMPLE, seed=7,
+    )
+    pct = launch_serve.percentiles([t.latency_s for t in served])
+    return {
+        "name": f"serve/{graph}/{level}/digraph",
+        "p50_ms": round(pct["p50_ms"], 2),
+        "p95_ms": round(pct["p95_ms"], 2),
+        "p99_ms": round(pct["p99_ms"], 2),
+        "served": stats["served"],
+        "shed_count": stats["shed_expired"] + rejected,
+        "torn_reads": torn,
+        "torn_checked": checked,
+        "lost": lost,
+        "breaker_fallbacks": stats["breaker_fallbacks"],
+        "derived": (
+            f"submitted={stats['submitted']} "
+            f"shed_expired={stats['shed_expired']} rejected={rejected} "
+            f"failed={stats['failed']} batches={stats['batches']} "
+            f"max_batch={stats['max_batch']} seals={stats['seals']} "
+            f"updates={stats['updates_applied']} "
+            f"req_per_s={stats['served'] / max(wall, 1e-9):.1f} "
+            f"backend={walk_backend} wall_s={wall:.2f}"
+        ),
+    }
+
+
+def run(graph: str = "web_small"):
+    c = common.make_graph(graph)
+    rows = []
+    for level, cfg in LOADS.items():
+        rows.append(_serve_row(c, graph, level, **cfg))
+    # fault row: pallas requested, killed mid-traffic -> breaker chain
+    # must complete the run via xla/ref with zero lost requests
+    rows.append(
+        _serve_row(
+            c, graph, "fault", walk_backend="pallas",
+            fault_point="slot_walk.pallas",
+            requests=120, submit_gap_s=0.0, timeout=None,
+            max_queue=256, batch_max=16,
+        )
+    )
+    return common.emit(
+        rows,
+        ["name", "p50_ms", "p95_ms", "p99_ms", "served", "shed_count",
+         "torn_reads", "lost", "breaker_fallbacks", "derived"],
+    )
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(sys.argv[1] if len(sys.argv) > 1 else "web_small")

@@ -15,8 +15,8 @@ more than ``REGRESSION_FACTOR`` — the smoke-gate guard for the paper's
 headline representation.
 
 Usage: PYTHONPATH=src python -m benchmarks.run \
-    [--only load|clone|update|traversal|stream|alloc] [--json PATH] \
-    [--compare BASELINE.json]
+    [--only load|clone|update|traversal|stream|alloc|recovery|serve] \
+    [--json PATH] [--compare BASELINE.json]
 """
 from __future__ import annotations
 
@@ -146,6 +146,7 @@ def main() -> None:
         bench_clone,
         bench_load,
         bench_recovery,
+        bench_serve,
         bench_stream,
         bench_traversal,
         bench_update,
@@ -159,6 +160,7 @@ def main() -> None:
         "stream": bench_stream.run,      # paper Figs. 9-10, interleaved
         "alloc": bench_alloc.run,        # paper Fig. 11
         "recovery": bench_recovery.run,  # durability pipeline (§13)
+        "serve": bench_serve.run,        # multi-tenant serving (§16)
     }
     if args.only and args.only not in suites:
         ap.error(f"unknown suite {args.only!r}; choose from {sorted(suites)}")

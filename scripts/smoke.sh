@@ -6,6 +6,7 @@
 #  * update    (batch insert/delete, fixed pre-cloned timing) -> BENCH_update.json
 #  * stream    (interleaved mixed-batch apply + walk rounds) -> BENCH_stream.json
 #  * recovery  (WAL/checkpoint/replay + fallback chain, §13) -> BENCH_recovery.json
+#  * serve     (multi-tenant walk serving under load, §16)   -> BENCH_serve.json
 # so perf regressions on every paper task (load, clone, updates,
 # traversal) show up in every PR's diff.
 set -euo pipefail
@@ -169,4 +170,44 @@ echo "== forced-4-device sharded crash/recover roundtrip (§15) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
   python scripts/sharded_recovery_check.py
 
-echo "== BENCH_{load,clone,traversal,update,stream,recovery}.json written =="
+echo "== serve benchmark (multi-tenant walk serving, DESIGN.md §16) =="
+python -m benchmarks.run --only serve --json BENCH_serve.json
+
+echo "== serve proof fields (snapshot isolation + zero-lost, §16) =="
+# every row must prove the serving contract: no served walk contradicts
+# its sealed generation (torn_reads == 0 against the host oracle), and
+# no admitted request vanished (lost == 0 — served, shed, or rejected,
+# never silent).  The overload row must actually exercise admission
+# control (shed_count > 0), and the fault row — pallas killed
+# mid-traffic — must complete via the breaker chain (breaker_fallbacks
+# >= 1) without losing a single request.
+python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_serve.json"))["serve"]
+by = {r["name"].split("/")[-2]: r for r in rows}
+bad = []
+for r in rows:
+    if int(r.get("torn_reads", 1)) != 0:
+        bad.append(f"{r['name']}: torn_reads={r.get('torn_reads')}")
+    if int(r.get("torn_checked", 0)) <= 0:
+        bad.append(f"{r['name']}: oracle checked 0 walks")
+    if int(r.get("lost", 1)) != 0:
+        bad.append(f"{r['name']}: lost={r.get('lost')}")
+for lvl in ("steady", "overload", "fault"):
+    if lvl not in by:
+        bad.append(f"missing serve row: {lvl}")
+if "overload" in by and int(by["overload"].get("shed_count", 0)) <= 0:
+    bad.append("overload row shed/rejected nothing (admission control idle)")
+if "fault" in by:
+    f = by["fault"]
+    if int(f.get("breaker_fallbacks", 0)) < 1:
+        bad.append("fault row never fell back (pallas injection missed)")
+    if int(f.get("served", 0)) <= 0:
+        bad.append("fault row served nothing")
+if bad:
+    sys.exit("serve proof regressed: " + "; ".join(bad))
+print("# serve proof ok: torn_reads==0, lost==0, overload sheds, "
+      "injected pallas failure completes via fallback")
+EOF
+
+echo "== BENCH_{load,clone,traversal,update,stream,recovery,serve}.json written =="

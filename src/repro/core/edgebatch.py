@@ -59,25 +59,48 @@ class EdgeBatch:
         return np.bincount(s, minlength=n_vertices)
 
 
+def _offending(mask: np.ndarray, limit: int = 5) -> str:
+    """Render the first few True indices of a bad-element mask, e.g.
+    ``indices [3, 17, 40] (+2 more)`` — validation errors name *where* the
+    bad values sit so serve-layer rejections are debuggable from the
+    message alone."""
+    idx = np.flatnonzero(mask)
+    head = ", ".join(str(int(i)) for i in idx[:limit])
+    more = f" (+{idx.size - limit} more)" if idx.size > limit else ""
+    return f"indices [{head}]{more}"
+
+
 def _validate_ids(arr, name: str) -> np.ndarray:
     """Coerce vertex ids to int32, rejecting anything that can't be one.
 
     Negative ids, ids >= INT32_MAX (the SENTINEL), non-integral floats
     and non-numeric dtypes all raise — silently wrapping them into the
-    arena would corrupt rows far from the call site.
+    arena would corrupt rows far from the call site.  Messages name the
+    array and the offending indices (first few).
     """
     a = np.asarray(arr).reshape(-1)
     if a.dtype.kind == "f":
-        if a.size and not np.all(a == np.floor(a)):
-            raise ValueError(f"{name}: non-integral vertex ids")
+        bad = a != np.floor(a)
+        if a.size and bool(bad.any()):
+            raise ValueError(
+                f"{name}: non-integral vertex ids at {_offending(bad)}: "
+                f"{a[bad][:5].tolist()}"
+            )
     elif a.dtype.kind not in "iu":
         raise TypeError(f"{name}: vertex ids must be integers, got {a.dtype}")
     if a.size:
-        lo, hi = a.min(), a.max()
-        if lo < 0:
-            raise ValueError(f"{name}: negative vertex id {int(lo)}")
-        if hi >= np.iinfo(np.int32).max:
-            raise ValueError(f"{name}: vertex id {int(hi)} overflows int32")
+        neg = a < 0
+        if bool(neg.any()):
+            raise ValueError(
+                f"{name}: negative vertex ids at {_offending(neg)}: "
+                f"{a[neg][:5].astype(np.int64).tolist()}"
+            )
+        big = a >= np.iinfo(np.int32).max
+        if bool(big.any()):
+            raise ValueError(
+                f"{name}: vertex ids overflow int32 at {_offending(big)}: "
+                f"{a[big][:5].astype(np.int64).tolist()}"
+            )
     return a.astype(np.int32)
 
 
@@ -117,19 +140,25 @@ def from_arrays(
     dst = _validate_ids(dst, "dst")
     if src.shape[0] != dst.shape[0]:
         raise ValueError(
-            f"src/dst length mismatch: {src.shape[0]} vs {dst.shape[0]}"
+            f"src/dst length mismatch: src has {src.shape[0]} ids, "
+            f"dst has {dst.shape[0]}"
         )
     if wgt is None:
         wgt = np.ones_like(src, dtype=np.float32)
     wgt = np.asarray(wgt, dtype=np.float32).reshape(-1)
     if wgt.shape[0] != src.shape[0]:
         raise ValueError(
-            f"wgt length mismatch: {wgt.shape[0]} vs {src.shape[0]} edges"
+            f"wgt length mismatch: wgt has {wgt.shape[0]} weights for "
+            f"{src.shape[0]} edges"
         )
-    if wgt.shape[0] and not bool(np.isfinite(wgt).all()):
+    nonfinite = ~np.isfinite(wgt)
+    if wgt.shape[0] and bool(nonfinite.any()):
         # NaN/inf weights would survive every merge unnoticed (no kernel
         # compares them) and poison walk sums far from the call site
-        raise ValueError("wgt: non-finite edge weight")
+        raise ValueError(
+            f"wgt: non-finite edge weights at {_offending(nonfinite)}: "
+            f"{wgt[nonfinite][:5].tolist()}"
+        )
     if symmetric:
         src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
         wgt = np.concatenate([wgt, wgt])

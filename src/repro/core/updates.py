@@ -131,12 +131,22 @@ class UpdatePlan:
         """
         if not self._validated:
             if self.q_src.shape[0]:
-                if int(self.q_src.min()) < 0 or int(self.q_dst.min()) < 0:
-                    raise ValueError("UpdatePlan: negative vertex id in op stream")
+                for name, arr in (("q_src", self.q_src), ("q_dst", self.q_dst)):
+                    neg = arr < 0
+                    if bool(neg.any()):
+                        raise ValueError(
+                            f"UpdatePlan: negative vertex ids in {name} at "
+                            f"{edgebatch._offending(neg)}: "
+                            f"{arr[neg][:5].astype(np.int64).tolist()}"
+                        )
                 ins = ~self.q_del
-                w = self.q_wgt[ins]
-                if w.shape[0] and not bool(np.isfinite(w).all()):
-                    raise ValueError("UpdatePlan: non-finite insert weight")
+                bad = ins & ~np.isfinite(self.q_wgt)
+                if bool(bad.any()):
+                    raise ValueError(
+                        f"UpdatePlan: non-finite insert weights in q_wgt at "
+                        f"{edgebatch._offending(bad)}: "
+                        f"{self.q_wgt[bad][:5].tolist()}"
+                    )
             self._validated = True
         if num_vertices is not None:
             mx = self.max_insert_vertex()

@@ -67,11 +67,46 @@ DENSE_THRESHOLD = 0.55
 #: Module-level maintenance counters; tests and benchmarks read these to
 #: prove walks do zero host image work (builds) between updates, and
 #: that a steady-state flush→walk round is ONE device dispatch.
-STATS = {"builds": 0, "patches": 0, "rebuilds": 0, "dispatches": 0}
+STATS = {"builds": 0, "patches": 0, "rebuilds": 0, "dispatches": 0, "seals": 0}
 
 
 def stats_snapshot() -> dict:
     return dict(STATS)
+
+
+def seal_generation(rep, generation: int = 0) -> "WalkImage":
+    """Seal ``rep``'s current state as an immutable walk generation (§16).
+
+    The single writer calls this after applying a group of UpdatePlans;
+    the returned frozen :class:`WalkImage` is what concurrent readers
+    walk until the next seal — they can never observe a half-applied
+    plan, because generations are immutable and the live structure's
+    subsequent patches copy-on-write instead of donating shared buffers.
+
+    Two shapes, one contract:
+
+    * queueing reps (coo/lazy/chunked/vector2d): ``to_walk_image()``
+      flushes or rebuilds the cached image, then :meth:`WalkImage.seal`
+      snapshots it O(1) and arms the COW flag on the live image;
+    * arena-backed reps (DiGraph, ``shared=True`` images): the rep's own
+      per-buffer COW *is* the isolation — ``rep.snapshot()`` seals the
+      arena buffers (the next in-place update detaches only what it
+      writes, §10) and the snapshot's image wrap becomes the frozen
+      generation.  The snapshot handle is dropped; the image keeps its
+      host geometry arrays alive.
+    """
+    img = rep.to_walk_image()
+    if not img.shared:
+        return img.seal(generation)
+    snap = rep.snapshot()
+    gen = snap.to_walk_image()
+    gen.generation = int(generation)
+    gen._frozen = True
+    # detach from the snapshot handle: the generation must stay exactly
+    # as sealed even if someone mutates the snapshot rep later.
+    snap._image = None
+    STATS["seals"] += 1
+    return gen
 
 
 def reverse_walk_via_image(rep, steps: int, *, visits0=None):
@@ -121,6 +156,18 @@ class WalkImage:
     #: the occupancy below the compaction trigger): the image can only
     #: be rebuilt, so further plans are dropped instead of pinned.
     _stale: bool = dataclasses.field(default=False, repr=False, compare=False)
+    #: sealed-generation id (§16); -1 on live (unsealed) images.
+    generation: int = -1
+    #: True on a sealed generation: the image is read-only — ``queue``
+    #: raises and the patch engine never touches it.  Readers walk it
+    #: while the live writer image keeps patching (snapshot isolation).
+    _frozen: bool = dataclasses.field(default=False, repr=False, compare=False)
+    #: True while a sealed generation still shares this live image's
+    #: device payload: the NEXT patch must not donate dst/wgt/rows (the
+    #: per-buffer COW — jax immutability makes the non-donated merge a
+    #: copy-on-write detach; the patch outputs are fresh buffers, so the
+    #: flag clears after one dispatch).
+    _cow: bool = dataclasses.field(default=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------
     @property
@@ -289,6 +336,45 @@ class WalkImage:
         )
 
     # ------------------------------------------------------------------
+    # generation sealing (DESIGN.md §16 — snapshot-isolated serving)
+    # ------------------------------------------------------------------
+    def seal(self, generation: int = 0) -> "WalkImage":
+        """Seal the current state as an immutable read-only generation.
+
+        O(1) on device: the sealed image *shares* the live device payload
+        (jax arrays are immutable) and copies only the small host
+        geometry arrays.  The live image is flagged ``_cow`` so its next
+        patch suppresses buffer donation — the merge then writes fresh
+        buffers instead of invalidating the generation's (per-buffer
+        COW, §10), after which the flag clears and donation resumes.
+        Readers walk the sealed generation while the writer patches the
+        live image: a reader can never observe a half-applied plan.
+
+        Requires a flushed image (no queued plans, not stale) — the
+        serve layer seals via :func:`seal_generation`, which flushes or
+        rebuilds first.  Shared (arena-backed) images cannot seal here:
+        their owner's update engine mutates host metadata in place, so
+        the owner rep must be snapshotted instead (``seal_generation``
+        handles that too).
+        """
+        if self.shared:
+            raise ValueError("seal(): shared image — snapshot the owner rep")
+        if self._pending or self._stale:
+            raise ValueError("seal(): image has unflushed plans")
+        gen = WalkImage(
+            dst=self.dst, wgt=self.wgt, rows=self.rows,
+            starts=self.starts[: self.nv].copy(),
+            caps=self.caps[: self.nv].copy(),
+            degs=self.degs[: self.nv].copy(),
+            nv=self.nv, bump=self.bump, live=self.live,
+            base_occupancy=self.base_occupancy,
+            generation=int(generation), _frozen=True,
+        )
+        self._cow = True
+        STATS["seals"] += 1
+        return gen
+
+    # ------------------------------------------------------------------
     # incremental maintenance
     # ------------------------------------------------------------------
     def queue(self, plan) -> None:
@@ -298,6 +384,10 @@ class WalkImage:
         dropped and the image marked stale — an update-only stream must
         not pin every plan's batch arrays in memory until someone walks.
         """
+        if self._frozen:
+            raise RuntimeError(
+                f"sealed walk generation {self.generation} is read-only"
+            )
         if self.shared or self._stale:  # shared: the arena IS the image
             return
         self._pending.append(plan)
@@ -438,10 +528,12 @@ class WalkImage:
             return True
         self.dst, self.wgt, self.rows, counts, _ = _su_ops.fused_apply(
             self.dst, self.wgt, self.rows, prep["groups"],
-            scatter=prep["scatter"], backend=prep["backend"], donate=True,
+            scatter=prep["scatter"], backend=prep["backend"],
+            donate=not self._cow,
             slot_map=prep["slot_map"], owner_patch=prep["owner_patch"],
             rebuild_hi=prep["rebuild_hi"],
         )
+        self._cow = False  # outputs are fresh buffers; generations detached
         STATS["dispatches"] += 1
         self._commit_patch(prep, counts)
         return True
@@ -555,7 +647,8 @@ class WalkImage:
         lo, hi = self.device_blocks()
         self.dst, self.wgt, self.rows, counts, walk_out = _su_ops.fused_apply(
             self.dst, self.wgt, self.rows, prep["groups"],
-            scatter=prep["scatter"], backend=prep["backend"], donate=True,
+            scatter=prep["scatter"], backend=prep["backend"],
+            donate=not self._cow,
             slot_map=prep["slot_map"], owner_patch=prep["owner_patch"],
             rebuild_hi=prep["rebuild_hi"],
             walk=(steps, self.nv, self.edges_hi(), nwalks,
@@ -563,6 +656,7 @@ class WalkImage:
             lo=lo, hi=hi, visits0=visits0,
             interpret=interpret,
         )
+        self._cow = False  # outputs are fresh buffers; generations detached
         STATS["dispatches"] += 1
         self._pending.pop(0)
         self._commit_patch(prep, counts)

@@ -16,9 +16,13 @@ under a per-(site, backend) circuit breaker:
 * two consecutive failures **trip** the breaker: the backend is *open* for
   an exponentially growing cool-down (``cooldown * 2^(trips-1)``, capped),
   and dispatch falls through to the next link;
-* an expired cool-down is the implicit **half-open** probe: the next
-  dispatch tries the backend again — success closes the breaker
-  (re-promotion), failure re-trips it with a doubled cool-down.
+* an expired cool-down moves the breaker to **half-open**: exactly ONE
+  probe dispatch is admitted (``admit`` returns ``"probe"``; concurrent
+  dispatchers are refused until the probe resolves or its window lapses)
+  and gets a single attempt — success closes the breaker (full
+  re-promotion, trip history cleared), failure re-trips it with a doubled
+  cool-down.  A probe that never reports back (its thread died) expires
+  after one base cool-down so the backend is not stranded half-open.
 
 The last link of a chain is always attempted even when its breaker is open
 (there is nothing further to fall back to); if it too fails,
@@ -37,6 +41,7 @@ a process kill is not a kernel failure.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Callable, Optional
 
@@ -63,7 +68,9 @@ class CircuitBreaker:
     """Per-key trip/cool-down state.  Keys are (site, backend) tuples.
 
     The clock is injectable so tests drive cool-down expiry with a
-    simulated clock instead of sleeping.
+    simulated clock instead of sleeping.  All transitions are guarded by
+    a lock so concurrent dispatchers (the serve layer) share one breaker
+    safely; ``admit`` implements the explicit half-open protocol.
     """
 
     def __init__(
@@ -76,28 +83,60 @@ class CircuitBreaker:
         self.cooldown = cooldown
         self.max_cooldown = max_cooldown
         self.clock = clock
-        self._state: dict = {}  # key -> {"trips": int, "open_until": float}
+        self._lock = threading.Lock()
+        # key -> {"trips": int, "open_until": float, "probe_until": float}
+        # probe_until > 0 means a half-open probe is in flight until then
+        self._state: dict = {}
 
     def available(self, key) -> bool:
-        st = self._state.get(key)
-        return st is None or self.clock() >= st["open_until"]
+        with self._lock:
+            st = self._state.get(key)
+            return st is None or self.clock() >= st["open_until"]
+
+    def admit(self, key) -> Optional[str]:
+        """Half-open admission: ``"closed"`` (healthy, dispatch freely),
+        ``"probe"`` (this caller is THE single half-open probe and gets
+        one attempt), or ``None`` (open / probe already in flight —
+        fall through to the next link)."""
+        with self._lock:
+            st = self._state.get(key)
+            if st is None:
+                return "closed"
+            now = self.clock()
+            if now < st["open_until"]:
+                return None
+            if now < st["probe_until"]:
+                return None  # another dispatcher holds the probe slot
+            # claim the probe slot; a probe that never resolves expires
+            # after one base cool-down instead of stranding the backend
+            st["probe_until"] = now + self.cooldown
+            return "probe"
 
     def trip(self, key) -> None:
-        st = self._state.setdefault(key, {"trips": 0, "open_until": 0.0})
-        st["trips"] += 1
-        wait = min(self.cooldown * (2.0 ** (st["trips"] - 1)), self.max_cooldown)
-        st["open_until"] = self.clock() + wait
+        with self._lock:
+            st = self._state.setdefault(
+                key, {"trips": 0, "open_until": 0.0, "probe_until": 0.0}
+            )
+            st["trips"] += 1
+            wait = min(
+                self.cooldown * (2.0 ** (st["trips"] - 1)), self.max_cooldown
+            )
+            st["open_until"] = self.clock() + wait
+            st["probe_until"] = 0.0  # probe resolved (by failing)
 
     def record_success(self, key) -> None:
         # full re-promotion: the trip history is cleared, not just paused
-        self._state.pop(key, None)
+        with self._lock:
+            self._state.pop(key, None)
 
     def state(self, key) -> Optional[dict]:
-        st = self._state.get(key)
-        return None if st is None else dict(st)
+        with self._lock:
+            st = self._state.get(key)
+            return None if st is None else dict(st)
 
     def reset(self) -> None:
-        self._state.clear()
+        with self._lock:
+            self._state.clear()
 
 
 #: process-wide breaker shared by all chained dispatch sites
@@ -116,9 +155,14 @@ def run_chain(site: str, backend: str, attempt: Callable, *, breaker: Optional[C
     last_err: Optional[Exception] = None
     for i, b in enumerate(candidates):
         key = (site, b)
-        if i < len(candidates) - 1 and not br.available(key):
-            continue  # cooling down; the chain floor always gets a shot
-        for _ in range(RETRIES + 1):
+        mode = br.admit(key)
+        if mode is None:
+            if i < len(candidates) - 1:
+                continue  # cooling down; the chain floor always gets a shot
+            mode = "probe"  # open floor: one attempt, nothing to fall to
+        # half-open probes get exactly one attempt; closed links retry-once
+        tries = 1 if mode == "probe" else RETRIES + 1
+        for _ in range(tries):
             try:
                 faultinject.fire(f"{site}.{b}")
                 out = attempt(b)

@@ -25,6 +25,37 @@ raise.  :class:`FaultSchedule` derives a seeded (round, point) schedule for
 randomized sweeps.  ``fire()`` on an un-armed point is a dict lookup — the
 production hot path pays nothing.
 
+**Point-name registry.**  Every ``fire()`` site in the tree, by layer
+(default exception class in brackets; ``durable.*``/``checkpoint.*``
+default to :class:`SimulatedCrash`, everything else to
+:class:`InjectedKernelError`; ``arm(..., exc=...)`` overrides):
+
+=========================  ==================================================
+point                      fires
+=========================  ==================================================
+``slot_update.pallas``     before each fused-apply attempt on that backend
+``slot_update.xla``        (kernels/fallback.run_chain, operands untouched)
+``slot_update.ref``
+``slot_walk.pallas``       before each walk-kernel attempt on that backend
+``slot_walk.xla``
+``slot_walk.ref``
+``durable.pre_append``     DurableGraph.apply, before the WAL append [crash]
+``durable.post_append``    after the WAL append, before the device apply
+``durable.post_apply``     after the device apply, before the ack
+``checkpoint.pre_rename``  between tmp-dir write and atomic rename [crash]
+``serve.enqueue``          WalkServer admission, inside the queue lock —
+                           the request must resolve as a clean rejection
+``serve.seal``             writer thread, before sealing a generation —
+                           readers must keep the previous sealed image
+``serve.dispatch``         dispatcher, before a batched walk — the batch
+                           must be retried or failed, never dropped
+=========================  ==================================================
+
+Tests arm points through :func:`arm`/:func:`injected`; the autouse
+``_faultinject_leak_guard`` fixture in ``tests/conftest.py`` fails any
+test that leaks an armed point past its own teardown (a leaked point
+would fire inside an unrelated test and misattribute the failure).
+
 :func:`audit` is the post-recovery invariant pass: CSR well-formedness,
 WalkImage block-geometry/content integrity (``WalkImage.audit``), and
 CSR↔image cross-consistency, for any of the five representations.
@@ -89,6 +120,11 @@ def fired(point: str) -> int:
     """How many times ``point`` has actually raised since it was armed."""
     st = _ARMED.get(point)
     return 0 if st is None else st["fired"]
+
+
+def armed() -> tuple:
+    """Names of all currently armed points (leak-guard introspection)."""
+    return tuple(sorted(_ARMED))
 
 
 def fire(point: str) -> None:

@@ -1,0 +1,623 @@
+"""Overload-safe multi-tenant walk serving front-end (DESIGN.md §16).
+
+The ROADMAP's production-traffic item: an async request queue in front of
+the walk engine, turning concurrent per-user walk requests into the
+single batched ``[B, V]`` dispatches PR 4/5 made fast, with a robustness
+contract stronger than the sum of its parts:
+
+* **Snapshot isolation** — one writer thread applies ``UpdatePlan``s to
+  the live representation and *seals* an immutable ``WalkImage``
+  generation after each group (``core.walk_image.seal_generation``,
+  riding the per-buffer COW of §10).  Readers always walk the last
+  sealed generation: a reader can never observe a half-applied plan,
+  because generations are frozen images and the writer's subsequent
+  patches copy-on-write instead of donating shared buffers.  Every
+  response carries its ``generation`` id, so consistency is *checkable*
+  (the bench and the hypothesis sweep verify bit-parity against a dense
+  oracle per generation — ``torn_reads == 0``).
+
+* **Admission control + backpressure** — both queues are bounded.  A
+  walk submitted past ``max_queue`` depth is rejected immediately with a
+  ``Retry-After``-style hint (``RejectedError.retry_after``, estimated
+  from the EMA per-request service time); a request whose deadline
+  expired while it waited is shed before dispatch (load shedding: the
+  batch never pays for work nobody is waiting for).
+
+* **Graceful degradation** — walk dispatches run through the
+  ``kernels/fallback`` breaker chain (pallas → xla → ref), so a tripped
+  backend degrades throughput instead of failing requests; serve-level
+  transient failures get bounded retry with backoff
+  (``dispatch_retries``), and only an exhausted chain fails a ticket —
+  visibly, never silently.
+
+* **Fault-injected audits** — ``faultinject`` points at the three
+  boundary transitions (``serve.enqueue``, ``serve.seal``,
+  ``serve.dispatch``) prove the zero-lost contract: every submitted
+  ticket resolves as served / rejected / failed (``assert_no_lost``),
+  and a failed seal keeps readers on the previous consistent generation
+  while the writer retries.
+
+The server is representation-agnostic: anything exposing
+``apply(plan) -> (rep, dm)`` and ``to_walk_image()`` (all five
+single-device representations) serves.  Sharding the walk batch
+dimension B across a device mesh is the remaining ROADMAP item.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..core import alloc, updates, walk_image
+from ..kernels import fallback as _fb
+from . import faultinject
+
+#: Ticket terminal states.  "pending" is the only non-terminal one.
+SERVED, REJECTED, FAILED, PENDING = "served", "rejected", "failed", "pending"
+
+
+class RejectedError(RuntimeError):
+    """A request the server declined cleanly (never started).
+
+    ``reason`` is one of the admission reasons ("backpressure",
+    "expired", "shutdown", "enqueue_fault", "seed_out_of_range",
+    "shape_mismatch"); ``retry_after`` (seconds, backpressure only) is
+    the Retry-After hint — the estimated time for the queue to drain
+    below the watermark.
+    """
+
+    def __init__(self, reason: str, retry_after: Optional[float] = None):
+        msg = f"request rejected: {reason}"
+        if retry_after is not None:
+            msg += f" (retry after {retry_after * 1e3:.1f}ms)"
+        super().__init__(msg)
+        self.reason = reason
+        self.retry_after = retry_after
+
+
+@dataclasses.dataclass
+class Generation:
+    """One sealed, immutable walk image plus its bookkeeping."""
+
+    gen_id: int
+    image: walk_image.WalkImage
+    #: updates applied to the live rep when this generation sealed
+    seq: int
+    sealed_at: float
+
+
+class _Ticket:
+    """Base request handle: threading.Event + terminal outcome."""
+
+    __slots__ = (
+        "status", "reason", "retry_after", "error", "generation",
+        "submitted_at", "_done",
+    )
+
+    def __init__(self):
+        self.status = PENDING
+        self.reason: Optional[str] = None
+        self.retry_after: Optional[float] = None
+        self.error: Optional[BaseException] = None
+        self.generation: Optional[int] = None
+        self.submitted_at = time.monotonic()
+        self._done = threading.Event()
+
+    # -- resolution (server side) ---------------------------------------
+    def _resolve(self, status: str) -> None:
+        self.status = status
+        self._done.set()
+
+    def _reject(self, reason: str, retry_after: Optional[float] = None):
+        self.reason = reason
+        self.retry_after = retry_after
+        self._resolve(REJECTED)
+        return self
+
+    def _fail(self, err: BaseException):
+        self.error = err
+        self._resolve(FAILED)
+        return self
+
+    # -- caller side -----------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._done.wait(timeout)
+
+    def _raise_terminal(self):
+        if self.status == REJECTED:
+            raise RejectedError(self.reason or "rejected", self.retry_after)
+        if self.status == FAILED:
+            raise RuntimeError("request failed") from self.error
+
+
+class WalkTicket(_Ticket):
+    """Handle for one walk request; ``result()`` blocks for the visits."""
+
+    __slots__ = ("seeds", "weights", "visits_row", "steps", "deadline",
+                 "attempts", "visits", "latency_s")
+
+    def __init__(self, seeds, weights, visits_row, steps, deadline):
+        super().__init__()
+        self.seeds = seeds
+        self.weights = weights
+        self.visits_row = visits_row
+        self.steps = int(steps)
+        self.deadline = deadline
+        self.attempts = 0
+        self.visits: Optional[np.ndarray] = None
+        self.latency_s: Optional[float] = None
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self.wait(timeout):
+            raise TimeoutError("walk ticket still pending")
+        self._raise_terminal()
+        return self.visits
+
+
+class UpdateTicket(_Ticket):
+    """Handle for one update; acked only once a sealed generation holds it."""
+
+    __slots__ = ("plan", "dm")
+
+    def __init__(self, plan):
+        super().__init__()
+        self.plan = plan
+        self.dm: Optional[int] = None
+
+    def result(self, timeout: Optional[float] = None) -> int:
+        """Blocks until the update is visible to readers; returns ΔM."""
+        if not self.wait(timeout):
+            raise TimeoutError("update ticket still pending")
+        self._raise_terminal()
+        return self.dm
+
+
+def _fresh_stats() -> dict:
+    return {
+        # walk-side accounting (the zero-lost ledger)
+        "submitted": 0, "served": 0, "shed_expired": 0,
+        "rejected_backpressure": 0, "rejected_other": 0, "failed": 0,
+        # update side
+        "updates_submitted": 0, "updates_applied": 0, "updates_failed": 0,
+        "updates_rejected": 0,
+        # engine health
+        "seals": 0, "seal_failures": 0, "batches": 0, "max_batch": 0,
+        "dispatch_retries": 0, "breaker_fallbacks": 0,
+    }
+
+
+class WalkServer:
+    """Batched, snapshot-isolated, overload-safe walk service (§16).
+
+    One writer thread owns the live representation; one dispatcher
+    thread drains the walk queue into coalesced ``[B, V]`` batched
+    dispatches against the last sealed generation.  All tuning knobs
+    are constructor arguments so tests can drive every regime:
+
+    ``max_queue``        walk admission bound (backpressure watermark)
+    ``batch_max``        max requests coalesced into one dispatch
+    ``default_timeout``  per-request deadline when the caller gives none
+                         (None = no deadline)
+    ``dispatch_retries`` serve-level retries of a failed batch dispatch
+    ``retry_backoff``    seconds slept before a retried dispatch
+    ``update_queue_max`` update admission bound
+    ``seal_group_max``   updates coalesced under one seal
+    ``walk_backend``     slot_walk backend request ("auto" → device)
+    """
+
+    def __init__(
+        self,
+        rep,
+        *,
+        max_queue: int = 256,
+        batch_max: int = 32,
+        default_timeout: Optional[float] = None,
+        dispatch_retries: int = 2,
+        retry_backoff: float = 0.002,
+        update_queue_max: int = 64,
+        seal_group_max: int = 8,
+        walk_backend: str = "auto",
+    ):
+        self._rep = rep
+        self.max_queue = int(max_queue)
+        self.batch_max = int(batch_max)
+        self.default_timeout = default_timeout
+        self.dispatch_retries = int(dispatch_retries)
+        self.retry_backoff = float(retry_backoff)
+        self.update_queue_max = int(update_queue_max)
+        self.seal_group_max = int(seal_group_max)
+        self.walk_backend = walk_backend
+
+        self._lock = threading.Lock()
+        self._walk_cv = threading.Condition(self._lock)
+        self._upd_cv = threading.Condition(self._lock)
+        self._walk_q: collections.deque = collections.deque()
+        self._upd_q: collections.deque = collections.deque()
+        self._stats = _fresh_stats()
+        self._ema_service_s = 1e-3  # per-request EMA, seeded optimistically
+        self._generation: Optional[Generation] = None
+        self._gen_counter = 0
+        self._seq = 0  # updates applied to the live rep
+        self._seal_pending: list = []  # applied updates awaiting a seal ack
+        self._closed = False
+        self._threads: list[threading.Thread] = []
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def start(self) -> "WalkServer":
+        """Seal generation 0 and start the writer + dispatcher threads."""
+        if self._threads:
+            raise RuntimeError("server already started")
+        self._seal_locked(initial=True)
+        self._closed = False
+        for name, fn in (("serve-writer", self._writer_loop),
+                         ("serve-dispatch", self._dispatch_loop)):
+            t = threading.Thread(target=fn, name=name, daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float = 30.0) -> dict:
+        """Stop accepting requests; drain (or reject) the queues; join.
+
+        With ``drain=True`` both threads finish everything already
+        admitted before exiting — in-flight requests are never dropped.
+        Returns the final stats dict.
+        """
+        with self._lock:
+            self._closed = True
+            if not drain:
+                while self._walk_q:
+                    self._resolve_reject(
+                        self._walk_q.popleft(), "shutdown", walk=True
+                    )
+                while self._upd_q:
+                    self._resolve_reject(
+                        self._upd_q.popleft(), "shutdown", walk=False
+                    )
+            self._walk_cv.notify_all()
+            self._upd_cv.notify_all()
+        for t in self._threads:
+            t.join(timeout)
+        self._threads.clear()
+        return self.stats()
+
+    def __enter__(self) -> "WalkServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            out = dict(self._stats)
+            out["queue_depth"] = len(self._walk_q)
+            out["update_depth"] = len(self._upd_q)
+            out["generation"] = (
+                self._generation.gen_id if self._generation else -1
+            )
+            out["ema_service_ms"] = self._ema_service_s * 1e3
+        return out
+
+    @property
+    def generation(self) -> Optional[Generation]:
+        return self._generation
+
+    def assert_no_lost(self) -> dict:
+        """The zero-lost ledger: submitted == served+shed+rejected+failed.
+
+        Call after ``stop()``; raises AssertionError when any admitted
+        request neither resolved nor remains queued (i.e. was silently
+        lost).  Returns the stats dict for convenience.
+        """
+        s = self.stats()
+        resolved = (
+            s["served"] + s["shed_expired"] + s["rejected_backpressure"]
+            + s["rejected_other"] + s["failed"]
+        )
+        assert resolved == s["submitted"] and s["queue_depth"] == 0, (
+            f"lost walk requests: submitted={s['submitted']} "
+            f"resolved={resolved} queued={s['queue_depth']}"
+        )
+        u_resolved = (
+            s["updates_applied"] + s["updates_failed"] + s["updates_rejected"]
+        )
+        assert u_resolved == s["updates_submitted"] and s["update_depth"] == 0, (
+            f"lost updates: submitted={s['updates_submitted']} "
+            f"resolved={u_resolved} queued={s['update_depth']}"
+        )
+        return s
+
+    # ------------------------------------------------------------------
+    # admission (caller threads)
+    # ------------------------------------------------------------------
+    def _resolve_reject(self, ticket, reason, *, walk: bool,
+                        retry_after=None):
+        """Reject + account under self._lock (callers hold it)."""
+        key = (
+            "rejected_backpressure" if reason == "backpressure"
+            else "shed_expired" if reason == "expired"
+            else "rejected_other"
+        )
+        if walk:
+            self._stats[key] += 1
+        else:
+            self._stats["updates_rejected"] += 1
+        return ticket._reject(reason, retry_after)
+
+    def submit_walk(
+        self,
+        seeds=None,
+        *,
+        weights=None,
+        visits0=None,
+        steps: int = 4,
+        timeout: Optional[float] = None,
+    ) -> WalkTicket:
+        """Admit one walk request; returns a ticket (maybe pre-rejected).
+
+        ``seeds`` (vertex ids, optionally with per-seed ``weights``) or a
+        full ``visits0`` row [nv] define the initial visit vector; the
+        dispatcher materializes it against the serving generation's
+        vertex count.  ``timeout`` seconds (default: the server's
+        ``default_timeout``) bound end-to-end latency — an expired
+        request is shed, never walked.  Rejections resolve the ticket
+        immediately with ``reason`` and, for backpressure, a
+        ``retry_after`` hint; they are never raised here (``result()``
+        raises :class:`RejectedError` for the caller that wants one).
+        """
+        timeout = self.default_timeout if timeout is None else timeout
+        now = time.monotonic()
+        deadline = None if timeout is None else now + float(timeout)
+        t = WalkTicket(seeds, weights, visits0, steps, deadline)
+        with self._lock:
+            self._stats["submitted"] += 1
+            try:
+                faultinject.fire("serve.enqueue")
+            except Exception as e:  # injected enqueue fault: clean reject
+                t.error = e
+                return self._resolve_reject(t, "enqueue_fault", walk=True)
+            if self._closed:
+                return self._resolve_reject(t, "shutdown", walk=True)
+            depth = len(self._walk_q)
+            if depth >= self.max_queue:
+                retry_after = (depth - self.max_queue + 1) * self._ema_service_s
+                return self._resolve_reject(
+                    t, "backpressure", walk=True, retry_after=retry_after
+                )
+            if deadline is not None and deadline <= now:
+                return self._resolve_reject(t, "expired", walk=True)
+            self._walk_q.append(t)
+            self._walk_cv.notify()
+        return t
+
+    def submit_update(
+        self,
+        plan: Optional[updates.UpdatePlan] = None,
+        *,
+        inserts=None,
+        deletes=None,
+    ) -> UpdateTicket:
+        """Admit one update; the ticket acks when a sealed generation
+        contains it (readers can see it) — never earlier."""
+        if plan is None:
+            plan = updates.plan_update(inserts=inserts, deletes=deletes)
+        t = UpdateTicket(plan)
+        with self._lock:
+            self._stats["updates_submitted"] += 1
+            try:
+                faultinject.fire("serve.enqueue")
+            except Exception as e:
+                t.error = e
+                return self._resolve_reject(t, "enqueue_fault", walk=False)
+            if self._closed:
+                return self._resolve_reject(t, "shutdown", walk=False)
+            if len(self._upd_q) >= self.update_queue_max:
+                retry_after = len(self._upd_q) * self._ema_service_s
+                return self._resolve_reject(
+                    t, "backpressure", walk=False, retry_after=retry_after
+                )
+            self._upd_q.append(t)
+            self._upd_cv.notify()
+        return t
+
+    # ------------------------------------------------------------------
+    # writer thread: apply → seal → ack
+    # ------------------------------------------------------------------
+    def _seal_locked(self, *, initial: bool = False) -> bool:
+        """Seal a new generation and ack the updates it contains.
+
+        On failure (an injected seal fault, an exhausted fallback chain
+        inside the image flush) readers keep the previous generation —
+        still consistent — the applied-but-unsealed updates stay queued
+        for ack, and the writer retries on its next tick.
+        """
+        gen_id = self._gen_counter + (0 if initial else 1)
+        try:
+            faultinject.fire("serve.seal")
+            img = walk_image.seal_generation(self._rep, gen_id)
+        except Exception:
+            self._stats["seal_failures"] += 1
+            return False
+        self._gen_counter = gen_id
+        self._generation = Generation(
+            gen_id=gen_id, image=img, seq=self._seq, sealed_at=time.monotonic()
+        )
+        self._stats["seals"] += 1
+        for t in self._seal_pending:
+            t.generation = gen_id
+            t._resolve(SERVED)
+        self._seal_pending.clear()
+        return True
+
+    def _writer_loop(self) -> None:
+        while True:
+            with self._lock:
+                while not self._upd_q and not self._closed and not self._seal_pending:
+                    self._upd_cv.wait(0.05)
+                if self._closed and not self._upd_q and not self._seal_pending:
+                    return
+                group = [
+                    self._upd_q.popleft()
+                    for _ in range(min(len(self._upd_q), self.seal_group_max))
+                ]
+            for t in group:
+                try:
+                    self._rep, dm = self._rep.apply(t.plan)
+                    t.dm = int(dm)
+                    self._seq += 1
+                    with self._lock:
+                        self._stats["updates_applied"] += 1
+                        self._seal_pending.append(t)
+                except Exception as e:
+                    # the plan did not take effect (validation, or an
+                    # exhausted fallback chain before any state landed);
+                    # the ticket fails VISIBLY and the stream continues.
+                    with self._lock:
+                        self._stats["updates_failed"] += 1
+                    t._fail(e)
+            if group or self._seal_pending:
+                with self._lock:
+                    if not self._seal_locked():
+                        # failed seal: retry after a short pause so an
+                        # injected multi-shot fault can't spin the CPU
+                        pass
+                if self._seal_pending:
+                    time.sleep(self.retry_backoff)
+
+    # ------------------------------------------------------------------
+    # dispatcher thread: coalesce → shed → walk → fulfil
+    # ------------------------------------------------------------------
+    def _take_batch(self) -> Optional[list]:
+        """Pop up to batch_max same-steps requests (head-of-line steps)."""
+        with self._lock:
+            while not self._walk_q:
+                if self._closed:
+                    return None
+                self._walk_cv.wait(0.05)
+            head = self._walk_q.popleft()
+            batch = [head]
+            kept = collections.deque()
+            while self._walk_q and len(batch) < self.batch_max:
+                t = self._walk_q.popleft()
+                if t.steps == head.steps:
+                    batch.append(t)
+                else:
+                    kept.append(t)
+            kept.extend(self._walk_q)
+            self._walk_q = kept
+        return batch
+
+    def _visits_row(self, t: WalkTicket, nv: int) -> Optional[np.ndarray]:
+        """Materialize the request's initial visit vector, or reject."""
+        if t.visits_row is not None:
+            row = np.asarray(t.visits_row, np.float32).reshape(-1)
+            if row.shape[0] != nv:
+                with self._lock:
+                    self._resolve_reject(t, "shape_mismatch", walk=True)
+                return None
+            return row
+        seeds = np.atleast_1d(np.asarray(t.seeds, np.int64))
+        if seeds.size == 0 or seeds.min() < 0 or seeds.max() >= nv:
+            with self._lock:
+                self._resolve_reject(t, "seed_out_of_range", walk=True)
+            return None
+        row = np.zeros(nv, np.float32)
+        w = (
+            np.ones(seeds.shape[0], np.float32)
+            if t.weights is None
+            else np.asarray(t.weights, np.float32).reshape(-1)
+        )
+        np.add.at(row, seeds, w)
+        return row
+
+    def _dispatch_loop(self) -> None:
+        primary = self.walk_backend
+        if primary == "auto":
+            primary = "pallas" if jax.default_backend() == "tpu" else "xla"
+        while True:
+            batch = self._take_batch()
+            if batch is None:
+                return
+            now = time.monotonic()
+            live: list[WalkTicket] = []
+            for t in batch:
+                if t.deadline is not None and t.deadline <= now:
+                    with self._lock:
+                        self._resolve_reject(t, "expired", walk=True)
+                else:
+                    live.append(t)
+            if not live:
+                continue
+            gen = self._generation
+            nv = int(gen.image.nv)
+            rows, tickets = [], []
+            for t in live:
+                row = self._visits_row(t, nv)
+                if row is not None:
+                    rows.append(row)
+                    tickets.append(t)
+            if not tickets:
+                continue
+            b = len(tickets)
+            b_pad = max(alloc.next_pow2(b), 4)  # warm [B, V] jit shapes
+            v0 = np.zeros((b_pad, nv), np.float32)
+            v0[:b] = np.stack(rows)
+            t0 = time.monotonic()
+            try:
+                faultinject.fire("serve.dispatch")
+                out = np.asarray(
+                    gen.image.walk(
+                        int(tickets[0].steps),
+                        backend=self.walk_backend,
+                        visits0=v0,
+                    )
+                )
+            except Exception as e:
+                self._retry_or_fail(tickets, e)
+                continue
+            dt = time.monotonic() - t0
+            used = _fb.LAST_USED.get("slot_walk")
+            with self._lock:
+                if used is not None and used != primary:
+                    self._stats["breaker_fallbacks"] += 1
+                self._stats["batches"] += 1
+                self._stats["max_batch"] = max(self._stats["max_batch"], b)
+                self._stats["served"] += b
+                self._ema_service_s += 0.2 * (dt / b - self._ema_service_s)
+            done = time.monotonic()
+            for i, t in enumerate(tickets):
+                t.visits = out[i]
+                t.generation = gen.gen_id
+                t.latency_s = done - t.submitted_at
+                t._resolve(SERVED)
+
+    def _retry_or_fail(self, tickets: list, err: Exception) -> None:
+        """Bounded retry with backoff; exhausted tickets fail visibly."""
+        retry, dead = [], []
+        for t in tickets:
+            t.attempts += 1
+            (retry if t.attempts <= self.dispatch_retries else dead).append(t)
+        with self._lock:
+            if retry:
+                self._stats["dispatch_retries"] += 1
+                self._walk_q.extendleft(reversed(retry))
+                self._walk_cv.notify()
+            for t in dead:
+                self._stats["failed"] += 1
+                t._fail(err)
+        if retry:
+            time.sleep(self.retry_backoff)

@@ -1,6 +1,41 @@
 import os
 import sys
 
+import pytest
+
 # tests run on the single real CPU device (dry-run is the only place that
 # forces 512 placeholder devices — see launch/dryrun.py)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.runtime import faultinject  # noqa: E402
+
+#: suite-level deadline (seconds) applied when pytest-timeout is installed;
+#: generous — the slowest legitimate tests (sharded sweeps) run ~60s cold.
+DEFAULT_TIMEOUT = 300
+
+
+def pytest_collection_modifyitems(config, items):
+    # Apply a suite-level timeout default only when the pytest-timeout
+    # plugin is actually present (it is a [dev] extra, not a hard dep):
+    # fault-injection and serve-queue tests then can never hang tier-1.
+    if not config.pluginmanager.hasplugin("timeout"):
+        return
+    for item in items:
+        if item.get_closest_marker("timeout") is None:
+            item.add_marker(pytest.mark.timeout(DEFAULT_TIMEOUT))
+
+
+@pytest.fixture(autouse=True)
+def _faultinject_leak_guard():
+    """Fail any test that leaks armed faultinject points.
+
+    A point armed by a test that failed (or returned) before its
+    ``disarm()`` would otherwise fire inside an unrelated later test and
+    misattribute the failure.  Leftovers are cleared *and* reported.
+    """
+    faultinject.disarm()
+    yield
+    leaked = faultinject.armed()
+    if leaked:
+        faultinject.disarm()
+        pytest.fail(f"test leaked armed faultinject points: {leaked}")
