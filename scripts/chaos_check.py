@@ -1,0 +1,297 @@
+"""Live shard-failover chaos gate (smoke, DESIGN.md §17).
+
+Run with ``XLA_FLAGS="--xla_force_host_platform_device_count=4"``.
+Kills one shard of a served 4-shard mesh mid-traffic — twice, once per
+failure mode — and gates the full failover story end to end:
+
+1. **crash-stop** — ``shard.walk`` armed to fault exactly one shard
+   during a batched dispatch; the dispatcher attributes the fault
+   (``ShardFaultError.sid``), queues the quarantine, and retries the
+   batch, so surviving shards keep serving with an explicit
+   ``coverage < 1`` mask while routed updates spool;
+2. **silent corruption** — ``failover.corrupt_shard`` flips a live
+   weight in place (no exception anywhere); the writer's paced
+   ``AuditScheduler`` catches the CRC violation within one sweep and
+   quarantines BEFORE the damage can reach a sealed generation;
+3. after each: **online rebuild** (``DurableGraph.rebuild_shard`` —
+   diff-chain restore of the lost shard only + WAL-window and spool
+   replay through its fused patch path) reintegrates on the writer
+   thread and readers flip back to full coverage on the next seal.
+
+Gates: zero lost tickets, zero torn reads (degraded responses verify
+against the SAME per-generation oracle with their ``down_shards`` rows
+masked), served > 0 during both outages, and post-reintegration
+bit-parity (gathered CSR + exact walk) against an uncrashed twin.
+Emits a ``shard_failover`` row (detect/rebuild latency, degraded
+rounds) into BENCH_recovery.json.  Exits non-zero on any violation.
+"""
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.core import csr as csr_mod, edgebatch, updates  # noqa: E402
+from repro.core import distributed as dist  # noqa: E402
+from repro.launch import mesh as mesh_mod  # noqa: E402
+from repro.launch import serve as serve_launch  # noqa: E402
+from repro.runtime import durable, faultinject, failover  # noqa: E402
+from repro.runtime import serve as serve_mod  # noqa: E402
+
+S = 4
+N_V = 96
+STEPS = 3
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def fail(msg: str) -> int:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    return 1
+
+
+def make_plan(rng, k=10):
+    ib = edgebatch.from_arrays(
+        rng.integers(0, N_V, k), rng.integers(0, N_V, k),
+        rng.random(k).astype(np.float32),
+    )
+    db = edgebatch.from_arrays(rng.integers(0, N_V, 3), rng.integers(0, N_V, 3))
+    return updates.plan_update(inserts=ib, deletes=db)
+
+
+class Traffic:
+    """Submission helper pooling every ticket for the final ledger/oracle."""
+
+    def __init__(self, srv, rng):
+        self.srv = srv
+        self.rng = rng
+        self.walks: list = []
+        self.upds: list = []
+
+    def walk_round(self, k=4):
+        ts = [
+            self.srv.submit_walk(
+                self.rng.integers(0, N_V, 3), steps=STEPS, timeout=30.0
+            )
+            for _ in range(k)
+        ]
+        self.walks.extend(ts)
+        for t in ts:
+            t.wait(30.0)
+        return ts
+
+    def update(self, plan):
+        t = self.srv.submit_update(plan)
+        self.upds.append((t, plan))
+        t.wait(30.0)
+        return t
+
+
+def down_rows_for(t):
+    if not t.down_shards:
+        return None
+    rm = (N_V + S - 1) // S  # rows_max of a 4-way block partition
+    return np.concatenate([
+        np.arange(s * rm, min((s + 1) * rm, N_V)) for s in t.down_shards
+    ])
+
+
+def await_stat(srv, key, minimum, timeout=20.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if srv.stats()[key] >= minimum:
+            return time.monotonic() - t0
+        time.sleep(0.01)
+    return None
+
+
+def await_coverage(srv, want=1.0, timeout=20.0):
+    """Admin reseals land on the writer's next tick — wait for the flip."""
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if srv.stats()["coverage"] == want:
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def bench_row(row: dict) -> None:
+    path = os.path.join(ROOT, "BENCH_recovery.json")
+    data = {"recovery": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    rows = data.setdefault("recovery", [])
+    rows[:] = [r for r in rows if r.get("name") != row["name"]]
+    rows.append(row)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def main() -> int:
+    if len(jax.devices()) < S:
+        print(f"chaos_check: need {S} devices, have {len(jax.devices())} "
+              f"— set XLA_FLAGS", file=sys.stderr)
+        return 2
+    mesh = mesh_mod.host_mesh(S)
+    rng = np.random.default_rng(23)
+    c = csr_mod.from_coo(
+        rng.integers(0, N_V, 420), rng.integers(0, N_V, 420),
+        rng.random(420).astype(np.float32), n=N_V,
+    )
+    base = tempfile.mkdtemp(prefix="chaos_check_")
+    wd, cd = os.path.join(base, "wal"), os.path.join(base, "ckpt")
+    dg = durable.DurableGraph(
+        dist.shard_csr(c, S, mesh=mesh), wd, cd, diff=True, full_every=8
+    )
+    dg.rep.enable_integrity()
+    twin = dist.shard_csr(c, S, mesh=mesh)
+    oracle = serve_launch.GenerationOracle(c)
+
+    srv = serve_mod.WalkServer(
+        dg, batch_max=8, dispatch_retries=4, retry_backoff=0.005,
+        audit_every=1, seal_group_max=4,
+    ).start()
+    tr = Traffic(srv, rng)
+    try:
+        # -- warmup: steady mixed traffic, then a bounding checkpoint ----
+        for _ in range(3):
+            tr.update(make_plan(rng))
+            tr.walk_round()
+        srv.run_on_writer(lambda s: dg.checkpoint()).result(30.0)
+
+        # ===== scenario 1: crash-stop of one shard mid-dispatch =========
+        sid1 = 2
+        faultinject.arm("shard.walk", after=sid1, times=1)
+        t0 = time.monotonic()
+        tr.walk_round()
+        dt = await_stat(srv, "shard_quarantines", 1)
+        faultinject.disarm("shard.walk")
+        if dt is None:
+            return fail("crash-stop quarantine never detected")
+        detect1_ms = (time.monotonic() - t0) * 1e3
+        if sid1 not in dg.rep.down:
+            return fail(f"expected shard {sid1} down, got {dg.rep.down}")
+
+        # degraded window: surviving shards serve, routed updates spool
+        degraded = served_outage = 0
+        for _ in range(4):
+            tr.update(make_plan(rng))
+            for t in tr.walk_round():
+                if t.status == serve_mod.SERVED:
+                    served_outage += 1
+                    if (t.coverage or 1.0) < 1.0:
+                        degraded += 1
+        if served_outage == 0:
+            return fail("no requests served during the outage")
+        if degraded == 0:
+            return fail("no degraded (coverage < 1) responses during outage")
+        if not dg.rep.spooled(sid1):
+            return fail("no updates spooled for the down shard")
+
+        # online rebuild + reintegration on the writer thread
+        t0 = time.monotonic()
+        srv.run_on_writer(lambda s: dg.rebuild_shard(sid1),
+                          reseal=True).result(60.0)
+        rebuild1_ms = (time.monotonic() - t0) * 1e3
+        if dg.rep.down:
+            return fail(f"shards still down after rebuild: {dg.rep.down}")
+        if not await_coverage(srv):
+            return fail("serving generation never returned to full coverage")
+        healed = [t for t in tr.walk_round()
+                  if t.status == serve_mod.SERVED and t.coverage == 1.0]
+        if not healed:
+            return fail("no full-coverage responses after reintegration")
+
+        # ===== scenario 2: silent corruption, audit-paced detection =====
+        srv.run_on_writer(lambda s: dg.checkpoint()).result(30.0)
+        sid2 = 1
+        det0 = srv.stats()["audit_detections"]
+        t0 = time.monotonic()
+        srv.run_on_writer(
+            lambda s: failover.corrupt_shard(dg.rep, sid2, kind="wgt")
+        ).result(30.0)
+        # walk-only traffic while the audit sweep closes in — every
+        # response serves a generation sealed before the damage
+        while srv.stats()["audit_detections"] == det0:
+            tr.walk_round(k=2)
+            if time.monotonic() - t0 > 20.0:
+                return fail("silent corruption never detected by audits")
+        detect2_ms = (time.monotonic() - t0) * 1e3
+        if sid2 not in dg.rep.down:
+            return fail(f"expected shard {sid2} down, got {dg.rep.down}")
+        t0 = time.monotonic()
+        srv.run_on_writer(lambda s: dg.rebuild_shard(sid2),
+                          reseal=True).result(60.0)
+        rebuild2_ms = (time.monotonic() - t0) * 1e3
+        if not await_coverage(srv):
+            return fail("coverage never recovered after corruption rebuild")
+
+        # healed steady state
+        for _ in range(2):
+            tr.update(make_plan(rng))
+            tr.walk_round()
+    finally:
+        faultinject.disarm()
+        stats = srv.stop()
+    srv.assert_no_lost()
+
+    # -- twin replay + bit-parity ---------------------------------------
+    for t, plan in tr.upds:
+        if t.status == serve_mod.SERVED:
+            twin.apply(plan)
+    dg.rep.audit()
+    ca, cb = dist.gather_csr(dg.rep), dist.gather_csr(twin)
+    checks = (
+        (np.asarray(ca.offsets), np.asarray(cb.offsets)),
+        (np.asarray(ca.dst)[: ca.m], np.asarray(cb.dst)[: cb.m]),
+        (np.asarray(ca.wgt)[: ca.m], np.asarray(cb.wgt)[: cb.m]),
+        (np.asarray(dg.rep.reverse_walk(STEPS)),
+         np.asarray(twin.reverse_walk(STEPS))),
+    )
+    for i, (a, b) in enumerate(checks):
+        if a.shape != b.shape or not np.array_equal(a, b):
+            return fail(f"bit-parity check {i} diverged vs uncrashed twin")
+
+    # -- torn-read sweep (degraded responses masked, same oracle) -------
+    torn, checked = serve_launch.count_torn_reads(
+        oracle, tr.walks, tr.upds, sample=1.0, down_rows_of=down_rows_for
+    )
+    if torn:
+        return fail(f"torn_reads={torn}/{checked}")
+    if stats["served_degraded"] == 0:
+        return fail("server never accounted a degraded response")
+    if stats["audit_detections"] < 1 or stats["shard_quarantines"] < 2:
+        return fail(f"failover counters off: {stats}")
+
+    bench_row({
+        "name": "recovery/chaos/shard_failover",
+        "ms_per_call": round(rebuild1_ms, 2),
+        "derived": (
+            f"S={S} detect_crash_ms={detect1_ms:.1f} "
+            f"detect_audit_ms={detect2_ms:.1f} "
+            f"rebuild_ms={rebuild1_ms:.1f}/{rebuild2_ms:.1f} "
+            f"degraded_rounds={degraded} served_during_outage={served_outage} "
+            f"torn_reads={torn}/{checked} lost=0"
+        ),
+        "detect_ms": round(detect1_ms, 2),
+        "rebuild_ms": round(rebuild1_ms, 2),
+        "degraded_rounds": int(degraded),
+    })
+    print(
+        f"# chaos check ok: S={S}, crash-stop detect {detect1_ms:.0f}ms / "
+        f"rebuild {rebuild1_ms:.0f}ms, corruption detect {detect2_ms:.0f}ms "
+        f"/ rebuild {rebuild2_ms:.0f}ms, {served_outage} served during "
+        f"outage ({degraded} degraded), torn_reads=0/{checked}, "
+        f"zero lost, bit-parity exact"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -170,6 +170,17 @@ echo "== forced-4-device sharded crash/recover roundtrip (§15) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
   python scripts/sharded_recovery_check.py
 
+echo "== live shard failover chaos gate (§17) =="
+# kills one shard of a served 4-shard mesh mid-traffic, twice (injected
+# crash-stop + silent corruption caught by the paced audit): surviving
+# shards must keep serving with explicit coverage < 1, zero tickets
+# lost, zero torn reads (degraded responses verify masked against the
+# same oracle), and the online single-shard rebuild must reintegrate to
+# bit-parity with an uncrashed twin.  Emits the shard_failover row into
+# BENCH_recovery.json.
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  python scripts/chaos_check.py
+
 echo "== serve benchmark (multi-tenant walk serving, DESIGN.md §16) =="
 python -m benchmarks.run --only serve --json BENCH_serve.json
 

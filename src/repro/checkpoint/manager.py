@@ -360,12 +360,9 @@ def restore_arrays(
     d = _step_dir(ckpt_dir, step)
     manifest = _read_manifest(d)
     if manifest.get("kind", "full") == "diff":
-        shards, step = restore_arrays_diff(ckpt_dir, step=step)
-        if int(shard_id) not in shards:
-            raise FileNotFoundError(
-                f"checkpoint {d}: no shard {shard_id} in diff manifest "
-                f"(has {sorted(shards)})"
-            )
+        shards, step = restore_arrays_diff(
+            ckpt_dir, step=step, only_shard=int(shard_id)
+        )
         return shards[int(shard_id)], int(step)
     blk = _shard_manifest(manifest, int(shard_id), d)
     data = np.load(
@@ -416,16 +413,27 @@ def restore_arrays_sharded(
 
 
 def restore_arrays_diff(
-    ckpt_dir: str, *, step: Optional[int] = None
+    ckpt_dir: str, *, step: Optional[int] = None,
+    only_shard: Optional[int] = None,
 ) -> tuple[dict, int]:
     """Chain-walking restore: ``({shard_id: arrays}, step)`` for any step.
 
     Walks ``base_step`` links back to a full checkpoint, loads that base,
     then patches each diff step's persisted chunks forward in order.
-    Every patched chunk is verified against the manifest's CRC digest;
-    any gap in the chain (missing step, cycle, shape drift) fails loudly.
-    Works on full steps too (a chain of length one), so recovery can call
-    this unconditionally.
+    Every patched chunk is verified against the manifest's CRC digest,
+    and when the chain actually has diffs the BASE payload is verified
+    against its own manifest digests first — patching chunks into a
+    silently rotten base would otherwise launder the damage into a
+    "successful" restore.  Any failure (missing step, corrupt manifest,
+    CRC mismatch, cycle, shape drift) raises BEFORE any state escapes —
+    the caller never sees partially patched arrays.  Works on full steps
+    too (a chain of length one), so recovery can call this
+    unconditionally.
+
+    ``only_shard`` restricts the whole walk to one shard id — the §17
+    single-shard online rebuild path; other shards are neither loaded
+    nor verified.  A shard first materialized by a mid-chain diff (a
+    shard-count change) simply has no base to load.
     """
     if step is None:
         step = latest_step(ckpt_dir)
@@ -439,7 +447,13 @@ def restore_arrays_diff(
                 f"diff chain for step {step} broken: step {s} is missing "
                 f"from {ckpt_dir}"
             )
-        man = _read_manifest(d)
+        try:
+            man = _read_manifest(d)
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise ValueError(
+                f"diff chain for step {step}: step {s} manifest is corrupt "
+                f"({e}); restore aborted before patching"
+            ) from e
         chain.append((s, d, man))
         if man.get("kind", "full") != "diff":
             break
@@ -449,14 +463,52 @@ def restore_arrays_diff(
         seen.add(s)
         s = int(b)
     chain.reverse()
-    base_step = chain[0][0]
-    shards = {
-        sid: dict(arrs)
-        for sid, arrs in restore_arrays_sharded(ckpt_dir, step=base_step)[0].items()
-    }
+    base_step, base_dir, base_man = chain[0]
+    if only_shard is None:
+        shards = {
+            sid: dict(arrs)
+            for sid, arrs in restore_arrays_sharded(
+                ckpt_dir, step=base_step
+            )[0].items()
+        }
+    else:
+        try:
+            arrs, _ = restore_arrays(
+                ckpt_dir, step=base_step, shard_id=int(only_shard)
+            )
+            shards = {int(only_shard): dict(arrs)}
+        except FileNotFoundError:
+            if len(chain) == 1:
+                raise
+            # the shard first appears in a later diff of the chain
+            shards = {}
+    if len(chain) > 1:
+        # base-payload integrity gate: verify the loaded base bytes
+        # against the base manifest's own chunk digests before any diff
+        # chunk patches into them
+        for sid, arrs in shards.items():
+            blk = _shard_manifest(base_man, sid, base_dir)
+            digests = blk.get("chunks")
+            if digests is None:
+                continue  # pre-§15 base manifest: nothing to check against
+            for k, v in arrs.items():
+                want = digests.get(k)
+                if want is None:
+                    continue
+                got = _chunk_crcs(np.asarray(v).tobytes())
+                if got != want:
+                    bad = [i for i, (a, b2) in enumerate(zip(want, got))
+                           if a != b2][:4]
+                    raise ValueError(
+                        f"base step {base_step}: shard {sid} key {k} payload "
+                        f"is corrupt (chunks {bad} fail their CRC digests); "
+                        f"restore aborted before patching"
+                    )
     for s, d, man in chain[1:]:
         for sid_s, blk in man["shards"].items():
             sid = int(sid_s)
+            if only_shard is not None and sid != int(only_shard):
+                continue
             cur = shards.get(sid, {})
             npz_path = os.path.join(d, f"shard_{sid}.npz")
             data = (
@@ -518,8 +570,32 @@ def restore_arrays_diff(
                 out[k] = v
             shards[sid] = out
         # shard-count changes drop shards absent from the newest manifest
-        shards = {int(x): shards[int(x)] for x in man["shards"]}
+        shards = {
+            int(x): shards[int(x)]
+            for x in man["shards"]
+            if int(x) in shards
+        }
+    if only_shard is not None and int(only_shard) not in shards:
+        raise FileNotFoundError(
+            f"checkpoint step {step}: no shard {only_shard} in the diff "
+            f"chain (has {sorted(shards)})"
+        )
     return shards, int(step)
+
+
+def restore_shard_diff(
+    ckpt_dir: str, shard_id: int, *, step: Optional[int] = None
+) -> tuple[dict, int]:
+    """Restore ONE shard's arrays through its diff chain: ``(arrays, step)``.
+
+    The §17 online-rebuild entry point: loads and verifies only
+    ``shard_{shard_id}.npz`` files along the chain — the surviving
+    shards' (much larger) payloads are never read.
+    """
+    shards, s = restore_arrays_diff(
+        ckpt_dir, step=step, only_shard=int(shard_id)
+    )
+    return shards[int(shard_id)], s
 
 
 def clean_stale(ckpt_dir: str) -> list[str]:

@@ -30,10 +30,26 @@ more:
 Growth and overflow take the rebuild path every representation uses:
 gather, host-apply the unapplied plans, re-shard once — this is how a
 grown row (or a new vertex) relocates across a shard boundary.
+
+**Shard failover (DESIGN.md §17).**  A shard that faults mid-walk or
+mid-patch (``shard.walk`` / ``shard.patch`` injection points, or a real
+device error) is *quarantined* instead of taking the mesh down:
+``quarantine`` marks it in ``down``, drains its unapplied plans into a
+per-shard host spool, and every subsequent routed update for it spools
+too.  Walks keep running over the surviving shards — ``_assemble``
+masks a down shard's row intervals to ``lo == hi == 0``, so its rows
+contribute exact zeros and ``coverage`` tells readers how much of the
+vertex space the response covers.  ``reintegrate`` atomically swaps a
+rebuilt image back in (after the shard audit passes) and the next
+sealed generation flips readers back to full coverage.  Silent bit-rot
+is caught by the opt-in integrity tracker (``enable_integrity``):
+per-buffer chunk CRCs maintained transactionally with each fused patch
+and re-verified by ``verify_shard`` / ``audit_shard`` between rounds.
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional
 
 import jax
@@ -42,8 +58,60 @@ import numpy as np
 
 from . import alloc, csr as csr_mod, updates as upd_mod, util, walk_image
 from ..launch import mesh as mesh_mod
+from ..runtime import faultinject as _fi
 
 SENTINEL = util.SENTINEL
+
+#: Device buffers covered by the per-shard integrity descriptor (the
+#: host geometry hashes as one combined digest — see _shard_crc_table).
+_INTEGRITY_BUFS = ("dst", "wgt", "rows")
+
+
+class ShardFaultError(RuntimeError):
+    """One shard failed (device loss mid-walk/patch, audit violation).
+
+    Carries ``sid`` so the serving layer can quarantine exactly the
+    failed shard and keep the rest of the mesh live.
+    """
+
+    def __init__(self, sid: int, stage: str, detail: str = ""):
+        msg = f"shard {sid} fault during {stage}"
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+        self.sid = int(sid)
+        self.stage = stage
+
+
+class ShardIntegrityError(ShardFaultError):
+    """A shard's content no longer matches its maintained CRC descriptor
+    (silent corruption — bit rot, a misbehaving device)."""
+
+
+class ShardDownError(RuntimeError):
+    """The operation needs the full mesh but shards are quarantined
+    (vertex growth, global gather/rebuild, checkpointing)."""
+
+
+def _shard_crc_table(img) -> dict:
+    """Integrity descriptor of one shard: live-extent counts + per-buffer
+    chunk CRCs over the full device payload + one digest of the host
+    block geometry.  Chunking matches the checkpoint manifests
+    (``checkpoint.manager.CHUNK_BYTES``) so a mismatch names the damaged
+    chunk directly."""
+    from ..checkpoint.manager import _chunk_crcs
+
+    table = {
+        k: _chunk_crcs(np.asarray(getattr(img, k)).tobytes())
+        for k in _INTEGRITY_BUFS
+    }
+    geom = 0
+    for k in ("starts", "caps", "degs"):
+        geom = zlib.crc32(np.ascontiguousarray(getattr(img, k)).tobytes(), geom)
+    table["geom"] = geom
+    table["live"] = int(img.live)
+    table["bump"] = int(img.bump)
+    return table
 
 
 def _dense_policy(deg: np.ndarray, m: int) -> bool:
@@ -84,6 +152,19 @@ class ShardedGraph:
     #: tracker) distinguish in-place per-shard patches from a global
     #: re-shard that invalidates every shard's layout
     generation: int = dataclasses.field(default=0, compare=False)
+    #: quarantined shard ids (§17) — excluded from walks/patches, their
+    #: routed updates spool until ``reintegrate``
+    down: set = dataclasses.field(default_factory=set, compare=False)
+    #: per-down-shard FIFO of routed subplans awaiting reintegration
+    _spool: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+    #: opt-in integrity descriptors {sid: crc table}; None = disabled
+    _integrity: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    #: True on sealed generations (§16) — apply() refuses
+    _frozen: bool = dataclasses.field(default=False, compare=False)
     _placed: Optional[tuple] = dataclasses.field(
         default=None, repr=False, compare=False
     )
@@ -92,6 +173,30 @@ class ShardedGraph:
     @property
     def v_pad(self) -> int:
         return self.n_shards * self.rows_max
+
+    @property
+    def nv(self) -> int:
+        """Walkable vertex count (serve-layer protocol: visits are [B, nv])."""
+        return self.n
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of the vertex space served by healthy shards (§17)."""
+        if not self.down:
+            return 1.0
+        lost = sum(
+            hi - lo for lo, hi in (self.owned_range(s) for s in self.down)
+        )
+        return 1.0 - lost / max(self.n, 1)
+
+    def down_rows(self) -> np.ndarray:
+        """Vertex ids owned by quarantined shards (walk rows reading zero)."""
+        if not self.down:
+            return np.empty(0, np.int64)
+        return np.concatenate([
+            np.arange(*self.owned_range(s), dtype=np.int64)
+            for s in sorted(self.down)
+        ])
 
     @property
     def cap_e(self) -> int:
@@ -134,25 +239,74 @@ class ShardedGraph:
         slack is exhausted falls back to ONE gather + host-apply +
         re-shard — the relocation path that can move rows across shard
         boundaries.
+
+        Failover semantics (§17): a sub routed to a quarantined shard
+        spools (the plan is still *accepted* — the spool replays through
+        the shard's fused patch path on reintegration); a shard that
+        faults during its patch is quarantined mid-call and the
+        remaining shards still receive their slices, so healthy shards
+        never diverge from the WAL.  Callers detect new quarantines by
+        watching ``down`` — apply() itself stays non-raising for patch
+        faults.  Vertex growth (a global re-shard) while degraded raises
+        :class:`ShardDownError`.
         """
+        if self._frozen:
+            raise RuntimeError("sealed walk generation is read-only")
         plan.validate()
         if plan.n_ops == 0:
             return
         if plan.max_insert_vertex() >= self.n:
+            if self.down:
+                raise ShardDownError(
+                    f"vertex growth needs a global re-shard but shards "
+                    f"{sorted(self.down)} are quarantined — rebuild first"
+                )
             self._rebuild(extra=(plan,))
             return
-        failed = False
+        failed = []
         for sid, sub in route_updates(plan, self.n_shards, self.rows_max):
+            if sid in self.down:
+                self._spool.setdefault(sid, []).append(sub)
+                continue
             img = self.shards[sid]
-            img.queue(sub)
-            if not img.flush():
-                failed = True  # sub (or a compaction request) pends on img
+            try:
+                _fi.fire("shard.patch")
+                img.queue(sub)
+                ok = img.flush()
+            except Exception:
+                # device fault mid-patch: quarantine THIS shard, make
+                # sure its sub spools exactly once (flush leaves a
+                # failed sub queued; quarantine drains the queue), and
+                # keep patching the rest of the mesh.
+                self.quarantine(sid)
+                spool = self._spool[sid]
+                if not spool or spool[-1] is not sub:
+                    spool.append(sub)
+                continue
+            if not ok:
+                failed.append(sid)  # sub / compaction request pends on img
+                continue
+            if self._integrity is not None:
+                self._integrity[sid] = _shard_crc_table(img)
+            self._corrupt_tick(sid)
         self._placed = None
         if failed:
-            self._rebuild()
+            if self.down:
+                # a global re-shard is impossible while degraded: the
+                # overflowing shards join the quarantine (their pending
+                # plans drain into the spool) instead of wedging apply.
+                for sid in failed:
+                    self.quarantine(sid)
+            else:
+                self._rebuild()
 
     def _rebuild(self, extra=()) -> None:
         """Gather + host-apply unapplied plans + re-shard ONCE."""
+        if self.down:
+            raise ShardDownError(
+                f"global re-shard with shards {sorted(self.down)} "
+                f"quarantined — rebuild them first"
+            )
         src, dst, wgt = _gather_coo(self)
         plans = [p for img in self.shards for p in img._pending]
         plans.extend(extra)
@@ -169,6 +323,175 @@ class ShardedGraph:
         self.dense = g.dense
         self.generation += 1
         self._placed = None
+        if self._integrity is not None:
+            self.enable_integrity()
+
+    # ------------------------------------------------------------------
+    # failover: quarantine / integrity / reintegration (DESIGN.md §17)
+    # ------------------------------------------------------------------
+    def quarantine(self, sid: int) -> None:
+        """Mark one shard down and drain its unapplied plans to the spool.
+
+        Idempotent.  The shard's image stays in ``shards`` (walks mask
+        its row intervals to zero-length), its integrity entry drops
+        (the content is no longer trusted), and every later routed
+        update for it spools until :meth:`reintegrate`.
+        """
+        sid = int(sid)
+        if not (0 <= sid < self.n_shards):
+            raise ValueError(f"quarantine: no shard {sid}")
+        if sid in self.down:
+            return
+        self.down.add(sid)
+        img = self.shards[sid]
+        spool = self._spool.setdefault(sid, [])
+        spool.extend(img._pending)
+        img._pending.clear()
+        img._stale = False
+        if self._integrity is not None:
+            self._integrity.pop(sid, None)
+        self._placed = None
+
+    def reintegrate(self, sid: int, img) -> None:
+        """Atomically swap a rebuilt image in for a quarantined shard.
+
+        The shard audit must pass on the candidate BEFORE the swap
+        becomes durable: on audit failure the old (garbage) image is
+        restored and the shard stays down — a reader can never observe
+        a half-reintegrated shard, because readers only see the swap
+        via the NEXT sealed generation.
+        """
+        sid = int(sid)
+        if sid not in self.down:
+            raise ValueError(f"reintegrate: shard {sid} is not quarantined")
+        if img.cap_e != self.cap_e or int(img.nv) != self.v_pad:
+            raise ValueError(
+                f"reintegrate: shard {sid} image layout (cap_e={img.cap_e}, "
+                f"nv={img.nv}) != mesh layout (cap_e={self.cap_e}, "
+                f"nv={self.v_pad})"
+            )
+        old = self.shards[sid]
+        self.shards[sid] = img
+        self.down.discard(sid)
+        try:
+            self.audit_shard(sid, verify=False)
+        except Exception:
+            self.shards[sid] = old
+            self.down.add(sid)
+            raise
+        self._spool.pop(sid, None)
+        if self._integrity is not None:
+            self._integrity[sid] = _shard_crc_table(img)
+        self._placed = None
+
+    def spooled(self, sid: int) -> list:
+        """The quarantine-window FIFO of routed subplans for one shard."""
+        return list(self._spool.get(int(sid), ()))
+
+    def enable_integrity(self) -> None:
+        """Start maintaining per-shard CRC descriptors (§17 detection).
+
+        Each successful fused patch refreshes its shard's table
+        transactionally, so any out-of-band mutation (bit rot, a buggy
+        kernel, ``shard.corrupt`` injection) is caught by the next
+        :meth:`verify_shard` / :meth:`audit_shard`.  Opt-in: hashing
+        pulls the device payload to host, which the benchmarks must not
+        pay.
+        """
+        self._integrity = {
+            s: _shard_crc_table(img)
+            for s, img in enumerate(self.shards)
+            if s not in self.down
+        }
+
+    def shard_descriptor(self, sid: int) -> dict:
+        """Current integrity descriptor of one shard (seal/checkpoint
+        callers persist this next to the payload)."""
+        return _shard_crc_table(self.shards[int(sid)])
+
+    def verify_shard(self, sid: int) -> None:
+        """Recompute one shard's descriptor against the maintained table.
+
+        Raises :class:`ShardIntegrityError` naming the damaged buffers
+        and chunk indices.  No-op when integrity tracking is off; a
+        shard with no entry yet (fresh reintegration) is seeded.
+        """
+        if self._integrity is None:
+            return
+        sid = int(sid)
+        img = self.shards[sid]
+        want = self._integrity.get(sid)
+        if want is None:
+            self._integrity[sid] = _shard_crc_table(img)
+            return
+        got = _shard_crc_table(img)
+        if got == want:
+            return
+        bad = []
+        for k in _INTEGRITY_BUFS:
+            if len(want[k]) != len(got[k]):
+                bad.append(f"{k}: chunk count {len(want[k])} -> {len(got[k])}")
+                continue
+            chunks = [
+                i for i, (a, b) in enumerate(zip(want[k], got[k])) if a != b
+            ]
+            if chunks:
+                bad.append(f"{k}: chunks {chunks[:4]}")
+        for k in ("geom", "live", "bump"):
+            if want[k] != got[k]:
+                bad.append(f"{k}: {want[k]} -> {got[k]}")
+        raise ShardIntegrityError(
+            sid, "integrity", "; ".join(bad) or "descriptor mismatch"
+        )
+
+    def audit_shard(self, sid: int, *, verify: bool = True) -> dict:
+        """One shard's structural audit + stray-row pass + CRC verify."""
+        sid = int(sid)
+        if sid in self.down:
+            raise ShardDownError(f"audit_shard: shard {sid} is quarantined")
+        img = self.shards[sid]
+        report = img.audit()
+        lo_v, hi_v = self.owned_range(sid)
+        degs = np.asarray(img.degs[: self.v_pad], np.int64)
+        stray = degs.copy()
+        stray[lo_v:hi_v] = 0
+        if stray.any():
+            raise ShardFaultError(
+                sid, "audit",
+                f"edges on non-owned rows {np.nonzero(stray)[0][:8].tolist()}",
+            )
+        if verify:
+            self.verify_shard(sid)
+        return report
+
+    def _corrupt_tick(self, sid: int) -> None:
+        """``shard.corrupt`` injection point: after a successful patch,
+        silently flip a live weight on this shard — no exception escapes
+        (that is the point: only the integrity pass can see it)."""
+        try:
+            _fi.fire("shard.corrupt")
+        except _fi.InjectedKernelError:
+            from ..runtime import failover
+
+            failover.corrupt_shard(self, sid, kind="wgt")
+
+    def seal_generation(self, generation: int = 0) -> "ShardedGraph":
+        """Seal the mesh as one immutable read-only generation (§16/§17).
+
+        Every healthy shard seals O(1) via :meth:`WalkImage.seal` (the
+        live images turn copy-on-write); quarantined shards keep their
+        live reference but stay masked — the generation's ``coverage``
+        and ``down_rows`` tell readers exactly what the walk covers.
+        """
+        sealed = [
+            img if s in self.down else img.seal(generation)
+            for s, img in enumerate(self.shards)
+        ]
+        return ShardedGraph(
+            shards=sealed, n=self.n, rows_max=self.rows_max,
+            n_shards=self.n_shards, mesh=self.mesh, dense=self.dense,
+            generation=self.generation, down=set(self.down), _frozen=True,
+        )
 
     def block_on(self) -> None:
         """Barrier: wait for every shard's device buffers (bench timing)."""
@@ -188,7 +511,13 @@ class ShardedGraph:
         if self._placed is not None:
             return self._placed
         S, v_pad, cap_e = self.n_shards, self.v_pad, self.cap_e
-        lohi = [self._lohi(img) for img in self.shards]
+        zero = None
+        if self.down:
+            zero = (np.zeros(v_pad, np.int32), np.zeros(v_pad, np.int32))
+        lohi = [
+            zero if s in self.down else self._lohi(img)
+            for s, img in enumerate(self.shards)
+        ]
         if self.mesh is None:
             dst_g = jnp.stack([img.dst for img in self.shards])
             lo_g = jnp.stack([jnp.asarray(lo) for lo, _ in lohi])
@@ -233,9 +562,21 @@ class ShardedGraph:
         device.  Unweighted visit counts are exact small integers in
         f32, so both modes (and the single-device WalkImage path) agree
         bitwise on the graphs the parity suite sweeps.
+
+        Quarantined shards are masked out (their rows read exact zeros);
+        a healthy shard that faults here raises :class:`ShardFaultError`
+        carrying its ``sid`` so the serving layer can quarantine it and
+        retry degraded instead of failing the batch.
         """
         from ..kernels.slot_walk import sharded as _sw
 
+        for s in range(self.n_shards):
+            if s in self.down:
+                continue
+            try:
+                _fi.fire("shard.walk")
+            except Exception as e:
+                raise ShardFaultError(s, "walk", str(e)) from e
         nwalks = 0 if visits0 is None else int(visits0.shape[0])
         b = max(nwalks, 1)
         vis = np.ones((b, self.v_pad), np.float32)
@@ -265,6 +606,15 @@ class ShardedGraph:
         out = out[:, : self.n]
         return out[0] if visits0 is None else out
 
+    def walk(self, steps: int, *, visits0=None, backend: str = "auto"):
+        """WalkImage-protocol alias (serve-layer dispatch target).
+
+        ``backend`` is accepted for protocol compatibility and ignored —
+        the sharded program picks its own lowering.
+        """
+        del backend
+        return self.reverse_walk(steps, visits0=visits0)
+
     def collective_bytes_per_step(self, steps: int, *, nwalks: int = 0) -> int:
         """Measured per-device collective bytes per walk step (jaxpr proof).
 
@@ -284,6 +634,11 @@ class ShardedGraph:
     # ------------------------------------------------------------------
     def state_trees(self) -> dict:
         """{shard_id: flat state dict} — the sharded checkpoint payload."""
+        if self.down:
+            raise ShardDownError(
+                f"state_trees: shards {sorted(self.down)} are quarantined — "
+                f"a checkpoint would persist garbage; rebuild first"
+            )
         out = {}
         for s, img in enumerate(self.shards):
             out[s] = {
@@ -336,42 +691,27 @@ class ShardedGraph:
             if mesh is not None
             else [None] * n_shards
         )
-        shards = []
-        for s in range(n_shards):
-            t = trees[s]
-            nv, bump, live = (int(t["meta"][0]), int(t["meta"][1]),
-                              int(t["meta"][2]))
-            dev = devs[s]
-            put = (lambda a: jax.device_put(a, dev)) if dev is not None \
-                else jnp.asarray
-            img = walk_image.WalkImage(
-                dst=put(t["dst"]), wgt=put(t["wgt"]), rows=put(t["rows"]),
-                starts=np.asarray(t["starts"], np.int64),
-                caps=np.asarray(t["caps"], np.int64),
-                degs=np.asarray(t["degs"], np.int64),
-                nv=nv, bump=bump, live=live,
-                base_occupancy=live / max(bump, 1),
-            )
-            shards.append(img)
+        shards = [
+            image_from_state_tree(trees[s], device=devs[s])
+            for s in range(n_shards)
+        ]
         return cls(
             shards=shards, n=n, rows_max=rows_max, n_shards=n_shards,
             mesh=mesh, dense=dense,
         )
 
     def audit(self) -> dict:
-        """Per-shard image audits plus the cross-shard boundary pass."""
-        reports = [img.audit() for img in self.shards]
-        for s, img in enumerate(self.shards):
-            lo_v, hi_v = self.owned_range(s)
-            degs = np.asarray(img.degs[: self.v_pad], np.int64)
-            stray = degs.copy()
-            stray[lo_v:hi_v] = 0
-            if stray.any():
-                raise ValueError(
-                    f"shard {s}: edges on non-owned rows "
-                    f"{np.nonzero(stray)[0][:8].tolist()}"
-                )
-        return {"shards": reports, "m": self.m}
+        """Per-shard image audits plus the cross-shard boundary pass.
+
+        Quarantined shards are skipped (their content is untrusted by
+        definition) and reported in ``down`` — a degraded mesh audits
+        clean on its healthy part instead of tripping on garbage.
+        """
+        reports = [
+            None if s in self.down else self.audit_shard(s)
+            for s in range(self.n_shards)
+        ]
+        return {"shards": reports, "m": self.m, "down": sorted(self.down)}
 
 
 # ---------------------------------------------------------------------------
@@ -479,44 +819,62 @@ def route_updates(plan, n_shards: int, rows_max: int):
     return out
 
 
-def _gather_coo(g: ShardedGraph):
-    """Live (src, dst, wgt) from every shard's block prefixes, validated.
+def _image_coo(img, lo_v: int, hi_v: int, n: int, v_pad: int, sid: int):
+    """One shard's live (src, dst, wgt) from its block prefixes, validated.
 
     Per-shard pow-2 slack drops by construction (only ``deg`` slots per
-    row are read).  Edges on rows a shard does not own, or destination
+    row are read).  Edges on rows the shard does not own, or destination
     ids outside ``[0, n)``, raise — silent mis-stitching of the
     reassembled offsets is exactly the failure mode this guards.
     """
+    degs = np.asarray(img.degs[:v_pad], np.int64)
+    stray = degs.copy()
+    stray[lo_v:hi_v] = 0
+    if stray.any():
+        bad = np.nonzero(stray)[0][:8].tolist()
+        raise ValueError(
+            f"gather_csr: shard {sid} owns rows [{lo_v}, {hi_v}) but "
+            f"carries edges on rows {bad} — shard row-count mismatch"
+        )
+    dg = degs[lo_v:hi_v]
+    m_s = int(dg.sum())
+    if m_s == 0:
+        z = np.empty(0, np.int64)
+        return z, z.copy(), np.empty(0, np.float32)
+    starts = np.asarray(img.starts[lo_v:hi_v], np.int64)
+    first = np.cumsum(dg) - dg
+    gidx = np.repeat(starts, dg) + (
+        np.arange(m_s, dtype=np.int64) - np.repeat(first, dg)
+    )
+    d = np.asarray(img.dst)[gidx]
+    if bool((d == SENTINEL).any()) or bool((d >= n).any()):
+        raise ValueError(
+            f"gather_csr: shard {sid} live prefix holds destination ids "
+            f"outside [0, {n}) — shard row-count mismatch"
+        )
+    return (
+        np.repeat(np.arange(lo_v, hi_v, dtype=np.int64), dg),
+        d.astype(np.int64),
+        np.asarray(img.wgt)[gidx].astype(np.float32),
+    )
+
+
+def _gather_coo(g: ShardedGraph):
+    """Live (src, dst, wgt) from every shard's block prefixes, validated."""
+    if g.down:
+        raise ShardDownError(
+            f"gather: shards {sorted(g.down)} are quarantined — a global "
+            f"gather would stitch garbage; rebuild first"
+        )
     srcs, dsts, wgts = [], [], []
     for s, img in enumerate(g.shards):
         lo_v, hi_v = g.owned_range(s)
-        degs = np.asarray(img.degs[: g.v_pad], np.int64)
-        stray = degs.copy()
-        stray[lo_v:hi_v] = 0
-        if stray.any():
-            bad = np.nonzero(stray)[0][:8].tolist()
-            raise ValueError(
-                f"gather_csr: shard {s} owns rows [{lo_v}, {hi_v}) but "
-                f"carries edges on rows {bad} — shard row-count mismatch"
-            )
-        dg = degs[lo_v:hi_v]
-        m_s = int(dg.sum())
-        if m_s == 0:
+        src_s, dst_s, wgt_s = _image_coo(img, lo_v, hi_v, g.n, g.v_pad, s)
+        if src_s.shape[0] == 0:
             continue
-        starts = np.asarray(img.starts[lo_v:hi_v], np.int64)
-        first = np.cumsum(dg) - dg
-        gidx = np.repeat(starts, dg) + (
-            np.arange(m_s, dtype=np.int64) - np.repeat(first, dg)
-        )
-        d = np.asarray(img.dst)[gidx]
-        if bool((d == SENTINEL).any()) or bool((d >= g.n).any()):
-            raise ValueError(
-                f"gather_csr: shard {s} live prefix holds destination ids "
-                f"outside [0, {g.n}) — shard row-count mismatch"
-            )
-        srcs.append(np.repeat(np.arange(lo_v, hi_v, dtype=np.int64), dg))
-        dsts.append(d.astype(np.int64))
-        wgts.append(np.asarray(img.wgt)[gidx])
+        srcs.append(src_s)
+        dsts.append(dst_s)
+        wgts.append(wgt_s)
     if not srcs:
         z = np.empty(0, np.int64)
         return z, z.copy(), np.empty(0, np.float32)
@@ -552,6 +910,85 @@ def _host_apply(src, dst, wgt, plan):
         np.concatenate([dst[~hit], plan.q_dst[ins].astype(np.int64)]),
         np.concatenate([wgt[~hit], plan.q_wgt[ins]]).astype(np.float32),
     )
+
+
+def image_from_state_tree(t: dict, *, device=None) -> walk_image.WalkImage:
+    """Build ONE shard's WalkImage from its flat checkpoint state dict.
+
+    The single-shard slice of :meth:`ShardedGraph.from_state_trees` —
+    the §17 online rebuild restores exactly one shard this way and
+    replays its WAL window into it before reintegration.
+    """
+    nv, bump, live = int(t["meta"][0]), int(t["meta"][1]), int(t["meta"][2])
+    put = (lambda a: jax.device_put(a, device)) if device is not None \
+        else jnp.asarray
+    return walk_image.WalkImage(
+        dst=put(t["dst"]), wgt=put(t["wgt"]), rows=put(t["rows"]),
+        starts=np.asarray(t["starts"], np.int64).copy(),
+        caps=np.asarray(t["caps"], np.int64).copy(),
+        degs=np.asarray(t["degs"], np.int64).copy(),
+        nv=nv, bump=bump, live=live,
+        base_occupancy=live / max(bump, 1),
+    )
+
+
+def shard_image_apply(g: ShardedGraph, sid: int, img, sub):
+    """Apply one routed subplan to a standalone (not-yet-reintegrated)
+    shard image through the same fused ``slot_update`` path the live
+    mesh uses; returns the image (possibly repacked).
+
+    Overflow/compaction cannot take the global re-shard (the mesh is
+    degraded — that is why this image exists): the shard repacks ALONE
+    at the shared ``cap_e``, falling back to the §12 dense layout
+    (occupancy 1.0 — the minimal footprint) when the policy layout's
+    slack no longer fits.  If even the dense repack exceeds the shared
+    capacity the single-shard rebuild is impossible and
+    :class:`ShardDownError` directs the caller to a full ``recover()``.
+    """
+    img.queue(sub)
+    if img.flush():
+        return img
+    lo_v, hi_v = g.owned_range(sid)
+    pending = list(img._pending)
+    img._pending.clear()
+    img._stale = False
+    src, dst, wgt = _image_coo(img, lo_v, hi_v, g.n, g.v_pad, sid)
+    for p in pending:
+        src, dst, wgt = _host_apply(src, dst, wgt, p)
+    c = csr_mod.from_coo(src, dst, wgt, n=g.v_pad, dedup=False)
+    offs = np.asarray(c.offsets, np.int64)
+    dsts = np.asarray(c.dst)
+    wgts = (
+        np.asarray(c.wgt, np.float32)
+        if c.wgt is not None else np.ones(c.m, np.float32)
+    )
+    new = walk_image.WalkImage.from_csr_arrays(
+        offs, dsts, wgts, g.v_pad, dense=g.dense, min_cap_e=g.cap_e,
+    )
+    if new.cap_e != g.cap_e and not g.dense:
+        new = walk_image.WalkImage.from_csr_arrays(
+            offs, dsts, wgts, g.v_pad, dense=True, min_cap_e=g.cap_e,
+        )
+    if new.cap_e > g.cap_e and int(new.bump) <= g.cap_e:
+        # the build's pow-2 bump reserve overshot the shared capacity
+        # but the slots themselves fit: trim to the mesh's program
+        # shape (the shard just has less relocation slack than policy —
+        # the next overflow takes the healthy-mesh global re-shard)
+        new.dst = new.dst[: g.cap_e]
+        new.wgt = new.wgt[: g.cap_e]
+        new.rows = new.rows[: g.cap_e]
+    if new.cap_e != g.cap_e:
+        raise ShardDownError(
+            f"shard {sid} outgrew the shared cap_e ({new.cap_e} > "
+            f"{g.cap_e}) during single-shard rebuild — the mesh needs a "
+            f"global re-shard; run a full recover()"
+        )
+    if g.mesh is not None:
+        dev = g._devices()[sid]
+        new.dst = jax.device_put(new.dst, dev)
+        new.wgt = jax.device_put(new.wgt, dev)
+        new.rows = jax.device_put(new.rows, dev)
+    return new
 
 
 def reverse_walk(g: ShardedGraph, steps: int, *, visits0=None):

@@ -94,7 +94,13 @@ def seal_generation(rep, generation: int = 0) -> "WalkImage":
       writes, §10) and the snapshot's image wrap becomes the frozen
       generation.  The snapshot handle is dropped; the image keeps its
       host geometry arrays alive.
+
+    Reps with their own ``seal_generation`` (``ShardedGraph``: per-shard
+    seals + quarantine masking, §17) delegate wholesale.
     """
+    own = getattr(rep, "seal_generation", None)
+    if own is not None:
+        return own(generation)
     img = rep.to_walk_image()
     if not img.shared:
         return img.seal(generation)

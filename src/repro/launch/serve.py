@@ -98,7 +98,16 @@ class GenerationOracle:
                         self._edges.add((s, d))
             self._arrays = None
 
-    def walk(self, gen: int, visits_row: np.ndarray, steps: int) -> np.ndarray:
+    def walk(self, gen: int, visits_row: np.ndarray, steps: int,
+             *, drop_rows=None) -> np.ndarray:
+        """Oracle walk at ``gen``; ``drop_rows`` models degraded coverage.
+
+        A quarantined shard's rows are masked out of the sharded walk
+        (their lo/hi read zero-length), so their accumulations vanish at
+        EVERY step while edges from healthy rows into them still read
+        the visit vector — exactly ``nxt[drop_rows] = 0`` per step
+        (§17).  ``drop_rows=None`` (or empty) is the full-coverage walk.
+        """
         self._advance(int(gen))
         if self._arrays is None:
             if self._edges:
@@ -108,10 +117,16 @@ class GenerationOracle:
                 e = np.empty(0, np.int64)
                 self._arrays = (e, e)
         s, d = self._arrays
+        drop = (
+            None if drop_rows is None or len(drop_rows) == 0
+            else np.asarray(drop_rows, np.int64)
+        )
         v = np.asarray(visits_row, np.float64)
         for _ in range(steps):
             nxt = np.zeros(self.nv, np.float64)
             np.add.at(nxt, s, v[d])
+            if drop is not None:
+                nxt[drop] = 0.0
             v = nxt
         return v
 
@@ -172,6 +187,7 @@ def count_torn_reads(
     seed: int = 0,
     rtol: float = 1e-4,
     atol: float = 1e-2,
+    down_rows_of=None,
 ):
     """Verify served walks against the per-generation oracle.
 
@@ -180,7 +196,10 @@ def count_torn_reads(
     read (a walk that saw a half-applied plan) fails the allclose, since
     no sealed edge-set produces its numbers.  ``sample`` < 1 checks a
     random subset (bench runs on larger graphs bound verify cost; tests
-    use 1.0).
+    use 1.0).  ``down_rows_of`` (ticket → row-id array or None) maps a
+    degraded response's ``down_shards`` to the masked rows so §17
+    coverage-degraded answers verify against the SAME oracle — a
+    degraded walk is still exact on the part it claims to cover.
     """
     rng = np.random.default_rng(seed)
     for t, plan in update_tickets:
@@ -199,7 +218,8 @@ def count_torn_reads(
             if t.visits_row is not None
             else seed_visits_row(oracle.nv, t.seeds, t.weights)
         )
-        expect = oracle.walk(t.generation, row, t.steps)
+        drop = None if down_rows_of is None else down_rows_of(t)
+        expect = oracle.walk(t.generation, row, t.steps, drop_rows=drop)
         checked += 1
         if not np.allclose(np.asarray(t.visits, np.float64), expect,
                            rtol=rtol, atol=atol):

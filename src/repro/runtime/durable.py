@@ -55,6 +55,7 @@ Sharded-scale recovery (DESIGN.md §15) extends both halves:
 """
 from __future__ import annotations
 
+import errno
 import os
 import struct
 import zlib
@@ -79,6 +80,16 @@ _OP_BYTES = 12
 
 class WalCorruptError(RuntimeError):
     """The journal is damaged beyond the benign torn-tail case."""
+
+
+class WalDiskFullError(RuntimeError):
+    """A segment write failed mid-append (ENOSPC, short write, I/O error).
+
+    The failed append was rolled back — the segment is truncated to its
+    last pre-append boundary, so every previously acknowledged record is
+    intact and the SAME append may be retried once space returns.  The
+    in-memory graph was never touched (WAL-first ordering: the apply
+    only runs after the append succeeds)."""
 
 
 def _payload_size(n_ops: int) -> int:
@@ -229,10 +240,40 @@ class UpdateJournal:
             self._open_segment(seq)
 
     def _write_flush(self, buf: bytes) -> None:
-        self._fh.write(buf)
-        self._fh.flush()
-        if self.fsync:
-            os.fsync(self._fh.fileno())
+        """Write + flush one append, or roll the segment back untouched.
+
+        A failed or short write (disk full, I/O error, the ``wal.write``
+        injection point) must not leave a half-record at the tail: the
+        handle is closed, the file truncated to the pre-append boundary,
+        and a fresh append handle opened — then :class:`WalDiskFullError`
+        tells the caller the append is retryable.  ``next_seq`` only
+        advances in the caller after this returns, so a retry reuses the
+        same sequence numbers.
+        """
+        size0 = self._fh.tell()
+        try:
+            faultinject.fire("wal.write")
+            wrote = self._fh.write(buf)
+            if wrote != len(buf):
+                raise OSError(errno.ENOSPC, f"short write: {wrote}/{len(buf)}")
+            self._fh.flush()
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+        except (OSError, faultinject.InjectedKernelError) as e:
+            try:
+                self._fh.close()
+            except OSError:
+                pass
+            self._fh = None
+            try:
+                os.truncate(self._cur_path, size0)
+            except OSError:
+                pass
+            self._fh = open(self._cur_path, "ab")
+            raise WalDiskFullError(
+                f"{self._cur_path}: segment write failed at offset {size0} "
+                f"({e}) — segment rolled back, append retryable"
+            ) from e
         self.flushes += 1
 
     def append(self, plan: updates.UpdatePlan, nv_bound: int) -> int:
@@ -795,6 +836,102 @@ class DurableGraph:
         self.seq = records[-1][0]
         self._nv_bound = max(self._nv_bound, max(nv for _s, nv, _p in records))
         return len(records)
+
+    # -- shard failover: online single-shard rebuild (§17) -------------
+    def seal_generation(self, generation: int = 0):
+        """Seal the live representation as a read-only walk generation.
+
+        Sharded reps seal per-shard with quarantine masking (§17);
+        everything else goes through the ordinary §16 image seal.
+        """
+        from ..core import walk_image as _wi
+
+        if self._sharded:
+            return self.rep.seal_generation(generation)
+        return _wi.seal_generation(self.rep, generation)
+
+    def rebuild_shard(self, sid: int, *, stats: Optional[dict] = None) -> int:
+        """Rebuild ONE quarantined shard online and reintegrate it (§17).
+
+        restore just this shard's ``shard_{sid}.npz`` diff chain →
+        replay its slice of the WAL window (checkpoint step == wal_seq,
+        so ``replay(after=step)`` is exactly the window) through the
+        shard's fused ``slot_update`` path → replay the quarantine-era
+        spool → audit → atomic ``reintegrate``.  The rest of the mesh
+        keeps serving throughout — nothing here touches a healthy shard.
+
+        Replay double-applies the records the shard already saw live
+        before the fault; the canonical op stream is last-op-wins per
+        (src, dst) key, so the double-apply converges bit-identically.
+        A growth record in the window means the layout was re-sharded
+        globally — single-shard rebuild is unsound then and
+        :class:`ShardDownError` directs the caller to a full
+        ``recover()``.  Returns the number of WAL records replayed.
+        """
+        import time
+
+        from ..core import distributed as dist
+
+        if not self._sharded:
+            raise TypeError("rebuild_shard: single-device rep has no shards")
+        rep = self.rep
+        sid = int(sid)
+        if sid not in rep.down:
+            raise ValueError(f"rebuild_shard: shard {sid} is not quarantined")
+        t0 = time.perf_counter()
+        arrays, step = ckpt.restore_shard_diff(self.ckpt_dir, sid)
+        arrays = {
+            k: v for k, v in arrays.items() if not k.startswith("__meta__/")
+        }
+        meta = arrays["meta"]
+        if (
+            int(meta[3]) != rep.n
+            or int(meta[4]) != rep.rows_max
+            or int(meta[5]) != rep.n_shards
+        ):
+            raise dist.ShardDownError(
+                f"rebuild_shard: checkpoint layout (n={int(meta[3])}, "
+                f"rows_max={int(meta[4])}, S={int(meta[5])}) predates a "
+                f"global re-shard of the live mesh (n={rep.n}, "
+                f"rows_max={rep.rows_max}, S={rep.n_shards}) — run a "
+                f"full recover()"
+            )
+        dev = rep._devices()[sid] if rep.mesh is not None else None
+        img = dist.image_from_state_tree(arrays, device=dev)
+        if img.cap_e != rep.cap_e:
+            raise dist.ShardDownError(
+                f"rebuild_shard: checkpoint cap_e={img.cap_e} != live "
+                f"cap_e={rep.cap_e} — layout re-sharded; run a full recover()"
+            )
+        t1 = time.perf_counter()
+        records = 0
+        for _seq, rec_nv, (qs, qd, qw, ql) in self.journal.replay(after=step):
+            plan = updates.plan_from_canonical(qs, qd, qw, ql)
+            plan.validate(num_vertices=int(rec_nv))
+            records += 1
+            if plan.max_insert_vertex() >= rep.n:
+                raise dist.ShardDownError(
+                    "rebuild_shard: growth record in the WAL window — the "
+                    "mesh re-sharded globally; run a full recover()"
+                )
+            for s2, sub in dist.route_updates(plan, rep.n_shards, rep.rows_max):
+                if s2 == sid:
+                    img = dist.shard_image_apply(rep, sid, img, sub)
+        for sub in rep.spooled(sid):
+            img = dist.shard_image_apply(rep, sid, img, sub)
+        rep.reintegrate(sid, img)
+        if self.diff:
+            # replay applies were not dirty-tracked: the next differential
+            # checkpoint must persist this shard in full
+            d = self._dirty.setdefault(sid, _ShardDirty())
+            d.full = d.touched = True
+            d.rows, d.ranges = [], []
+        t2 = time.perf_counter()
+        if stats is not None:
+            stats.update(
+                restore_s=t1 - t0, replay_s=t2 - t1, records=records
+            )
+        return records
 
     # -- passthrough conveniences --------------------------------------
     def to_csr(self):

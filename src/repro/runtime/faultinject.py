@@ -49,6 +49,18 @@ point                      fires
                            readers must keep the previous sealed image
 ``serve.dispatch``         dispatcher, before a batched walk — the batch
                            must be retried or failed, never dropped
+``shard.walk``             ShardedGraph.reverse_walk, once per healthy
+                           shard — surfaces as ShardFaultError(sid) so
+                           the serving layer quarantines that shard
+``shard.patch``            ShardedGraph.apply, before one shard's fused
+                           patch — the shard quarantines, its sub
+                           spools, the REST of the mesh still patches
+``shard.corrupt``          after one shard's successful patch — silently
+                           flips a live weight (no exception escapes);
+                           only the §17 integrity pass can detect it
+``wal.write``              UpdateJournal._write_flush, before the
+                           segment write — surfaces as WalDiskFullError
+                           with the segment truncated back intact
 =========================  ==================================================
 
 Tests arm points through :func:`arm`/:func:`injected`; the autouse

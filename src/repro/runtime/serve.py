@@ -37,10 +37,26 @@ contract stronger than the sum of its parts:
   and a failed seal keeps readers on the previous consistent generation
   while the writer retries.
 
+* **Shard failover (DESIGN.md §17)** — serving a ``ShardedGraph``, a
+  single lost shard degrades coverage instead of availability.  A walk
+  dispatch that trips ``ShardFaultError(sid)`` queues that shard for
+  quarantine on the writer (``_pending_quarantine``) and retries the
+  batch — against the previous sealed generation first, then against
+  the degraded reseal once the writer flips it.  Every response carries
+  ``coverage`` (fraction of the vertex space served) and
+  ``down_shards`` so a degraded answer is *explicit*, never silent.
+  The writer optionally paces a round-robin integrity audit
+  (``audit_every`` > 0 → one ``failover.AuditScheduler`` tick per N
+  writer rounds) to catch *silent* corruption on the live rep before it
+  can reach a sealed generation; ``run_on_writer`` executes admin work
+  (chaos injection, ``rebuild_shard`` reintegration) on the writer
+  thread, serialized with applies, with an optional reseal after.
+
 The server is representation-agnostic: anything exposing
-``apply(plan) -> (rep, dm)`` and ``to_walk_image()`` (all five
-single-device representations) serves.  Sharding the walk batch
-dimension B across a device mesh is the remaining ROADMAP item.
+``apply(plan)`` (returning ``(rep, dm)`` or mutating in place) plus
+either ``to_walk_image()`` or its own ``seal_generation`` (all five
+single-device representations, and ``ShardedGraph`` across a mesh)
+serves.
 """
 from __future__ import annotations
 
@@ -140,10 +156,17 @@ class _Ticket:
 
 
 class WalkTicket(_Ticket):
-    """Handle for one walk request; ``result()`` blocks for the visits."""
+    """Handle for one walk request; ``result()`` blocks for the visits.
+
+    ``coverage``/``down_shards`` describe the serving generation the
+    response was computed on: 1.0 and ``()`` for a healthy mesh (or any
+    single-device image); < 1.0 names the degraded fraction and the
+    quarantined shard ids whose rows read as zero (§17).
+    """
 
     __slots__ = ("seeds", "weights", "visits_row", "steps", "deadline",
-                 "attempts", "visits", "latency_s")
+                 "attempts", "visits", "latency_s", "coverage",
+                 "down_shards")
 
     def __init__(self, seeds, weights, visits_row, steps, deadline):
         super().__init__()
@@ -155,6 +178,8 @@ class WalkTicket(_Ticket):
         self.attempts = 0
         self.visits: Optional[np.ndarray] = None
         self.latency_s: Optional[float] = None
+        self.coverage: Optional[float] = None
+        self.down_shards: tuple = ()
 
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
         if not self.wait(timeout):
@@ -181,6 +206,30 @@ class UpdateTicket(_Ticket):
         return self.dm
 
 
+class AdminTicket(_Ticket):
+    """Handle for one writer-thread admin op (``run_on_writer``).
+
+    The callable runs on the writer thread — serialized with applies and
+    seals, so it may safely mutate the live representation (quarantine,
+    ``rebuild_shard`` reintegration, chaos corruption).  It is NOT part
+    of the zero-lost walk/update ledgers; ``admin_ops`` counts it.
+    """
+
+    __slots__ = ("fn", "reseal", "value")
+
+    def __init__(self, fn, reseal: bool):
+        super().__init__()
+        self.fn = fn
+        self.reseal = bool(reseal)
+        self.value = None
+
+    def result(self, timeout: Optional[float] = None):
+        if not self.wait(timeout):
+            raise TimeoutError("admin ticket still pending")
+        self._raise_terminal()
+        return self.value
+
+
 def _fresh_stats() -> dict:
     return {
         # walk-side accounting (the zero-lost ledger)
@@ -192,6 +241,9 @@ def _fresh_stats() -> dict:
         # engine health
         "seals": 0, "seal_failures": 0, "batches": 0, "max_batch": 0,
         "dispatch_retries": 0, "breaker_fallbacks": 0,
+        # shard failover (§17)
+        "shard_quarantines": 0, "audit_detections": 0,
+        "served_degraded": 0, "admin_ops": 0,
     }
 
 
@@ -208,10 +260,13 @@ class WalkServer:
     ``default_timeout``  per-request deadline when the caller gives none
                          (None = no deadline)
     ``dispatch_retries`` serve-level retries of a failed batch dispatch
-    ``retry_backoff``    seconds slept before a retried dispatch
+    ``retry_backoff``    base seconds of the retry backoff (attempt 1)
+    ``retry_max_backoff`` ceiling of the exponential retry backoff
     ``update_queue_max`` update admission bound
     ``seal_group_max``   updates coalesced under one seal
     ``walk_backend``     slot_walk backend request ("auto" → device)
+    ``audit_every``      writer rounds between AuditScheduler ticks
+                         (0 = no background integrity audits)
     """
 
     def __init__(
@@ -223,9 +278,11 @@ class WalkServer:
         default_timeout: Optional[float] = None,
         dispatch_retries: int = 2,
         retry_backoff: float = 0.002,
+        retry_max_backoff: float = 0.25,
         update_queue_max: int = 64,
         seal_group_max: int = 8,
         walk_backend: str = "auto",
+        audit_every: int = 0,
     ):
         self._rep = rep
         self.max_queue = int(max_queue)
@@ -233,9 +290,11 @@ class WalkServer:
         self.default_timeout = default_timeout
         self.dispatch_retries = int(dispatch_retries)
         self.retry_backoff = float(retry_backoff)
+        self.retry_max_backoff = float(retry_max_backoff)
         self.update_queue_max = int(update_queue_max)
         self.seal_group_max = int(seal_group_max)
         self.walk_backend = walk_backend
+        self.audit_every = int(audit_every)
 
         self._lock = threading.Lock()
         self._walk_cv = threading.Condition(self._lock)
@@ -250,6 +309,12 @@ class WalkServer:
         self._seal_pending: list = []  # applied updates awaiting a seal ack
         self._closed = False
         self._threads: list[threading.Thread] = []
+        # §17 failover control plane (writer-owned except the queues)
+        self._admin_q: collections.deque = collections.deque()
+        self._pending_quarantine: set = set()
+        self._auditor = None  # lazy failover.AuditScheduler
+        self._known_down: set = set()
+        self._rng = np.random.default_rng(0x5EED)  # retry jitter only
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -258,6 +323,7 @@ class WalkServer:
         """Seal generation 0 and start the writer + dispatcher threads."""
         if self._threads:
             raise RuntimeError("server already started")
+        self._known_down = set(getattr(self._base_rep(), "down", ()) or ())
         self._seal_locked(initial=True)
         self._closed = False
         for name, fn in (("serve-writer", self._writer_loop),
@@ -285,6 +351,8 @@ class WalkServer:
                     self._resolve_reject(
                         self._upd_q.popleft(), "shutdown", walk=False
                     )
+                while self._admin_q:
+                    self._admin_q.popleft()._reject("shutdown")
             self._walk_cv.notify_all()
             self._upd_cv.notify_all()
         for t in self._threads:
@@ -310,6 +378,13 @@ class WalkServer:
                 self._generation.gen_id if self._generation else -1
             )
             out["ema_service_ms"] = self._ema_service_s * 1e3
+            gen = self._generation
+            out["coverage"] = (
+                float(getattr(gen.image, "coverage", 1.0)) if gen else 1.0
+            )
+            out["down_shards"] = tuple(
+                sorted(getattr(gen.image, "down", ()) or ())
+            ) if gen else ()
         return out
 
     @property
@@ -434,9 +509,108 @@ class WalkServer:
             self._upd_cv.notify()
         return t
 
+    def run_on_writer(self, fn, *, reseal: bool = False) -> AdminTicket:
+        """Run ``fn(server)`` on the writer thread; returns an AdminTicket.
+
+        The callable executes serialized with plan applies and seals —
+        the only safe place to mutate the live representation from
+        outside (quarantine a shard, reintegrate via
+        ``DurableGraph.rebuild_shard``, inject chaos).  With
+        ``reseal=True`` the writer seals a fresh generation right after,
+        so readers observe the admin change on their next dispatch;
+        leave it False for mutations that must NOT reach readers until
+        an audit passes (e.g. modeled corruption).
+        """
+        t = AdminTicket(fn, reseal)
+        with self._lock:
+            if self._closed:
+                return t._reject("shutdown")
+            self._admin_q.append(t)
+            self._upd_cv.notify()
+        return t
+
+    def request_quarantine(self, sid: int) -> None:
+        """Ask the writer to quarantine shard ``sid`` (idempotent)."""
+        with self._lock:
+            self._pending_quarantine.add(int(sid))
+            self._upd_cv.notify()
+
     # ------------------------------------------------------------------
-    # writer thread: apply → seal → ack
+    # writer thread: control → apply → audit → seal → ack
     # ------------------------------------------------------------------
+    def _base_rep(self):
+        """The shard-bearing representation (unwraps DurableGraph.rep)."""
+        return getattr(self._rep, "rep", self._rep)
+
+    def _note_quarantines(self) -> bool:
+        """Sync ``_known_down`` with the live rep; count new quarantines.
+
+        Returns True when the down-set changed (quarantine OR
+        reintegration) — either way the serving generation is stale and
+        the writer must reseal.
+        """
+        down = set(getattr(self._base_rep(), "down", ()) or ())
+        if down == self._known_down:
+            return False
+        new = down - self._known_down
+        self._known_down = down
+        if new:
+            with self._lock:
+                self._stats["shard_quarantines"] += len(new)
+        return True
+
+    def _drain_control(self) -> bool:
+        """Apply queued quarantine requests + admin ops (writer thread).
+
+        Returns True when the serving generation must be resealed.
+        """
+        with self._lock:
+            sids = sorted(self._pending_quarantine)
+            self._pending_quarantine.clear()
+            admin = list(self._admin_q)
+            self._admin_q.clear()
+        dirty = False
+        base = self._base_rep()
+        for sid in sids:
+            if hasattr(base, "quarantine") and sid not in getattr(
+                base, "down", ()
+            ):
+                base.quarantine(int(sid))
+        if sids:
+            dirty |= self._note_quarantines()
+        for t in admin:
+            try:
+                t.value = t.fn(self)
+            except Exception as e:
+                t._fail(e)
+            else:
+                with self._lock:
+                    self._stats["admin_ops"] += 1
+                t._resolve(SERVED)
+                dirty |= t.reseal
+            dirty |= self._note_quarantines()
+        return dirty
+
+    def _audit_tick(self) -> bool:
+        """One paced AuditScheduler tick; quarantines on detection.
+
+        Returns True when a shard was quarantined (reseal needed).
+        """
+        base = self._base_rep()
+        if not hasattr(base, "audit_shard"):
+            return False
+        if self._auditor is None or self._auditor.g is not base:
+            from . import failover
+            self._auditor = failover.AuditScheduler(base)
+        hit = self._auditor.tick()
+        if hit is None:
+            return False
+        sid, _exc = hit
+        base.quarantine(int(sid))
+        with self._lock:
+            self._stats["audit_detections"] += 1
+        self._note_quarantines()
+        return True
     def _seal_locked(self, *, initial: bool = False) -> bool:
         """Seal a new generation and ack the updates it contains.
 
@@ -464,19 +638,38 @@ class WalkServer:
         return True
 
     def _writer_loop(self) -> None:
+        audit_round = 0
         while True:
             with self._lock:
-                while not self._upd_q and not self._closed and not self._seal_pending:
+                while (
+                    not self._upd_q and not self._closed
+                    and not self._seal_pending and not self._admin_q
+                    and not self._pending_quarantine
+                ):
                     self._upd_cv.wait(0.05)
-                if self._closed and not self._upd_q and not self._seal_pending:
+                    if self.audit_every:
+                        break  # idle tick: keep the audit sweep moving
+                if (
+                    self._closed and not self._upd_q
+                    and not self._seal_pending and not self._admin_q
+                ):
                     return
                 group = [
                     self._upd_q.popleft()
                     for _ in range(min(len(self._upd_q), self.seal_group_max))
                 ]
+            dirty = self._drain_control()
             for t in group:
                 try:
-                    self._rep, dm = self._rep.apply(t.plan)
+                    # rep protocol adapter: single-device reps return
+                    # (rep, dm); ShardedGraph.apply mutates in place and
+                    # returns None (ΔM read off the live edge count).
+                    m0 = int(getattr(self._rep, "m", 0))
+                    out = self._rep.apply(t.plan)
+                    if out is None:
+                        dm = int(getattr(self._rep, "m", m0)) - m0
+                    else:
+                        self._rep, dm = out
                     t.dm = int(dm)
                     self._seq += 1
                     with self._lock:
@@ -489,7 +682,14 @@ class WalkServer:
                     with self._lock:
                         self._stats["updates_failed"] += 1
                     t._fail(e)
-            if group or self._seal_pending:
+            # a sharded apply quarantines faulted shards in place
+            # (non-raising, §17) — pick those up and reseal degraded
+            dirty |= self._note_quarantines()
+            audit_round += 1
+            if self.audit_every and audit_round >= self.audit_every:
+                audit_round = 0
+                dirty |= self._audit_tick()
+            if group or self._seal_pending or dirty:
                 with self._lock:
                     if not self._seal_locked():
                         # failed seal: retry after a short pause so an
@@ -587,9 +787,18 @@ class WalkServer:
                     )
                 )
             except Exception as e:
+                # a shard-attributed walk fault (§17): ask the writer to
+                # quarantine that shard, then retry the batch — against
+                # the previous (still clean) generation first, and the
+                # degraded reseal once the writer flips it.
+                sid = getattr(e, "sid", None)
+                if sid is not None:
+                    self.request_quarantine(int(sid))
                 self._retry_or_fail(tickets, e)
                 continue
             dt = time.monotonic() - t0
+            cov = float(getattr(gen.image, "coverage", 1.0))
+            downs = tuple(sorted(getattr(gen.image, "down", ()) or ()))
             used = _fb.LAST_USED.get("slot_walk")
             with self._lock:
                 if used is not None and used != primary:
@@ -597,13 +806,26 @@ class WalkServer:
                 self._stats["batches"] += 1
                 self._stats["max_batch"] = max(self._stats["max_batch"], b)
                 self._stats["served"] += b
+                if cov < 1.0:
+                    self._stats["served_degraded"] += b
                 self._ema_service_s += 0.2 * (dt / b - self._ema_service_s)
             done = time.monotonic()
             for i, t in enumerate(tickets):
                 t.visits = out[i]
                 t.generation = gen.gen_id
+                t.coverage = cov
+                t.down_shards = downs
                 t.latency_s = done - t.submitted_at
                 t._resolve(SERVED)
+
+    def _retry_sleep_s(self, attempt: int) -> float:
+        """Jittered exponential backoff: base·2^(attempt-1), capped, with
+        uniform ±50% jitter so retry storms decorrelate."""
+        base = min(
+            self.retry_backoff * (2.0 ** max(int(attempt) - 1, 0)),
+            self.retry_max_backoff,
+        )
+        return base * float(self._rng.uniform(0.5, 1.5))
 
     def _retry_or_fail(self, tickets: list, err: Exception) -> None:
         """Bounded retry with backoff; exhausted tickets fail visibly."""
@@ -620,4 +842,4 @@ class WalkServer:
                 self._stats["failed"] += 1
                 t._fail(err)
         if retry:
-            time.sleep(self.retry_backoff)
+            time.sleep(self._retry_sleep_s(max(t.attempts for t in retry)))

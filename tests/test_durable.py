@@ -218,6 +218,55 @@ def test_group_append_one_flush_one_segment(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# WAL segment-write hardening (ENOSPC / short write, §17 satellite)
+# ---------------------------------------------------------------------------
+def test_wal_disk_full_rolls_back_and_retries(tmp_path):
+    """A failed segment write surfaces as WalDiskFullError with the
+    prior segment contents intact and the sequence NOT burned — the
+    same journal object retries the same plan under the same seq."""
+    wal = str(tmp_path / "wal")
+    j = durable.UpdateJournal(wal)
+    plans = make_plans(3)
+    j.append(plans[0], N_V)
+    seq0, flushes0 = j.next_seq, j.flushes
+    size0 = os.path.getsize(j.segments()[-1])
+    faultinject.arm("wal.write", times=1)
+    with pytest.raises(durable.WalDiskFullError):
+        j.append(plans[1], N_V)
+    assert j.next_seq == seq0  # the failed record's seq is reusable
+    assert j.flushes == flushes0  # no flush accounted for a dead write
+    assert os.path.getsize(j.segments()[-1]) == size0  # truncated back
+    assert [s for s, _, _ in j.replay()] == [1]  # prior record intact
+    seq = j.append(plans[1], N_V)  # retry on the SAME handle
+    assert seq == seq0
+    assert [s for s, _, _ in j.replay()] == [1, 2]
+    # ...and a reopened journal agrees (the reopened "ab" handle works)
+    j.append(plans[2], N_V)
+    j.close()
+    j2 = durable.UpdateJournal(wal)
+    assert [s for s, _, _ in j2.replay()] == [1, 2, 3]
+    j2.close()
+
+
+def test_wal_disk_full_group_append_atomic(tmp_path):
+    """append_group is one buffered write: a disk-full fault loses the
+    WHOLE group atomically, and the retry reuses the same seqs."""
+    wal = str(tmp_path / "wal")
+    j = durable.UpdateJournal(wal)
+    base = make_plans(2, seed=3)
+    j.append_group(base, [N_V] * 2)
+    group = make_plans(3, seed=4)
+    faultinject.arm("wal.write", times=1)
+    with pytest.raises(durable.WalDiskFullError):
+        j.append_group(group, [N_V] * 3)
+    assert j.next_seq == 3
+    assert [s for s, _, _ in j.replay()] == [1, 2]  # no torn group suffix
+    assert j.append_group(group, [N_V] * 3) == [3, 4, 5]
+    assert [s for s, _, _ in j.replay()] == [1, 2, 3, 4, 5]
+    j.close()
+
+
+# ---------------------------------------------------------------------------
 # checkpoint manager: stale sweep, legacy manifests, diff chains
 # ---------------------------------------------------------------------------
 def test_clean_stale_sweeps_tmp_dirs(tmp_path):
@@ -305,6 +354,96 @@ def test_diff_rotation_keeps_chain_base(tmp_path):
     ckpt.save_arrays_sharded(cd, 5, {0: dict(a)}, keep=2)
     ckpt.save_arrays_sharded(cd, 6, {0: dict(a)}, keep=2)
     assert ckpt.all_steps(cd) == [5, 6]
+
+
+# ---------------------------------------------------------------------------
+# diff-chain pathologies (§17 satellite): a damaged or missing BASE must
+# fail the restore atomically with a diagnosable error, never patch
+# garbage; rotation must never orphan a kept diff's base mid-chain
+# ---------------------------------------------------------------------------
+def _diff_chain(tmp_path, nshards=1):
+    cd = str(tmp_path / "ckpt")
+    rng = np.random.default_rng(9)
+    shards0 = {
+        s: {"dst": rng.integers(0, 99, 4000).astype(np.int32) + s,
+            "deg": rng.integers(0, 9, 64).astype(np.int64)}
+        for s in range(nshards)
+    }
+    ckpt.save_arrays_sharded(cd, 0, {s: dict(t) for s, t in shards0.items()})
+    shards1 = {s: {k: v.copy() for k, v in t.items()}
+               for s, t in shards0.items()}
+    for s in shards1:
+        shards1[s]["dst"][7] = 12345 + s
+    ckpt.save_arrays_diff(cd, 1, {s: dict(t) for s, t in shards1.items()})
+    return cd, shards1
+
+
+def test_restore_diff_corrupt_base_manifest_json(tmp_path):
+    cd, _ = _diff_chain(tmp_path)
+    man = os.path.join(cd, "step_0000000000", "manifest.json")
+    with open(man, "w") as f:
+        f.write('{"step": 0, "kind": "fu')  # torn JSON
+    with pytest.raises(ValueError, match="corrupt"):
+        ckpt.restore_arrays_diff(cd, step=1)
+    with pytest.raises(ValueError, match="corrupt"):
+        ckpt.restore_shard_diff(cd, 0, step=1)
+
+
+def test_restore_diff_base_payload_digest_gate(tmp_path):
+    """A base whose manifest digests disagree with its payload bytes is
+    untrusted — the restore aborts BEFORE applying any diff patch."""
+    cd, _ = _diff_chain(tmp_path)
+    man_path = os.path.join(cd, "step_0000000000", "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    man["shards"]["0"]["chunks"]["dst"][0] ^= 0xFF
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="aborted before patching"):
+        ckpt.restore_arrays_diff(cd, step=1)
+    # the base itself (no chain, no patching) still restores by bytes
+    assert ckpt.restore_arrays(cd, step=0) is not None
+
+
+def test_restore_diff_missing_base_step(tmp_path):
+    cd, _ = _diff_chain(tmp_path)
+    shutil.rmtree(os.path.join(cd, "step_0000000000"))
+    with pytest.raises((FileNotFoundError, ValueError)):
+        ckpt.restore_arrays_diff(cd, step=1)
+    with pytest.raises((FileNotFoundError, ValueError)):
+        ckpt.restore_shard_diff(cd, 0, step=1)
+
+
+def test_restore_shard_diff_matches_full_restore(tmp_path):
+    cd, want = _diff_chain(tmp_path, nshards=2)
+    full, step_f = ckpt.restore_arrays_diff(cd, step=1)
+    for sid in (0, 1):
+        arrays, step = ckpt.restore_shard_diff(cd, sid, step=1)
+        assert step == step_f == 1
+        for k in want[sid]:
+            np.testing.assert_array_equal(arrays[k], want[sid][k])
+            np.testing.assert_array_equal(arrays[k], full[sid][k])
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore_shard_diff(cd, 7, step=1)
+
+
+def test_rotation_never_orphans_mid_chain_base(tmp_path):
+    """keep=N counts CHAIN-CLOSED prefixes: a kept diff's base must
+    survive rotation even when an unrelated newer full exists."""
+    cd = str(tmp_path / "ckpt")
+    a = {"x": np.arange(32, dtype=np.int64)}
+    ckpt.save_arrays_sharded(cd, 0, {0: dict(a)})
+    ckpt.save_arrays_diff(cd, 1, {0: dict(a)}, keep=2)
+    ckpt.save_arrays_sharded(cd, 2, {0: dict(a)}, keep=2)
+    ckpt.save_arrays_diff(cd, 3, {0: dict(a)}, keep=2)
+    steps = ckpt.all_steps(cd)
+    # every surviving diff's base chain is closed
+    for s in steps:
+        man = ckpt._read_manifest(os.path.join(cd, f"step_{s:010d}"))
+        if man.get("kind") == "diff":
+            assert man["base_step"] in steps, f"diff {s} orphaned"
+        trees, got = ckpt.restore_arrays_diff(cd, step=s)
+        assert got == s and trees  # every kept step restores
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,449 @@
+"""Live shard failover (DESIGN.md §17): quarantine, degraded serving,
+online rebuild, reintegration.
+
+Covers the full §17 lifecycle at both layers:
+
+* representation level — a ``shard.patch`` fault quarantines exactly
+  the faulted shard (the rest of the mesh still patches, routed updates
+  spool), degraded walks mask the lost rows to exact zeros, integrity
+  descriptors catch silent weight corruption the structural audit
+  can't, and ``DurableGraph.rebuild_shard`` restores + replays the one
+  lost shard back to bit-parity with an uncrashed twin;
+* serving level — the ``WalkServer`` keeps serving through a shard
+  loss with explicit per-response ``coverage``/``down_shards``,
+  writer-paced audits detect corruption, ``run_on_writer`` serializes
+  admin mutations with the apply stream, and the dispatch retry backoff
+  is exponential, capped, and jittered.
+"""
+import numpy as np
+import pytest
+
+from repro.core import csr as csr_mod, edgebatch, updates
+from repro.core import distributed as dist
+from repro.runtime import durable, failover, faultinject
+from repro.runtime import serve as serve_mod
+
+N_V = 48
+S = 4
+
+
+@pytest.fixture(autouse=True)
+def _clean_fault_state():
+    faultinject.disarm()
+    yield
+    faultinject.disarm()
+
+
+@pytest.fixture(scope="module")
+def base_csr():
+    rng = np.random.default_rng(5)
+    m = 260
+    return csr_mod.from_coo(
+        rng.integers(0, N_V, m),
+        rng.integers(0, N_V, m),
+        rng.random(m).astype(np.float32),
+        n=N_V,
+    )
+
+
+def make_plan(seed=0, k=12, n=N_V):
+    rng = np.random.default_rng(seed)
+    ib = edgebatch.from_arrays(
+        rng.integers(0, n, k), rng.integers(0, n, k),
+        rng.random(k).astype(np.float32),
+    )
+    db = edgebatch.from_arrays(rng.integers(0, n, 4), rng.integers(0, n, 4))
+    return updates.plan_update(inserts=ib, deletes=db)
+
+
+def masked_walk_oracle(g, steps, down_rows):
+    """Numpy reverse walk with the §17 coverage mask: a down shard's
+    rows accumulate nothing at every step while edges from healthy rows
+    still read the full visit vector."""
+    c = dist.gather_csr(g)
+    off = np.asarray(c.offsets, np.int64)
+    rows = np.repeat(np.arange(N_V, dtype=np.int64), np.diff(off))
+    d = np.asarray(c.dst)[: c.m].astype(np.int64)
+    v = np.ones(N_V, np.float64)
+    for _ in range(steps):
+        nxt = np.zeros(N_V, np.float64)
+        np.add.at(nxt, rows, v[d])
+        if len(down_rows):
+            nxt[down_rows] = 0.0
+        v = nxt
+    return v
+
+
+def assert_parity(g, twin):
+    ca, cb = dist.gather_csr(g), dist.gather_csr(twin)
+    np.testing.assert_array_equal(np.asarray(ca.offsets), np.asarray(cb.offsets))
+    np.testing.assert_array_equal(
+        np.asarray(ca.dst)[: ca.m], np.asarray(cb.dst)[: cb.m]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ca.wgt)[: ca.m], np.asarray(cb.wgt)[: cb.m]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(g.reverse_walk(3)), np.asarray(twin.reverse_walk(3))
+    )
+
+
+# ---------------------------------------------------------------------------
+# representation level: quarantine / degraded walk / guards
+# ---------------------------------------------------------------------------
+
+
+def test_patch_fault_quarantines_only_faulted_shard(base_csr):
+    g = dist.shard_csr(base_csr, S)
+    twin = dist.shard_csr(base_csr, S)
+    plan = make_plan(seed=1)
+    routed = dist.route_updates(plan, S, g.rows_max)
+    subs = dict(routed)
+    assert len(routed) >= 2  # the plan must span shards for the test
+    # fault the second touched shard's patch: hits run in routed order
+    victim = routed[1][0]
+    faultinject.arm("shard.patch", after=1, times=1)
+    g.apply(plan)  # non-raising: healthy shards still patch
+    assert g.down == {victim}
+    assert g.coverage < 1.0
+    assert len(g.spooled(victim)) == 1
+    # healthy shards took their slices — parity with a twin that applied
+    # only the non-victim subs
+    for sid, sub in subs.items():
+        if sid != victim:
+            twin.shards[sid].queue(sub)
+            assert twin.shards[sid].flush()
+    for sid in range(S):
+        if sid != victim:
+            np.testing.assert_array_equal(
+                np.asarray(g.shards[sid].dst), np.asarray(twin.shards[sid].dst)
+            )
+    # a second routed update for the victim spools too (dedup'd append)
+    plan2 = make_plan(seed=2)
+    g.apply(plan2)
+    assert all(s is not None for s in g.spooled(victim))
+
+
+def test_degraded_walk_masks_down_rows(base_csr):
+    g = dist.shard_csr(base_csr, S)
+    full = dist.shard_csr(base_csr, S)
+    sid = 1
+    g.quarantine(sid)
+    down = g.down_rows()
+    lo, hi = g.owned_range(sid)
+    np.testing.assert_array_equal(down, np.arange(lo, hi))
+    got = np.asarray(g.reverse_walk(3), np.float64)
+    want = masked_walk_oracle(full, 3, down)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+    # lost rows read exact zeros; healthy rows are untouched by the mask
+    assert np.all(got[down] == 0.0)
+
+
+def test_walk_fault_raises_shard_fault_error(base_csr):
+    g = dist.shard_csr(base_csr, S)
+    sid = 2
+    faultinject.arm("shard.walk", after=sid, times=1)
+    with pytest.raises(dist.ShardFaultError) as ei:
+        g.reverse_walk(2)
+    assert ei.value.sid == sid and ei.value.stage == "walk"
+    # the fire is spent: the next walk (still healthy mesh) succeeds
+    g.reverse_walk(2)
+
+
+def test_degraded_guards(base_csr, tmp_path):
+    g = dist.shard_csr(base_csr, S)
+    g.quarantine(0)
+    with pytest.raises(dist.ShardDownError):
+        g.state_trees()  # a checkpoint would persist garbage
+    with pytest.raises(dist.ShardDownError):
+        dist.gather_csr(g)
+    growth = updates.plan_update(
+        inserts=edgebatch.from_arrays([N_V + 3], [0], [1.0])
+    )
+    with pytest.raises(dist.ShardDownError):
+        g.apply(growth)  # global re-shard impossible while degraded
+    with pytest.raises(dist.ShardDownError):
+        g.audit_shard(0)  # the down shard itself is not auditable
+    with pytest.raises(RuntimeError):
+        g.seal_generation(1).apply(make_plan())  # sealed gens read-only
+
+
+def test_reintegrate_validates_geometry(base_csr):
+    g = dist.shard_csr(base_csr, S)
+    g.quarantine(3)
+    other = dist.shard_csr(base_csr, 2)  # wrong layout on purpose
+    with pytest.raises((ValueError, dist.ShardFaultError)):
+        g.reintegrate(3, other.shards[0])
+    assert 3 in g.down  # rejected reintegration leaves the shard down
+
+
+def test_sealed_generation_keeps_down_mask(base_csr):
+    g = dist.shard_csr(base_csr, S)
+    g.quarantine(2)
+    sealed = g.seal_generation(7)
+    assert sealed.down == {2} and sealed._frozen
+    assert sealed.coverage == g.coverage
+    got = np.asarray(sealed.reverse_walk(2))
+    assert np.all(got[np.asarray(sealed.down_rows())] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# integrity descriptors + audit scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_weight_caught_only_by_integrity(base_csr):
+    g = dist.shard_csr(base_csr, S)
+    g.enable_integrity()
+    sid = 1
+    slot = failover.corrupt_shard(g, sid, kind="wgt")
+    assert slot is not None
+    g.shards[sid].audit()  # structurally valid: the plain audit passes
+    with pytest.raises(dist.ShardIntegrityError, match="wgt"):
+        g.verify_shard(sid)
+
+
+def test_corrupt_dst_caught_without_integrity(base_csr):
+    g = dist.shard_csr(base_csr, S)  # integrity OFF
+    sid = 0
+    assert failover.corrupt_shard(g, sid, kind="dst") is not None
+    with pytest.raises(Exception):
+        g.audit_shard(sid)  # structural violation trips the content sweep
+
+
+def test_audit_scheduler_round_robin_detection(base_csr):
+    g = dist.shard_csr(base_csr, S)
+    g.enable_integrity()
+    sched = failover.AuditScheduler(g)
+    for _ in range(S):  # one clean sweep: no false positives
+        assert sched.tick() is None
+    sid = 2
+    failover.corrupt_shard(g, sid, kind="wgt")
+    hits = [sched.tick() for _ in range(S)]
+    det = [h for h in hits if h is not None]
+    assert len(det) == 1 and det[0][0] == sid
+    g.quarantine(sid)
+    # the scheduler keeps sweeping the healthy remainder
+    for _ in range(S):
+        assert sched.tick() is None
+
+
+def test_no_false_positives_after_patches(base_csr):
+    g = dist.shard_csr(base_csr, S)
+    g.enable_integrity()
+    for seed in range(4):
+        g.apply(make_plan(seed=seed))
+        for sid in range(S):
+            g.audit_shard(sid)  # descriptors refreshed per patch
+
+
+# ---------------------------------------------------------------------------
+# online rebuild + reintegration (DurableGraph.rebuild_shard)
+# ---------------------------------------------------------------------------
+
+
+def _durable_pair(base_csr, tmp_path):
+    wd, cd = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    dg = durable.DurableGraph(
+        dist.shard_csr(base_csr, S), wd, cd, diff=True, full_every=8
+    )
+    twin = dist.shard_csr(base_csr, S)
+    return dg, twin
+
+
+def test_rebuild_shard_crash_stop_roundtrip(base_csr, tmp_path):
+    dg, twin = _durable_pair(base_csr, tmp_path)
+    dg.rep.enable_integrity()
+    plans = [make_plan(seed=s) for s in range(6)]
+    for p in plans[:2]:
+        dg.apply(p)
+        twin.apply(p)
+    dg.checkpoint()  # bounds the single-shard replay window
+    # quarantine via an injected patch fault mid-stream: the first
+    # routed shard's patch faults
+    victim_plan = plans[2]
+    victim = dist.route_updates(victim_plan, S, dg.rep.rows_max)[0][0]
+    faultinject.arm("shard.patch", times=1)
+    dg.apply(victim_plan)
+    twin.apply(victim_plan)
+    assert dg.rep.down == {victim}
+    # degraded window: more traffic spools the victim's subs, the WAL
+    # holds everything, checkpoints are refused
+    for p in plans[3:]:
+        dg.apply(p)
+        twin.apply(p)
+    with pytest.raises(dist.ShardDownError):
+        dg.checkpoint()
+    # rebuild every down shard (an overflowing shard may legitimately
+    # join the quarantine while degraded — global re-shard is refused)
+    assert victim in dg.rep.down
+    for sid in sorted(dg.rep.down):
+        stats = {}
+        records = dg.rebuild_shard(sid, stats=stats)
+        assert records >= 1 and stats["records"] == records
+    assert not dg.rep.down
+    dg.rep.audit()
+    for sid in range(S):
+        dg.rep.verify_shard(sid)
+    assert_parity(dg.rep, twin)
+
+
+def test_rebuild_shard_discards_silent_corruption(base_csr, tmp_path):
+    dg, twin = _durable_pair(base_csr, tmp_path)
+    dg.rep.enable_integrity()
+    for s in range(3):
+        p = make_plan(seed=s)
+        dg.apply(p)
+        twin.apply(p)
+    dg.checkpoint()
+    sid = 1
+    failover.corrupt_shard(dg.rep, sid, kind="wgt")
+    sched = failover.AuditScheduler(dg.rep)
+    det = next(h for h in (sched.tick() for _ in range(S)) if h is not None)
+    assert det[0] == sid
+    dg.rep.quarantine(sid)
+    dg.rebuild_shard(sid)
+    assert not dg.rep.down
+    assert_parity(dg.rep, twin)  # the flipped weight is gone
+
+
+def test_rebuild_shard_requires_quarantine(base_csr, tmp_path):
+    dg, _ = _durable_pair(base_csr, tmp_path)
+    with pytest.raises(ValueError):
+        dg.rebuild_shard(0)  # healthy shard: refuse to clobber
+
+
+def test_rebuild_shard_refuses_stale_layout(base_csr, tmp_path):
+    """A checkpoint that predates a global re-shard (vertex growth) can't
+    seed a single-shard rebuild — the block partition moved."""
+    dg, _ = _durable_pair(base_csr, tmp_path)
+    dg.apply(make_plan(seed=0))
+    dg.checkpoint()
+    growth = updates.plan_update(
+        inserts=edgebatch.from_arrays([N_V + 5], [0], [1.0])
+    )
+    dg.apply(growth)  # global re-shard: n grows, rows_max moves
+    dg.rep.quarantine(2)
+    with pytest.raises(dist.ShardDownError, match="re-shard|recover"):
+        dg.rebuild_shard(2)
+
+
+# ---------------------------------------------------------------------------
+# serving level: coverage lifecycle, admin plane, backoff
+# ---------------------------------------------------------------------------
+
+
+def _drain(tickets, timeout=30.0):
+    for t in tickets:
+        t.wait(timeout)
+    return tickets
+
+
+def test_serve_sharded_steady_full_coverage(base_csr):
+    g = dist.shard_csr(base_csr, S)
+    with serve_mod.WalkServer(g, batch_max=4) as srv:
+        upd = srv.submit_update(make_plan(seed=3))
+        walks = _drain([
+            srv.submit_walk([i % N_V, (i * 7) % N_V], steps=2, timeout=10.0)
+            for i in range(6)
+        ])
+        assert isinstance(upd.result(10.0), int)  # ΔM may be negative
+    stats = srv.assert_no_lost()
+    assert stats["served"] >= 1 and stats["served_degraded"] == 0
+    for t in walks:
+        if t.status == serve_mod.SERVED:
+            assert t.coverage == 1.0 and t.down_shards == ()
+
+
+def test_serve_degraded_coverage_lifecycle(base_csr):
+    import time as _time
+
+    g = dist.shard_csr(base_csr, S)
+    sid = 1
+    srv = serve_mod.WalkServer(
+        g, batch_max=4, dispatch_retries=4, retry_backoff=0.002
+    ).start()
+    try:
+        _drain([srv.submit_walk([3], steps=2, timeout=10.0)])
+        faultinject.arm("shard.walk", after=sid, times=1)
+        # the faulted batch must be retried, not lost; the writer
+        # quarantines and reseals degraded
+        _drain([srv.submit_walk([5], steps=2, timeout=10.0)])
+        deadline = _time.monotonic() + 10.0
+        while srv.stats()["coverage"] == 1.0:
+            assert _time.monotonic() < deadline, "never resealed degraded"
+            _time.sleep(0.01)
+        assert g.down == {sid}
+        degraded = _drain([
+            srv.submit_walk([7, 9], steps=2, timeout=10.0) for _ in range(3)
+        ])
+        served = [t for t in degraded if t.status == serve_mod.SERVED]
+        assert served and all(
+            t.coverage < 1.0 and sid in t.down_shards for t in served
+        )
+        # updates are still accepted while degraded (victim's slice spools)
+        assert isinstance(srv.submit_update(make_plan(seed=9)).result(10.0), int)
+        # admin plane reads the spool depth on the writer thread
+        tk = srv.run_on_writer(lambda s: len(g.spooled(sid)), reseal=False)
+        assert tk.result(10.0) >= 0
+    finally:
+        stats = srv.stop()
+    srv.assert_no_lost()
+    assert stats["shard_quarantines"] >= 1
+    assert stats["served_degraded"] >= 1
+    assert stats["failed"] == 0  # retry path, never batch loss
+
+
+def test_serve_audit_pacing_detects_corruption(base_csr):
+    import time as _time
+
+    g = dist.shard_csr(base_csr, S)
+    g.enable_integrity()
+    sid = 2
+    srv = serve_mod.WalkServer(g, batch_max=4, audit_every=1).start()
+    try:
+        _drain([srv.submit_walk([1], steps=2, timeout=10.0)])
+        srv.run_on_writer(
+            lambda s: failover.corrupt_shard(g, sid, kind="wgt")
+        ).result(10.0)
+        deadline = _time.monotonic() + 10.0
+        while srv.stats()["audit_detections"] == 0:
+            assert _time.monotonic() < deadline, "paced audit never detected"
+            _time.sleep(0.01)
+        assert sid in g.down
+        # responses after the degraded reseal carry the mask
+        deadline = _time.monotonic() + 10.0
+        while srv.stats()["coverage"] == 1.0:
+            assert _time.monotonic() < deadline
+            _time.sleep(0.01)
+        t = _drain([srv.submit_walk([1], steps=2, timeout=10.0)])[0]
+        assert t.status == serve_mod.SERVED and t.coverage < 1.0
+    finally:
+        stats = srv.stop()
+    srv.assert_no_lost()
+    assert stats["audit_detections"] >= 1
+
+
+def test_run_on_writer_serializes_and_accounts(base_csr):
+    g = dist.shard_csr(base_csr, S)
+    with serve_mod.WalkServer(g) as srv:
+        tk = srv.run_on_writer(lambda s: s is srv)
+        assert tk.result(10.0) is True
+        bad = srv.run_on_writer(lambda s: 1 / 0)
+        with pytest.raises(RuntimeError):
+            bad.result(10.0)
+        assert srv.stats()["admin_ops"] == 1  # failures don't count
+    late = srv.run_on_writer(lambda s: None)
+    assert late.status == serve_mod.REJECTED  # after stop: clean reject
+
+
+def test_retry_backoff_exponential_capped_jittered():
+    srv = serve_mod.WalkServer(
+        object(), retry_backoff=0.01, retry_max_backoff=0.08
+    )
+    for attempt in (1, 2, 3, 4, 5, 8):
+        base = min(0.01 * 2 ** (attempt - 1), 0.08)
+        samples = [srv._retry_sleep_s(attempt) for _ in range(50)]
+        assert all(0.5 * base <= s <= 1.5 * base for s in samples)
+    # jitter actually spreads (not a constant)
+    assert len({round(s, 6) for s in (srv._retry_sleep_s(3) for _ in range(20))}) > 1
